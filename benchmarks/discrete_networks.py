@@ -1,0 +1,49 @@
+"""Paper Fig. 5: F1 on the SACHS and CHILD discrete networks + CV vs CV-LR
+run-time on a full GES pass."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.api import causal_discover
+from repro.core.metrics import skeleton_f1
+from repro.core.score_common import ScoreConfig
+from repro.data.networks import CHILD, SACHS, sample_network
+
+
+def run(ns=(200, 500), reps=2, include_cv=True, networks=(SACHS,), quick=False):
+    if quick:
+        ns, reps, include_cv = (200,), 1, False
+    rows = []
+    for net in networks:
+        for n in ns:
+            for method in (("cvlr", "cv") if include_cv else ("cvlr",)):
+                f1s, times = [], []
+                for rep in range(reps):
+                    data, adj = sample_network(net, n=n, seed=rep)
+                    t0 = time.perf_counter()
+                    res = causal_discover(
+                        data,
+                        method=method,
+                        discrete=[True] * net.d,
+                        config=ScoreConfig(seed=rep),
+                    )
+                    times.append(time.perf_counter() - t0)
+                    f1s.append(skeleton_f1(res.cpdag, adj))
+                rows.append(
+                    dict(
+                        net=net.name, n=n, method=method,
+                        f1=float(np.mean(f1s)), time_s=float(np.mean(times)),
+                    )
+                )
+                print(
+                    f"fig5,{net.name},n={n},{method},"
+                    f"f1={np.mean(f1s):.3f},time={np.mean(times):.1f}s"
+                )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""§Perf before/after: diff two dry-run result directories
+(default: the snapshotted baseline vs the optimized re-sweep)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "dryrun_results")
+
+
+def _load(d):
+    out = {}
+    if not os.path.isdir(d):
+        return out
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".json"):
+            r = json.load(open(os.path.join(d, name)))
+            if r.get("status") == "ok":
+                out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def compare(before_dir="single_baseline", after_dir="single"):
+    before = _load(os.path.join(RESULTS, before_dir))
+    after = _load(os.path.join(RESULTS, after_dir))
+    hdr = (
+        f"{'arch':22s} {'shape':12s} {'flops before':>13s} {'after':>10s} "
+        f"{'x':>6s} | {'coll before':>12s} {'after':>10s} {'x':>6s} "
+        f"| {'AR#':>9s} {'A2A#':>9s}"
+    )
+    print(hdr)
+    print("-" * len(hdr))
+    rows = []
+    for key in sorted(before):
+        if key not in after:
+            continue
+        b, a = before[key], after[key]
+        fb, fa = b["flops"], a["flops"]
+        cb = b["collectives"]["total_collective_bytes"]
+        ca = a["collectives"]["total_collective_bytes"]
+        arb = b["collectives"].get("all-reduce_count", 0)
+        ara = a["collectives"].get("all-reduce_count", 0)
+        a2b = b["collectives"].get("all-to-all_count", 0)
+        a2a = a["collectives"].get("all-to-all_count", 0)
+        print(
+            f"{key[0]:22s} {key[1]:12s} {fb:13.3e} {fa:10.3e} "
+            f"{fb/max(fa,1):6.2f} | {cb:12.3e} {ca:10.3e} {cb/max(ca,1):6.2f} "
+            f"| {arb:4d}->{ara:<4d} {a2b:4d}->{a2a:<4d}"
+        )
+        rows.append((key, fb, fa, cb, ca))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    compare(*(sys.argv[1:3] if len(sys.argv) > 2 else ()))

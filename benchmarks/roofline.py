@@ -1,0 +1,204 @@
+"""Roofline derivation from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads benchmarks/dryrun_results/<mesh>/<arch>__<shape>.json and emits, per
+cell:
+
+    compute_s    = HLO_FLOPs_per_device / PEAK_FLOPS_BF16
+    memory_s     = HLO_bytes_per_device / HBM_BW
+    collective_s = collective_bytes_per_device / ICI_BW
+    bottleneck   = argmax of the three
+    model_flops  = 6*N*D (train, dense) / 6*N_active*D (MoE) /
+                   2*N*D (+2*N_active*D) for serve steps
+    useful_ratio = model_flops_per_device / HLO_FLOPs_per_device
+
+cost_analysis() numbers are PER DEVICE post-SPMD (verified against
+hand-partitioned matmuls), so peak terms use single-chip constants.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models.config import SHAPES
+
+RESULTS = os.path.join(os.path.dirname(__file__), "dryrun_results")
+
+
+def model_flops_per_device(arch: str, shape_name: str, mesh_shape: dict) -> float:
+    """Analytic 'useful' FLOPs per device for the cell."""
+    from repro.models.registry import load_arch, param_count_exact
+
+    if arch == "cvlr_paper":
+        from repro.configs.cvlr_paper import config
+
+        w = config()
+        n = w.q_folds * w.samples_per_fold
+        # Gram blocks: 6 contractions of (n x m)^T(n x m) per candidate
+        flops = w.num_candidates * 6 * 2 * n * w.m * w.m
+        return flops / _chips(mesh_shape)
+
+    cfg, model = load_arch(arch)
+    n_total = param_count_exact(model)
+    n_active = (
+        n_total
+        - (cfg.num_experts - cfg.num_experts_per_tok)
+        * (3 if cfg.mlp_kind in ("swiglu", "geglu") else 2)
+        * cfg.d_model
+        * cfg.d_ff
+        * cfg.num_layers
+        if cfg.num_experts
+        else n_total
+    )
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        flops = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        flops = 2.0 * n_active * shape.global_batch
+    return flops / _chips(mesh_shape)
+
+
+def _chips(mesh_shape: dict) -> int:
+    n = 1
+    for v in mesh_shape.values():
+        n *= v
+    return n
+
+
+def analytic_hbm_bytes_per_device(arch: str, shape_name: str, mesh_shape: dict) -> float:
+    """First-order HBM traffic model (what a fused TPU executable moves):
+
+    train:   3x params (fwd read, bwd read, update rw) + opt state rw
+             + activations ~ tokens * L * (6E + 3F_act + 4HD) * 2B * 1.5(remat)
+    prefill: 1x params + activations (no remat factor)
+    decode:  1x params + full KV/state cache read + tiny activations
+
+    XLA:CPU's `bytes accessed` counts every op's operands pre-fusion and
+    overstates this by ~10-50x; both are reported (EXPERIMENTS.md §Roofline).
+    """
+    from repro.models.registry import load_arch, param_count_exact
+
+    chips = _chips(mesh_shape)
+    if arch == "cvlr_paper":
+        from repro.configs.cvlr_paper import config
+
+        w = config()
+        n = w.q_folds * w.samples_per_fold
+        # factors streamed once per candidate batch (2 tensors, f64)
+        return w.num_candidates * 2 * n * w.m * 8 / chips
+
+    cfg, model = load_arch(arch)
+    shape = SHAPES[shape_name]
+    n_params = param_count_exact(model)
+    p_bytes = 2.0 * n_params  # bf16
+    e, f, hd = cfg.d_model, max(cfg.d_ff, 2 * cfg.d_model), cfg.resolved_head_dim
+    act_per_tok_layer = (6 * e + 3 * (f if not cfg.num_experts else f * cfg.num_experts_per_tok) + 4 * cfg.num_heads * hd) * 2.0
+    layers = cfg.num_layers + cfg.enc_layers
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return (3.5 * p_bytes + 1.5 * tokens * layers * act_per_tok_layer) / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return (p_bytes + tokens * layers * act_per_tok_layer) / chips
+    # decode: read params + the whole cache once per token
+    kv_bytes = (
+        layers * shape.global_batch * shape.seq_len
+        * cfg.num_kv_heads * hd * 2 * 2.0
+    )
+    if cfg.family in ("ssm", "hybrid"):
+        kv_bytes = shape.global_batch * layers * (2 * e) * max(cfg.ssm_state, 64) * 4.0
+    return (p_bytes + kv_bytes) / chips
+
+
+def roofline_row(record: dict) -> dict:
+    if record.get("status") != "ok":
+        return {**record, "bottleneck": "ERROR"}
+    compute_s = record["flops"] / PEAK_FLOPS_BF16
+    memory_s = record["bytes_accessed"] / HBM_BW
+    coll_b = record["collectives"]["total_collective_bytes"]
+    collective_s = coll_b / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_per_device(
+        record["arch"], record["shape"], record["mesh_shape"]
+    )
+    amem = analytic_hbm_bytes_per_device(
+        record["arch"], record["shape"], record["mesh_shape"]
+    )
+    analytic_memory_s = amem / HBM_BW
+    # bottleneck judged with the fused-traffic (analytic) memory estimate;
+    # the raw HLO term is reported alongside (EXPERIMENTS.md §Roofline).
+    terms_eff = {
+        "compute": compute_s,
+        "memory": analytic_memory_s,
+        "collective": collective_s,
+    }
+    bottleneck = max(terms_eff, key=terms_eff.get)
+    step_s = max(terms_eff.values())  # no-overlap upper bound on step time
+    mfu = (mf / PEAK_FLOPS_BF16) / step_s if step_s > 0 else 0.0
+    return {
+        "arch": record["arch"],
+        "shape": record["shape"],
+        "mesh": record["mesh"],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "analytic_memory_s": analytic_memory_s,
+        "collective_s": collective_s,
+        "bottleneck": bottleneck,
+        "model_flops_dev": mf,
+        "hlo_flops_dev": record["flops"],
+        "useful_ratio": mf / record["flops"] if record["flops"] else 0.0,
+        "roofline_fraction": mfu,
+        "hbm_bytes_dev": record["memory"].get("argument_size_in_bytes", 0)
+        + record["memory"].get("temp_size_in_bytes", 0),
+        "ar_count": record["collectives"].get("all-reduce_count", 0),
+        "a2a_count": record["collectives"].get("all-to-all_count", 0),
+    }
+
+
+def load_rows(mesh: str = "single"):
+    out = []
+    d = os.path.join(RESULTS, mesh)
+    if not os.path.isdir(d):
+        return out
+    for name in sorted(os.listdir(d)):
+        if name.endswith(".json"):
+            with open(os.path.join(d, name)) as f:
+                out.append(roofline_row(json.load(f)))
+    return out
+
+
+def format_table(rows) -> str:
+    hdr = (
+        f"{'arch':22s} {'shape':12s} {'compute_s':>9s} {'hlo_mem_s':>9s} "
+        f"{'mem_s':>8s} {'coll_s':>8s} {'bound':>10s} {'useful':>7s} {'roofline%':>9s}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("bottleneck") == "ERROR":
+            lines.append(f"{r['arch']:22s} {r['shape']:12s} ERROR: {r.get('error','')[:60]}")
+            continue
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['compute_s']:9.4f} "
+            f"{r['memory_s']:9.3f} {r['analytic_memory_s']:8.4f} "
+            f"{r['collective_s']:8.4f} {r['bottleneck']:>10s} "
+            f"{r['useful_ratio']:7.2f} {100*r['roofline_fraction']:8.1f}%"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    for mesh in ("single", "multi"):
+        rows = load_rows(mesh)
+        if rows:
+            print(f"\n=== Roofline ({mesh}-pod) ===")
+            print(format_table(rows))
+
+
+if __name__ == "__main__":
+    main()

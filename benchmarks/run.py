@@ -1,0 +1,50 @@
+"""Benchmark entry point: one function per paper table/figure + roofline.
+
+``python -m benchmarks.run``           — quick pass (CI-sized)
+``python -m benchmarks.run --full``    — paper-sized settings
+
+Prints ``name,...`` CSV lines per benchmark.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument(
+        "--only",
+        default="all",
+        help="comma list: table1,fig1,figs234,fig5,roofline",
+    )
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+    which = set(args.only.split(","))
+    t0 = time.time()
+
+    from benchmarks import approx_error, discrete_networks, roofline, runtime_scaling, synthetic_accuracy
+
+    if which & {"all", "table1"}:
+        print("# Table 1 — approximation error (m=100)")
+        approx_error.run(quick=quick)
+    if which & {"all", "fig1"}:
+        print("# Fig. 1 — run-time scaling CV vs CV-LR")
+        runtime_scaling.run(quick=quick)
+    if which & {"all", "figs234"}:
+        print("# Figs. 2-4 — synthetic accuracy (F1 / SHD)")
+        synthetic_accuracy.run(quick=quick)
+    if which & {"all", "fig5"}:
+        print("# Fig. 5 — discrete networks (SACHS/CHILD)")
+        discrete_networks.run(quick=quick)
+    if which & {"all", "roofline"}:
+        print("# Roofline — from dry-run artifacts")
+        roofline.main()
+    print(f"# total {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Paper Fig. 1: run-time of a single score evaluation, CV vs CV-LR, as a
+function of sample size, for |Z| in {0, 6} on continuous and discrete data.
+
+The claim under test is the complexity class: CV is O(n^3), CV-LR is O(n).
+We report per-call wall times, the speedup at each n, and the fitted
+log-log scaling exponent of each method.  The exact CV score is measured
+up to n = `cv_cap` (2000 by default — one call already takes ~2 minutes on
+this container's CPU, which is the paper's point); CV-LR is measured to
+the full range.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.score_common import ScoreConfig
+from repro.core.score_exact import CVScorer
+from repro.core.score_lowrank import CVLRScorer
+from repro.data.networks import CHILD, sample_network
+from repro.data.synthetic import generate_scm_data
+
+
+def _time_once(fn, reps=1):
+    fn()  # warmup/compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def one_setting(data, discrete, z_size, n, cv_cap, seed=0):
+    cfg = ScoreConfig(seed=seed)
+    d = data.shape[1]
+    parents = tuple(range(1, 1 + z_size))
+    rows = {}
+    for name, cls in (("CV", CVScorer), ("CV-LR", CVLRScorer)):
+        if name == "CV" and n > cv_cap:
+            rows[name] = float("nan")
+            continue
+        sc = cls(data[:n], discrete=[discrete] * d, config=cfg)
+
+        def call():
+            sc._score_cache.clear()
+            sc.local_score(0, parents)
+
+        rows[name] = _time_once(call)
+    return rows
+
+
+def _fit_exponent(ns, ts):
+    pts = [(n, t) for n, t in zip(ns, ts) if np.isfinite(t)]
+    if len(pts) < 2:
+        return float("nan")
+    x = np.log([p[0] for p in pts])
+    y = np.log([p[1] for p in pts])
+    return float(np.polyfit(x, y, 1)[0])
+
+
+def run(ns=(200, 500, 1000, 2000, 4000), z_sizes=(0, 6), cv_cap=2000, quick=False):
+    if quick:
+        ns, cv_cap = (200, 500), 500
+    results = []
+    cont = generate_scm_data(d=7, n=max(ns), density=0.4, kind="continuous", seed=1)
+    disc, _ = sample_network(CHILD, n=max(ns), seed=1)
+    for kind, data, is_disc in (("continuous", cont.data, False), ("discrete", disc, True)):
+        for z in z_sizes:
+            cv_ts, lr_ts = [], []
+            for n in ns:
+                r = one_setting(data, is_disc, z, n, cv_cap)
+                cv_ts.append(r["CV"])
+                lr_ts.append(r["CV-LR"])
+                ratio = r["CV"] / r["CV-LR"] if r["CV-LR"] else float("nan")
+                results.append(
+                    dict(kind=kind, z=z, n=n, cv_s=r["CV"], cvlr_s=r["CV-LR"], speedup=ratio)
+                )
+                print(
+                    f"fig1,{kind},|Z|={z},n={n},cv={r['CV']:.4f}s,"
+                    f"cvlr={r['CV-LR']:.4f}s,speedup={ratio:.1f}x",
+                    flush=True,
+                )
+            print(
+                f"fig1,{kind},|Z|={z},scaling_exponent_cv={_fit_exponent(ns, cv_ts):.2f},"
+                f"scaling_exponent_cvlr={_fit_exponent(ns, lr_ts):.2f}",
+                flush=True,
+            )
+    return results
+
+
+if __name__ == "__main__":
+    run()

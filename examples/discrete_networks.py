@@ -1,0 +1,48 @@
+"""Discrete-network discovery (paper Sec. 7.5): SACHS benchmark with the
+exact discrete low-rank decomposition (Alg. 2) — and a CV-LR vs CV runtime
+comparison on one local score.
+
+    PYTHONPATH=src python examples/discrete_networks.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.core.api import causal_discover, make_scorer
+from repro.core.metrics import skeleton_f1
+from repro.core.score_common import ScoreConfig
+from repro.data.networks import SACHS, sample_network
+
+
+def main():
+    data, truth = sample_network(SACHS, n=1000, seed=0)
+    print(f"SACHS: {data.shape[0]} samples x {data.shape[1]} vars "
+          f"(cardinalities <= 4), {int(truth.sum())} true edges")
+
+    # single-score timing: exact CV vs CV-LR on the same configuration
+    for method in ("cv", "cvlr"):
+        sc = make_scorer(data, method=method, discrete=[True] * SACHS.d,
+                         config=ScoreConfig(seed=0))
+        t0 = time.perf_counter()
+        s = sc.local_score(0, (7, 8))  # Raf | PKA, PKC
+        dt = time.perf_counter() - t0
+        print(f"  {method:5s}: local score = {s:.3f}  ({dt*1e3:.1f} ms)")
+
+    t0 = time.perf_counter()
+    res = causal_discover(
+        data, method="cvlr", discrete=[True] * SACHS.d,
+        config=ScoreConfig(seed=0),
+    )
+    dt = time.perf_counter() - t0
+    print(f"\nGES+CV-LR on SACHS: {dt:.1f}s, "
+          f"skeleton F1 = {skeleton_f1(res.cpdag, truth):.3f}")
+    names = SACHS.nodes
+    for i in range(SACHS.d):
+        for j in range(SACHS.d):
+            if res.cpdag[i, j] and not res.cpdag[j, i]:
+                print(f"  {names[i]} -> {names[j]}")
+
+
+if __name__ == "__main__":
+    main()

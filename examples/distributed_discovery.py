@@ -1,0 +1,73 @@
+"""Distributed causal discovery: the paper's score on a device mesh.
+
+Demonstrates (1) the batched GES frontier hook (one vmapped score kernel
+for a whole sweep), and (2) the shard_map sample-parallel scorer that the
+multi-pod dry-run lowers on the production mesh.  Runs on however many
+devices are available (1 on this CPU container; set
+XLA_FLAGS=--xla_force_host_platform_device_count=8 to fan out).
+
+    PYTHONPATH=src python examples/distributed_discovery.py
+"""
+
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AxisType
+
+from repro.core.api import make_scorer
+from repro.core.distributed_score import (
+    block_folds,
+    cvlr_scores_batched,
+    ges_batch_hook,
+    make_sharded_scorer,
+)
+from repro.core.ges import ges
+from repro.core.metrics import skeleton_f1
+from repro.core.score_common import ScoreConfig
+from repro.data.synthetic import generate_scm_data
+
+
+def main():
+    ds = generate_scm_data(d=6, n=400, density=0.35, kind="continuous", seed=3)
+
+    # 1) GES with the batched frontier hook
+    scorer = make_scorer(ds.data, method="cvlr", config=ScoreConfig(seed=1))
+    t0 = time.perf_counter()
+    res = ges(scorer, batch_hook=ges_batch_hook)
+    print(
+        f"batched GES: {time.perf_counter()-t0:.1f}s, "
+        f"F1={skeleton_f1(res.cpdag, ds.dag):.3f}, "
+        f"{scorer.cache_size} local scores evaluated"
+    )
+
+    # 2) shard_map scorer on a device mesh (samples over 'data',
+    #    candidates over 'model') — the multi-pod dry-run workload
+    n_dev = len(jax.devices())
+    if n_dev >= 2:
+        mesh = jax.make_mesh(
+            (2, n_dev // 2), ("model", "data"),
+            axis_types=(AxisType.Auto,) * 2,
+        )
+        fn = make_sharded_scorer(mesh)
+        q = 4
+        lam = scorer.features((0,))
+        lx = jnp.stack([block_folds(lam, q)] * 4)
+        lz = jnp.stack([block_folds(scorer.features((1,)), q)] * 4)
+        with jax.set_mesh(mesh):
+            sharded = fn(lx, lz)
+        ref = cvlr_scores_batched(lx, lz)
+        err = float(jnp.max(jnp.abs(sharded - ref)))
+        print(f"shard_map scorer on {n_dev} devices: max |delta| vs single = {err:.2e}")
+    else:
+        print("single device: skipping shard_map demo")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Quickstart: discover a causal graph from nonlinear data with CV-LR.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.api import causal_discover
+from repro.core.metrics import shd_cpdag, skeleton_f1
+from repro.core.graph import dag_to_cpdag
+from repro.core.score_common import ScoreConfig
+from repro.data.synthetic import generate_scm_data
+
+
+def main():
+    # 7 variables, nonlinear post-nonlinear SCM (paper Sec. 7.4)
+    ds = generate_scm_data(d=7, n=500, density=0.35, kind="continuous", seed=42)
+    print(f"data: {ds.data.shape}, true edges: {int(ds.dag.sum())}")
+
+    res = causal_discover(
+        ds.data,
+        method="cvlr",  # the paper's O(n) score; method="cv" = exact O(n^3)
+        config=ScoreConfig(m_max=100, q_folds=10),
+        verbose=True,
+    )
+
+    print("\nestimated CPDAG:")
+    print(res.cpdag)
+    print(f"skeleton F1:   {skeleton_f1(res.cpdag, ds.dag):.3f}")
+    print(f"normalized SHD: {shd_cpdag(res.cpdag, dag_to_cpdag(ds.dag)):.3f}")
+    print(f"forward steps: {res.forward_steps}, backward: {res.backward_steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""One config module per assigned architecture (+ the paper's workload).
+
+Each module exports `config()` (the exact assigned full-scale config) and
+`reduced()` (a same-family miniature for CPU smoke tests)."""

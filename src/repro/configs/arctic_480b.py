@@ -1,0 +1,42 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual
+[hf:Snowflake/snowflake-arctic-base; hf].
+
+35L d_model=7168 56H (GQA kv=8) d_ff=4864, MoE 128e top-2, dense residual."""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="arctic_480b",
+        family="moe",
+        num_layers=35,
+        d_model=7168,
+        num_heads=56,
+        num_kv_heads=8,
+        d_ff=4864,
+        vocab_size=32000,
+        mlp_kind="swiglu",
+        norm_kind="rmsnorm",
+        num_experts=128,
+        num_experts_per_tok=2,
+        moe_dense_residual=True,
+        dense_ff=4864,  # arctic's parallel dense FFN residual path
+    )
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        config(),
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=96,
+        vocab_size=256,
+        num_experts=4,
+        dense_ff=96,
+        attn_chunk=32,
+    )

@@ -1,0 +1,23 @@
+"""The paper's own workload as a dry-runnable 'architecture': distributed
+CV-LR frontier scoring (repro.core.distributed_score) on the production
+mesh.  Shapes: B candidates x (Q folds x n0 samples x m pivots)."""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class CVLRWorkload:
+    name: str = "cvlr_paper"
+    family: str = "paper"
+    num_candidates: int = 256  # GES frontier batch (shards over `model`)
+    q_folds: int = 10
+    samples_per_fold: int = 100_000  # n = 1M samples (shards over `data`)
+    m: int = 128  # pivot budget, MXU-aligned
+
+
+def config() -> CVLRWorkload:
+    return CVLRWorkload()
+
+
+def reduced() -> CVLRWorkload:
+    return CVLRWorkload(num_candidates=4, q_folds=4, samples_per_fold=40, m=16)

@@ -1,0 +1,43 @@
+"""internvl2-26b [vlm] — InternViT + InternLM2 [arXiv:2404.16821; hf].
+
+48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92553.  The InternViT
+frontend is a STUB per the assignment: input_specs supplies precomputed
+patch embeddings (num_prefix_tokens x frontend_dim) that a linear
+projection maps into the backbone width."""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2_26b",
+        family="vlm",
+        num_layers=48,
+        d_model=6144,
+        num_heads=48,
+        num_kv_heads=8,
+        d_ff=16384,
+        vocab_size=92553,
+        mlp_kind="swiglu",
+        norm_kind="rmsnorm",
+        frontend="vit_stub",
+        num_prefix_tokens=256,
+        frontend_dim=3200,  # InternViT-6B output width
+    )
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        config(),
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=128,
+        vocab_size=256,
+        num_prefix_tokens=8,
+        frontend_dim=48,
+        attn_chunk=32,
+    )

@@ -1,0 +1,35 @@
+"""olmo-1b [dense] — non-parametric LayerNorm [arXiv:2402.00838; hf].
+
+16L d_model=2048 16H (GQA kv=16) d_ff=8192 vocab=50304."""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="olmo_1b",
+        family="dense",
+        num_layers=16,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=8192,
+        vocab_size=50304,
+        mlp_kind="swiglu",
+        norm_kind="nonparam_ln",
+    )
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        config(),
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=128,
+        vocab_size=256,
+        attn_chunk=32,
+    )

@@ -1,0 +1,43 @@
+"""seamless-m4t-medium [audio] — enc-dec, multimodal [arXiv:2308.11596; hf].
+
+12L (decoder) + 12L encoder, d_model=1024 16H (kv=16) d_ff=4096
+vocab=256206.  The audio frontend is a STUB per the assignment:
+input_specs supplies precomputed 80-mel frame embeddings."""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless_m4t_medium",
+        family="audio",
+        num_layers=12,
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=4096,
+        vocab_size=256206,
+        mlp_kind="gelu",
+        norm_kind="rmsnorm",
+        is_encoder_decoder=True,
+        enc_layers=12,
+        frontend="audio_stub",
+        frontend_dim=160,
+    )
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        config(),
+        num_layers=2,
+        enc_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=128,
+        vocab_size=256,
+        frontend_dim=16,
+        attn_chunk=32,
+    )

@@ -1,0 +1,35 @@
+"""xlstm-1.3b [ssm] — sLSTM + mLSTM blocks [arXiv:2405.04517; unverified].
+
+48L d_model=2048 4H d_ff=0 (block-internal factor-2 up/down projection).
+Pattern: groups of 7 mLSTM + 1 sLSTM (xLSTM[7:1])."""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm_1b",
+        family="ssm",
+        num_layers=48,
+        d_model=2048,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=0,
+        vocab_size=50304,
+        norm_kind="rmsnorm",
+        slstm_every=8,
+    )
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        config(),
+        num_layers=4,
+        d_model=64,
+        num_heads=2,
+        num_kv_heads=2,
+        vocab_size=256,
+        slstm_every=2,
+    )

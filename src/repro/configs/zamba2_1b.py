@@ -1,0 +1,43 @@
+"""zamba2-1.2b [hybrid] — Mamba2 + shared attn blocks [arXiv:2411.15242; hf].
+
+38L d_model=2048 32H (GQA kv=32) d_ff=8192, ssm_state=64.  38 Mamba2
+layers in 2 groups of 19, one SHARED attention(+MLP) block applied after
+each group (Zamba-style parameter sharing)."""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2_1b",
+        family="hybrid",
+        num_layers=38,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=32,
+        d_ff=8192,
+        vocab_size=32000,
+        mlp_kind="swiglu",
+        norm_kind="rmsnorm",
+        ssm_state=64,
+        ssm_heads=64,  # d_inner 4096 / head dim 64
+        attn_every=19,
+    )
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        config(),
+        num_layers=4,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=128,
+        vocab_size=256,
+        ssm_state=16,
+        ssm_heads=4,
+        attn_every=2,
+        attn_chunk=32,
+    )

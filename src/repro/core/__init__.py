@@ -1,0 +1,42 @@
+"""Core library: the paper's contribution (CV-LR generalized score) in JAX.
+
+The causal-discovery score algebra needs float64: score magnitudes are
+O(n * 1e1) while GES decisions hinge on O(1) differences, and the
+machine-precision identity tests (exact score == low-rank score on low-rank
+kernels) are meaningless in float32.  We therefore enable x64 here, at core
+import time.  All LM-model code passes explicit f32/bf16 dtypes and is
+unaffected.
+"""
+
+from jax import config as _config
+
+_config.update("jax_enable_x64", True)
+
+from repro.core.kernel_fns import (  # noqa: E402
+    KernelSpec,
+    median_heuristic_width,
+    kernel_matrix,
+    kernel_rows,
+)
+from repro.core.lowrank import (  # noqa: E402
+    incomplete_cholesky,
+    discrete_lowrank,
+    lowrank_features,
+)
+from repro.core.score_exact import CVScorer  # noqa: E402
+from repro.core.score_lowrank import CVLRScorer  # noqa: E402
+from repro.core.api import causal_discover, make_scorer  # noqa: E402
+
+__all__ = [
+    "KernelSpec",
+    "median_heuristic_width",
+    "kernel_matrix",
+    "kernel_rows",
+    "incomplete_cholesky",
+    "discrete_lowrank",
+    "lowrank_features",
+    "CVScorer",
+    "CVLRScorer",
+    "causal_discover",
+    "make_scorer",
+]

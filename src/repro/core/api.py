@@ -1,0 +1,45 @@
+"""Public API: build scorers, run causal discovery end-to-end."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.ges import ges, GESResult
+from repro.core.score_common import ScoreConfig
+from repro.core.score_exact import CVScorer
+from repro.core.score_lowrank import CVLRScorer
+
+
+def make_scorer(
+    data,
+    method: str = "cvlr",
+    dims=None,
+    discrete=None,
+    config: ScoreConfig | None = None,
+):
+    """method: 'cvlr' (the paper) or 'cv' (exact O(n^3) baseline)."""
+    if method == "cvlr":
+        return CVLRScorer(data, dims=dims, discrete=discrete, config=config)
+    if method == "cv":
+        return CVScorer(data, dims=dims, discrete=discrete, config=config)
+    raise ValueError(f"unknown scoring method {method!r}")
+
+
+def causal_discover(
+    data,
+    method: str = "cvlr",
+    dims=None,
+    discrete=None,
+    config: ScoreConfig | None = None,
+    max_subset: int | None = None,
+    batch_hook=None,
+    verbose: bool = False,
+) -> GESResult:
+    """GES + (CV-LR | CV) generalized score on an (n, cols) data matrix.
+
+    dims: per-variable column widths (multi-dim variables); default all 1.
+    discrete: per-variable discreteness flags (routes Alg. 2).
+    Returns a GESResult whose `cpdag` is the estimated equivalence class.
+    """
+    scorer = make_scorer(data, method=method, dims=dims, discrete=discrete, config=config)
+    return ges(scorer, max_subset=max_subset, batch_hook=batch_hook, verbose=verbose)

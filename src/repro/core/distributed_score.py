@@ -1,0 +1,163 @@
+"""Distributed CV-LR scoring — the paper's O(n) claim mapped onto a mesh.
+
+Two parallelism axes (DESIGN.md §2.3):
+
+* **data** — samples.  Each device holds an (n/p, m) row shard of the
+  centered factors; every Gram block (P/E/F/V/U/S) is a local contraction
+  followed by one `psum` over the data axis (the ONLY collective the score
+  needs: 6 m x m tensors per candidate, ~6*128^2*8B = 786 KB — latency-bound,
+  not bandwidth-bound).  The m x m fold algebra is replicated: O(Q m^3)
+  redundant FLOPs per device, negligible vs the O(n m^2 / p) Gram work.
+
+* **model** — GES frontier candidates.  The forward/backward sweep needs
+  hundreds of local scores per step; they batch into a leading axis that
+  shards over `model`.
+
+`cvlr_scores_sharded` composes both: (B, Q, n0, m) factors, B over `model`,
+n0 over `data`.  Under `shard_map` the collective schedule is explicit and
+inspectable — the dry-run (launch/dryrun.py --arch cvlr_paper) lowers this
+exact function on the production mesh.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.score_lowrank import _fold_score_lr
+
+
+def _score_from_blocked(lam_x_b, lam_z_b, n0, n1, lmbda, gamma, data_axis=None):
+    """Score from fold-blocked factors (Q, n0_local, m); psum over data."""
+    q = lam_x_b.shape[0]
+    V = jnp.einsum("qni,qnj->qij", lam_x_b, lam_x_b)
+    U = jnp.einsum("qni,qnj->qij", lam_z_b, lam_x_b)
+    S = jnp.einsum("qni,qnj->qij", lam_z_b, lam_z_b)
+    if data_axis is not None:
+        V = jax.lax.psum(V, data_axis)
+        U = jax.lax.psum(U, data_axis)
+        S = jax.lax.psum(S, data_axis)
+    Gxx = jnp.sum(V, axis=0)
+    Gzx = jnp.sum(U, axis=0)
+    Gzz = jnp.sum(S, axis=0)
+    Pb = Gxx[None] - V
+    Eb = Gzx[None] - U
+    Fb = Gzz[None] - S
+    fold = jax.vmap(
+        lambda p, e, f, v, u, s: _fold_score_lr(p, e, f, v, u, s, n0, n1, lmbda, gamma)
+    )
+    return jnp.mean(fold(Pb, Eb, Fb, V, U, S))
+
+
+def block_folds(lam: jnp.ndarray, q: int) -> jnp.ndarray:
+    """(n_eff, m) -> (Q, n0, m) fold-blocked view (centering preserved)."""
+    n_eff, m = lam.shape
+    n0 = n_eff // q
+    return lam[: q * n0].reshape(q, n0, m)
+
+
+def cvlr_scores_batched(lam_x_b, lam_z_b, lmbda=0.01, gamma=0.01):
+    """Batched scores for a GES frontier.
+
+    lam_x_b, lam_z_b: (B, Q, n0, m) fold-blocked centered factors.
+    Returns (B,) scores.  Pure vmap — shard the B axis with pjit for
+    candidate parallelism.
+    """
+    _, q, n0, _ = lam_x_b.shape
+    n1 = (q - 1) * n0
+    lm = jnp.asarray(lmbda, lam_x_b.dtype)
+    gm = jnp.asarray(gamma, lam_x_b.dtype)
+    return jax.vmap(
+        lambda lx, lz: _score_from_blocked(lx, lz, n0, n1, lm, gm)
+    )(lam_x_b, lam_z_b)
+
+
+def make_sharded_scorer(mesh: Mesh, data_axis="data", model_axis: str = "model"):
+    """shard_map CV-LR frontier scorer on `mesh`.
+
+    Returns a jit'd fn of ((B, Q, n0, m), (B, Q, n0, m)) -> (B,) with
+    B sharded over `model_axis` and n0 sharded over `data_axis` (a name or
+    a tuple of names — pass ("pod", "data") on the multi-pod mesh so the
+    sample shards span pods); Gram blocks psum over the data axes exactly
+    as described in the module doc.
+    """
+    data_axes = (data_axis,) if isinstance(data_axis, str) else tuple(data_axis)
+    data_size = 1
+    for a in data_axes:
+        data_size *= mesh.shape[a]
+
+    def local_fn(lam_x_b, lam_z_b):
+        # shapes here are per-device: (B/pm, Q, n0/pd, m)
+        b, q, n0_local, _ = lam_x_b.shape
+        n0 = n0_local * data_size
+        n1 = (q - 1) * n0
+        lm = jnp.asarray(0.01, lam_x_b.dtype)
+        gm = jnp.asarray(0.01, lam_x_b.dtype)
+        # Local Gram blocks for the WHOLE candidate batch, then one fused
+        # all-reduce over the data axis (3 tensors, not 3*B): batching the
+        # psum amortizes collective latency across the GES frontier.
+        # (A concat-Gram [X|Z]^T[X|Z] single-einsum variant was tried and
+        # REFUTED: the materialized concat costs an extra write+read that
+        # exceeds the duplicate-stream saving — §Perf iteration 7.)
+        V = jnp.einsum("bqni,bqnj->bqij", lam_x_b, lam_x_b)
+        U = jnp.einsum("bqni,bqnj->bqij", lam_z_b, lam_x_b)
+        S = jnp.einsum("bqni,bqnj->bqij", lam_z_b, lam_z_b)
+        V, U, S = jax.lax.psum((V, U, S), data_axes)
+
+        def one(v, u, s):
+            gxx, gzx, gzz = (jnp.sum(t, axis=0) for t in (v, u, s))
+            pb, eb, fb = gxx[None] - v, gzx[None] - u, gzz[None] - s
+            fold = jax.vmap(
+                lambda p, e, f, vv, uu, ss: _fold_score_lr(
+                    p, e, f, vv, uu, ss, n0, n1, lm, gm
+                )
+            )
+            return jnp.mean(fold(pb, eb, fb, v, u, s))
+
+        return jax.vmap(one)(V, U, S)
+
+    spec_in = P(model_axis, None, data_axes if len(data_axes) > 1 else data_axes[0], None)
+    spec_out = P(model_axis)
+    fn = jax.shard_map(
+        local_fn, mesh=mesh, in_specs=(spec_in, spec_in), out_specs=spec_out
+    )
+    return jax.jit(fn)
+
+
+def ges_batch_hook(scorer, configs, lmbda=None, gamma=None):
+    """`batch_hook` for repro.core.ges.ges: evaluate a whole sweep's local
+    scores in one batched (vmapped) call and fill the scorer cache.
+
+    configs: list of (node, parents_tuple).  Uses the scorer's feature
+    cache for Lambda construction (host-side ICL), then one vmapped score
+    kernel for everything uncached.
+    """
+    cfg = scorer.config
+    lmbda = cfg.lmbda if lmbda is None else lmbda
+    gamma = cfg.gamma if gamma is None else gamma
+    todo = []
+    for node, parents in configs:
+        key = (int(node), frozenset(int(p) for p in parents))
+        if key not in scorer._score_cache:
+            todo.append((node, tuple(sorted(parents))))
+    if not todo:
+        return 0
+    q = cfg.q_folds
+    lxs, lzs = [], []
+    for node, parents in todo:
+        lam_x = scorer.features((node,))
+        lam_z = (
+            scorer.features(parents) if parents else jnp.zeros_like(lam_x)
+        )
+        lxs.append(block_folds(lam_x, q))
+        lzs.append(block_folds(lam_z, q))
+    scores = cvlr_scores_batched(
+        jnp.stack(lxs), jnp.stack(lzs), lmbda=lmbda, gamma=gamma
+    )
+    for (node, parents), s in zip(todo, np.asarray(scores)):
+        scorer._score_cache[(int(node), frozenset(parents))] = float(s)
+    return len(todo)

@@ -1,0 +1,172 @@
+"""Greedy Equivalence Search (Chickering 2002) driven by a decomposable
+local score — paper Sec. 6.
+
+Forward phase: best valid Insert(X, Y, T) until no positive improvement.
+Backward phase: best valid Delete(X, Y, H) until no positive improvement.
+Operator validity and score deltas follow Chickering's Theorems 15/17:
+
+  Insert(X, Y, T):  X, Y non-adjacent; T subset of undirected neighbors of Y
+    not adjacent to X.  Valid iff NA_{Y,X} u T is a clique and every
+    semi-directed path Y ~> X crosses NA_{Y,X} u T.
+    delta = s(Y, NA u T u Pa_Y u {X}) - s(Y, NA u T u Pa_Y)
+
+  Delete(X, Y, H):  X -> Y or X -- Y; H subset of NA_{Y,X}.
+    Valid iff NA_{Y,X} \\ H is a clique.
+    delta = s(Y, (NA\\H) u Pa_Y \\ {X}) - s(Y, (NA\\H) u Pa_Y u {X})
+
+Scores are cached inside the scorer (keyed by (node, parent-set)), so the
+search only pays for *new* local configurations.  `batch_hook`, when set, is
+called with the full list of (node, parents) configurations needed by a
+sweep before any delta is computed — the distributed runtime uses it to
+evaluate the whole GES frontier in parallel (repro.core.distributed_score).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import numpy as np
+
+from repro.core import graph as g
+
+
+@dataclasses.dataclass
+class GESResult:
+    cpdag: np.ndarray
+    score: float
+    forward_steps: int
+    backward_steps: int
+    trace: list
+
+
+def _na_yx(a, y, x):
+    """Undirected neighbors of y that are adjacent to x."""
+    return frozenset(
+        v for v in g.neighbors_undir(a, y) if g.adjacent(a, v, x)
+    )
+
+
+def _subsets(items, max_size=None):
+    items = sorted(items)
+    hi = len(items) if max_size is None else min(len(items), max_size)
+    for k in range(hi + 1):
+        yield from itertools.combinations(items, k)
+
+
+def _forward_candidates(a, max_subset):
+    d = a.shape[0]
+    for x, y in itertools.permutations(range(d), 2):
+        if g.adjacent(a, x, y):
+            continue
+        na = _na_yx(a, y, x)
+        t_pool = [
+            v
+            for v in g.neighbors_undir(a, y)
+            if not g.adjacent(a, v, x) and v != x
+        ]
+        pa_y = frozenset(g.parents(a, y))
+        for t in _subsets(t_pool, max_subset):
+            nat = na | frozenset(t)
+            if not g.is_clique(a, nat):
+                continue
+            if not g.semi_directed_blocked(a, y, x, nat):
+                continue
+            base = nat | pa_y
+            yield ("insert", x, y, frozenset(t), base | {x}, base)
+
+
+def _backward_candidates(a, max_subset):
+    d = a.shape[0]
+    for x, y in itertools.permutations(range(d), 2):
+        if not (g.has_dir(a, x, y) or g.has_undir(a, x, y)):
+            continue
+        na = _na_yx(a, y, x)
+        pa_y = frozenset(g.parents(a, y))
+        for h in _subsets(na, max_subset):
+            rest = na - frozenset(h)
+            if not g.is_clique(a, rest):
+                continue
+            base = rest | (pa_y - {x})
+            yield ("delete", x, y, frozenset(h), base, base | {x})
+
+
+def _apply_insert(a, x, y, t):
+    a = a.copy()
+    a[x, y] = 1
+    a[y, x] = 0
+    for v in t:
+        a[v, y] = 1
+        a[y, v] = 0
+    return g.pdag_to_cpdag(a)
+
+
+def _apply_delete(a, x, y, h):
+    a = a.copy()
+    a[x, y] = a[y, x] = 0
+    for v in h:
+        # orient y -- v as y -> v and x -- v as x -> v
+        if g.has_undir(a, y, v):
+            a[y, v] = 1
+            a[v, y] = 0
+        if g.has_undir(a, x, v):
+            a[x, v] = 1
+            a[v, x] = 0
+    return g.pdag_to_cpdag(a)
+
+
+def ges(
+    scorer,
+    d: int | None = None,
+    max_subset: int | None = None,
+    batch_hook=None,
+    verbose: bool = False,
+) -> GESResult:
+    """Run GES with the given local scorer (CVScorer / CVLRScorer / ...)."""
+    d = d if d is not None else scorer.view.num_vars
+    a = np.zeros((d, d), dtype=np.int8)
+    trace = []
+    fwd = bwd = 0
+
+    def sweep(phase):
+        nonlocal a
+        steps = 0
+        gen = _forward_candidates if phase == "forward" else _backward_candidates
+        while True:
+            cands = list(gen(a, max_subset))
+            if not cands:
+                break
+            if batch_hook is not None:
+                configs = set()
+                for _, _, y, _, with_set, without_set in cands:
+                    configs.add((y, tuple(sorted(with_set))))
+                    configs.add((y, tuple(sorted(without_set))))
+                batch_hook(scorer, sorted(configs))
+            best_delta, best = 0.0, None
+            for op, x, y, sub, with_set, without_set in cands:
+                delta = scorer.local_score(
+                    y, tuple(sorted(with_set))
+                ) - scorer.local_score(y, tuple(sorted(without_set)))
+                if phase == "backward":
+                    pass  # delta already oriented: with=after-delete basis
+                if delta > best_delta + 1e-12:
+                    best_delta, best = delta, (op, x, y, sub)
+            if best is None:
+                break
+            op, x, y, sub = best
+            a = (
+                _apply_insert(a, x, y, sub)
+                if op == "insert"
+                else _apply_delete(a, x, y, sub)
+            )
+            steps += 1
+            trace.append((op, x, y, tuple(sorted(sub)), best_delta))
+            if verbose:
+                print(f"[GES/{phase}] {op}({x},{y},{tuple(sorted(sub))}) "
+                      f"delta={best_delta:.4f}")
+        return steps
+
+    fwd = sweep("forward")
+    bwd = sweep("backward")
+    total = scorer.score_graph(g.pdag_to_dag(a)) if a.any() else scorer.score_graph(a)
+    return GESResult(cpdag=a, score=total, forward_steps=fwd, backward_steps=bwd, trace=trace)

@@ -1,0 +1,242 @@
+"""PDAG / CPDAG machinery for GES (paper Sec. 6).
+
+Adjacency convention (d x d int matrix):
+  directed   i -> j :  A[i, j] = 1 and A[j, i] = 0
+  undirected i -- j :  A[i, j] = A[j, i] = 1
+  no edge            :  A[i, j] = A[j, i] = 0
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+
+# ---------------------------------------------------------------- basic ops
+def has_dir(a, i, j) -> bool:
+    return bool(a[i, j] and not a[j, i])
+
+
+def has_undir(a, i, j) -> bool:
+    return bool(a[i, j] and a[j, i])
+
+
+def adjacent(a, i, j) -> bool:
+    return bool(a[i, j] or a[j, i])
+
+
+def parents(a, j) -> list:
+    return [i for i in range(a.shape[0]) if has_dir(a, i, j)]
+
+
+def neighbors_undir(a, j) -> list:
+    return [i for i in range(a.shape[0]) if has_undir(a, i, j)]
+
+
+def adjacencies(a, j) -> list:
+    return [i for i in range(a.shape[0]) if adjacent(a, i, j)]
+
+
+def skeleton(a) -> np.ndarray:
+    return ((a + a.T) > 0).astype(np.int8)
+
+
+def is_clique(a, nodes) -> bool:
+    nodes = list(nodes)
+    return all(
+        adjacent(a, x, y) for x, y in itertools.combinations(nodes, 2)
+    )
+
+
+def semi_directed_blocked(a, src, dst, blocked) -> bool:
+    """True iff EVERY semi-directed path src ~> dst passes through `blocked`.
+
+    Semi-directed: each hop is undirected or directed along travel.
+    BFS over allowed hops avoiding blocked nodes; reachable => not blocked.
+    """
+    d = a.shape[0]
+    blocked = set(blocked)
+    if src in blocked or dst in blocked:
+        return True
+    seen = {src}
+    stack = [src]
+    while stack:
+        u = stack.pop()
+        if u == dst:
+            return False
+        for v in range(d):
+            if v in seen or v in blocked:
+                continue
+            if has_dir(a, u, v) or has_undir(a, u, v):
+                seen.add(v)
+                stack.append(v)
+    return True
+
+
+# -------------------------------------------------------------- DAG checks
+def is_dag(a) -> bool:
+    d = a.shape[0]
+    if np.any(a & a.T):
+        return False
+    indeg = a.sum(axis=0).astype(int)
+    queue = [i for i in range(d) if indeg[i] == 0]
+    seen = 0
+    while queue:
+        u = queue.pop()
+        seen += 1
+        for v in np.flatnonzero(a[u]):
+            indeg[v] -= 1
+            if indeg[v] == 0:
+                queue.append(int(v))
+    return seen == d
+
+
+def topological_order(a) -> list:
+    d = a.shape[0]
+    indeg = a.sum(axis=0).astype(int)
+    queue = sorted(i for i in range(d) if indeg[i] == 0)
+    order = []
+    while queue:
+        u = queue.pop(0)
+        order.append(u)
+        for v in np.flatnonzero(a[u]):
+            indeg[v] -= 1
+            if indeg[v] == 0:
+                queue.append(int(v))
+        queue.sort()
+    if len(order) != d:
+        raise ValueError("not a DAG")
+    return order
+
+
+# ------------------------------------------------------------- Meek rules
+def apply_meek_rules(a) -> np.ndarray:
+    """Close a PDAG under Meek rules R1-R4 (orientation propagation)."""
+    a = a.copy()
+    d = a.shape[0]
+    changed = True
+    while changed:
+        changed = False
+        for x, y in itertools.permutations(range(d), 2):
+            if not has_undir(a, x, y):
+                continue
+            # R1: z -> x, z not adjacent y  =>  x -> y
+            if any(
+                has_dir(a, z, x) and not adjacent(a, z, y)
+                for z in range(d)
+                if z not in (x, y)
+            ):
+                a[y, x] = 0
+                changed = True
+                continue
+            # R2: x -> z -> y  =>  x -> y
+            if any(
+                has_dir(a, x, z) and has_dir(a, z, y)
+                for z in range(d)
+                if z not in (x, y)
+            ):
+                a[y, x] = 0
+                changed = True
+                continue
+            # R3: x -- z1 -> y, x -- z2 -> y, z1 != z2 non-adjacent => x -> y
+            zs = [
+                z
+                for z in range(d)
+                if z not in (x, y) and has_undir(a, x, z) and has_dir(a, z, y)
+            ]
+            if any(
+                not adjacent(a, z1, z2)
+                for z1, z2 in itertools.combinations(zs, 2)
+            ):
+                a[y, x] = 0
+                changed = True
+                continue
+            # R4: x -- z1, z1 -> z2, z2 -> y, x -- z2 (z1, y non-adjacent)
+            done = False
+            for z1 in range(d):
+                if z1 in (x, y) or not has_undir(a, x, z1):
+                    continue
+                for z2 in range(d):
+                    if z2 in (x, y, z1):
+                        continue
+                    if (
+                        has_dir(a, z1, z2)
+                        and has_dir(a, z2, y)
+                        and adjacent(a, x, z2)
+                        and not adjacent(a, z1, y)
+                    ):
+                        a[y, x] = 0
+                        changed = True
+                        done = True
+                        break
+                if done:
+                    break
+    return a
+
+
+def dag_to_cpdag(dag) -> np.ndarray:
+    """CPDAG = skeleton + v-structures, closed under Meek rules."""
+    dag = np.asarray(dag, dtype=np.int8)
+    d = dag.shape[0]
+    pat = skeleton(dag).copy()
+    # v-structures x -> z <- y with x, y non-adjacent stay directed
+    for z in range(d):
+        pa = np.flatnonzero(dag[:, z])
+        for x, y in itertools.combinations(pa, 2):
+            if not (dag[x, y] or dag[y, x]):
+                pat[z, x] = 0
+                pat[z, y] = 0
+    return apply_meek_rules(pat)
+
+
+def pdag_to_dag(pdag) -> np.ndarray:
+    """Dor & Tarsi consistent extension; raises if none exists."""
+    a = np.asarray(pdag, dtype=np.int8).copy()
+    out = a.copy()  # orientations get written here
+    alive = list(range(a.shape[0]))
+    while alive:
+        found = None
+        for x in alive:
+            others = [v for v in alive if v != x]
+            # (a) x is a sink among alive: no directed edge x -> v
+            if any(has_dir(a, x, v) for v in others):
+                continue
+            # (b) undirected neighbors of x adjacent to all adjacents of x
+            nb = [v for v in others if has_undir(a, x, v)]
+            adj = [v for v in others if adjacent(a, x, v)]
+            ok = all(
+                adjacent(a, u, v) for u in nb for v in adj if u != v
+            )
+            if ok:
+                found = x
+                break
+        if found is None:
+            raise ValueError("PDAG admits no consistent extension")
+        x = found
+        for v in alive:
+            if v != x and has_undir(a, x, v):
+                out[x, v] = 0  # orient v -> x
+                out[v, x] = 1
+        for v in alive:
+            if v != x:
+                a[x, v] = a[v, x] = 0
+        alive.remove(x)
+    assert is_dag(out), "extension failed to produce a DAG"
+    return out
+
+
+def pdag_to_cpdag(pdag) -> np.ndarray:
+    """Rebuild the CPDAG of the equivalence class containing `pdag`."""
+    return dag_to_cpdag(pdag_to_dag(pdag))
+
+
+def random_dag(d: int, density: float, rng) -> np.ndarray:
+    """Random DAG with expected edge density (paper Sec. 7.4)."""
+    order = rng.permutation(d)
+    a = np.zeros((d, d), dtype=np.int8)
+    for i in range(d):
+        for j in range(i + 1, d):
+            if rng.random() < density:
+                a[order[i], order[j]] = 1
+    return a

@@ -1,0 +1,51 @@
+"""Accuracy metrics (paper Sec. 7.1): skeleton F1 and normalized SHD."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import graph as g
+
+
+def skeleton_f1(est, true) -> float:
+    """F1 over undirected skeleton edges."""
+    se = g.skeleton(np.asarray(est))
+    st = g.skeleton(np.asarray(true))
+    iu = np.triu_indices(se.shape[0], k=1)
+    e, t = se[iu].astype(bool), st[iu].astype(bool)
+    tp = int(np.sum(e & t))
+    fp = int(np.sum(e & ~t))
+    fn = int(np.sum(~e & t))
+    if tp == 0:
+        return 0.0 if (fp or fn) else 1.0
+    prec = tp / (tp + fp)
+    rec = tp / (tp + fn)
+    return 2 * prec * rec / (prec + rec)
+
+
+def _edge_mark(a, i, j) -> int:
+    """0 none, 1 i->j, 2 j->i, 3 undirected."""
+    if g.has_undir(a, i, j):
+        return 3
+    if g.has_dir(a, i, j):
+        return 1
+    if g.has_dir(a, j, i):
+        return 2
+    return 0
+
+
+def shd_cpdag(est, true, normalize: bool = True) -> float:
+    """Structural Hamming distance between CPDAGs.
+
+    Counts pairs whose edge mark differs (missing/extra/misoriented each
+    cost 1), normalized by the number of possible pairs d(d-1)/2 —
+    matching the paper's 'normalized SHD' scale (~0.1-0.3)."""
+    est = np.asarray(est)
+    true = np.asarray(true)
+    d = est.shape[0]
+    dist = 0
+    for i in range(d):
+        for j in range(i + 1, d):
+            if _edge_mark(est, i, j) != _edge_mark(true, i, j):
+                dist += 1
+    return dist / (d * (d - 1) / 2) if normalize else float(dist)

@@ -1,0 +1,113 @@
+"""Exact cross-validated likelihood score ("CV", Huang et al. 2018; paper
+Eq. 8/9).  O(n^3) time, O(n^2) memory — the paper's baseline and our
+correctness oracle.
+
+One unified code path: the empty-conditioning-set case (Eq. 9) is Eq. 8
+specialized to K_Z = 0 (see DESIGN.md §1 for the Eq. 9 typo note), so we
+simply pass a zero K_Z.  Folds run under `lax.map` (sequential) to bound
+memory at one (n1, n1) working set.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernel_fns import (
+    KernelSpec,
+    center_gram,
+    kernel_matrix,
+    median_heuristic_width,
+    standardize,
+)
+from repro.core.score_common import ScoreConfig, ScorerBase, VariableView
+
+
+def _fold_score(kx, kz, tr, te, n0, n1, lmbda, gamma):
+    """Eq. 8 on one fold. kx, kz: centered full (n_eff, n_eff) kernels."""
+    beta = lmbda * lmbda / gamma
+    KX1 = kx[tr][:, tr]
+    KX0 = kx[te][:, te]
+    KX01 = kx[te][:, tr]
+    KZ1 = kz[tr][:, tr]
+    KZ01 = kz[te][:, tr]
+
+    eye1 = jnp.eye(n1, dtype=kx.dtype)
+    reg = KZ1 + (n1 * lmbda) * eye1
+    A = jnp.linalg.solve(reg, eye1)  # (K~1_Z + n1 lambda I)^-1
+    B = A @ KX1 @ A
+    Qm = eye1 + (n1 * beta) * B
+    sign, logdet_q = jnp.linalg.slogdet(Qm)
+    Qinv = jnp.linalg.solve(Qm, eye1)
+    C = A @ Qinv @ A
+
+    AKZ10 = A @ KZ01.T
+    CKX10 = C @ KX01.T
+    t1 = jnp.trace(KX0)
+    t2 = jnp.trace(KZ01 @ B @ KZ01.T)
+    t3 = jnp.trace(KX01 @ AKZ10)
+    t4 = jnp.trace(KX01 @ CKX10)
+    t5 = jnp.trace((KZ01 @ A @ KX1) @ C @ (KX1 @ AKZ10))
+    t6 = jnp.trace(KX01 @ C @ KX1 @ AKZ10)
+    trace_total = t1 + t2 - 2.0 * t3 - (n1 * beta) * (t4 + t5) + 2.0 * (n1 * beta) * t6
+
+    return (
+        -0.5 * n0 * n0 * jnp.log(2.0 * jnp.pi)
+        - 0.5 * n0 * logdet_q
+        - 0.5 * n0 * n1 * jnp.log(gamma)
+        - trace_total / (2.0 * gamma)
+    )
+
+
+@partial(jax.jit, static_argnames=("n0", "n1", "q"))
+def cv_score_from_kernels(kx, kz, train_idx, n0: int, n1: int, q: int, lmbda, gamma):
+    """Mean Eq.-8 score over Q folds given centered kernel matrices."""
+    n_eff = q * n0
+
+    def per_fold(args):
+        fold, tr = args
+        te = fold * n0 + jnp.arange(n0)
+        return _fold_score(kx, kz, tr, te, n0, n1, lmbda, gamma)
+
+    scores = jax.lax.map(per_fold, (jnp.arange(q), train_idx))
+    del n_eff
+    return jnp.mean(scores)
+
+
+class CVScorer(ScorerBase):
+    """Exact CV likelihood local score (the paper's baseline)."""
+
+    def __init__(self, data, dims=None, discrete=None, config: ScoreConfig | None = None):
+        config = config or ScoreConfig()
+        super().__init__(VariableView(data, dims, discrete), config)
+        self._kernel_cache: dict = {}
+
+    def _centered_kernel(self, vars_key: tuple) -> jnp.ndarray:
+        if vars_key not in self._kernel_cache:
+            cols = standardize(self.view.columns(vars_key))[self.perm]
+            width = median_heuristic_width(cols, factor=self.config.width_factor)
+            k = kernel_matrix(cols, cols, KernelSpec("rbf", width))
+            self._kernel_cache[vars_key] = center_gram(k)
+        return self._kernel_cache[vars_key]
+
+    def _compute(self, i: int, parents: tuple) -> float:
+        kx = self._centered_kernel((i,))
+        if parents:
+            kz = self._centered_kernel(tuple(parents))
+        else:
+            kz = jnp.zeros_like(kx)  # Eq. 9 == Eq. 8 with K_Z = 0
+        return float(
+            cv_score_from_kernels(
+                kx,
+                kz,
+                jnp.asarray(self.train_idx),
+                self.n0,
+                self.n1,
+                self.config.q_folds,
+                jnp.asarray(self.config.lmbda, kx.dtype),
+                jnp.asarray(self.config.gamma, kx.dtype),
+            )
+        )

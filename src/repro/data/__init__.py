@@ -1,0 +1,10 @@
+from repro.data.synthetic import SyntheticDataset, generate_scm_data
+from repro.data.networks import sample_network, SACHS, CHILD
+
+__all__ = [
+    "SyntheticDataset",
+    "generate_scm_data",
+    "sample_network",
+    "SACHS",
+    "CHILD",
+]

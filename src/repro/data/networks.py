@@ -1,0 +1,115 @@
+"""Benchmark discrete networks (paper Sec. 7.5): SACHS (11 nodes, 17 edges)
+and CHILD (20 nodes, 25 edges).
+
+Structures are the published consensus graphs.  Conditional probability
+tables are seeded synthetic Dirichlet draws (the original CPT files are not
+redistributable); cardinalities 2..4 match the paper's "1 to 6" range.
+Sampling is ancestral over the topological order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.graph import topological_order
+
+
+@dataclasses.dataclass(frozen=True)
+class Network:
+    name: str
+    nodes: tuple
+    edges: tuple  # (parent_name, child_name)
+
+    @property
+    def d(self) -> int:
+        return len(self.nodes)
+
+    def adjacency(self) -> np.ndarray:
+        idx = {v: i for i, v in enumerate(self.nodes)}
+        a = np.zeros((self.d, self.d), dtype=np.int8)
+        for p, c in self.edges:
+            a[idx[p], idx[c]] = 1
+        return a
+
+
+SACHS = Network(
+    name="sachs",
+    nodes=(
+        "Raf", "Mek", "Plcg", "PIP2", "PIP3", "Erk", "Akt", "PKA", "PKC",
+        "P38", "Jnk",
+    ),
+    edges=(
+        ("PKC", "Raf"), ("PKC", "Mek"), ("PKC", "Jnk"), ("PKC", "P38"),
+        ("PKC", "PKA"), ("PKA", "Raf"), ("PKA", "Mek"), ("PKA", "Erk"),
+        ("PKA", "Akt"), ("PKA", "Jnk"), ("PKA", "P38"), ("Raf", "Mek"),
+        ("Mek", "Erk"), ("Erk", "Akt"), ("Plcg", "PIP2"), ("Plcg", "PIP3"),
+        ("PIP3", "PIP2"),
+    ),
+)
+
+CHILD = Network(
+    name="child",
+    nodes=(
+        "BirthAsphyxia", "Disease", "Age", "LVH", "DuctFlow", "CardiacMixing",
+        "LungParench", "LungFlow", "Sick", "HypDistrib", "HypoxiaInO2", "CO2",
+        "ChestXray", "Grunting", "LVHreport", "LowerBodyO2", "RUQO2",
+        "CO2Report", "XrayReport", "GruntingReport",
+    ),
+    edges=(
+        ("BirthAsphyxia", "Disease"), ("Disease", "Age"), ("Disease", "LVH"),
+        ("Disease", "DuctFlow"), ("Disease", "CardiacMixing"),
+        ("Disease", "LungParench"), ("Disease", "LungFlow"),
+        ("Disease", "Sick"), ("LVH", "LVHreport"), ("DuctFlow", "HypDistrib"),
+        ("CardiacMixing", "HypDistrib"), ("CardiacMixing", "HypoxiaInO2"),
+        ("LungParench", "HypoxiaInO2"), ("LungParench", "CO2"),
+        ("LungParench", "ChestXray"), ("LungParench", "Grunting"),
+        ("LungFlow", "ChestXray"), ("Sick", "Grunting"), ("Sick", "Age"),
+        ("HypDistrib", "LowerBodyO2"), ("HypoxiaInO2", "LowerBodyO2"),
+        ("HypoxiaInO2", "RUQO2"), ("CO2", "CO2Report"),
+        ("ChestXray", "XrayReport"), ("Grunting", "GruntingReport"),
+    ),
+)
+
+assert len(SACHS.edges) == 17 and len(CHILD.edges) == 25
+
+
+def sample_network(net: Network, n: int, seed: int = 0, max_card: int = 4):
+    """Ancestral sampling with seeded Dirichlet CPTs.
+
+    Returns (data (n, d) float64 of category codes, true_dag (d, d)).
+    CPTs are deterministic per (network, seed) and are made intentionally
+    informative (Dirichlet alpha=0.35, peaky) so the structure is learnable.
+    """
+    adj = net.adjacency()
+    d = net.d
+    rng_card = np.random.default_rng(hash((net.name, "card")) % (2**31))
+    cards = rng_card.integers(2, max_card + 1, size=d)
+    rng_cpt = np.random.default_rng(hash((net.name, "cpt")) % (2**31))
+    rng = np.random.default_rng(seed)
+
+    order = topological_order(adj)
+    parents = {i: list(np.flatnonzero(adj[:, i])) for i in range(d)}
+
+    cpts = {}
+    for i in range(d):
+        n_conf = int(np.prod([cards[p] for p in parents[i]])) if parents[i] else 1
+        cpts[i] = rng_cpt.dirichlet(np.full(cards[i], 0.35), size=n_conf)
+
+    data = np.zeros((n, d), dtype=np.int64)
+    for i in order:
+        pa = parents[i]
+        if pa:
+            conf = np.zeros(n, dtype=np.int64)
+            mult = 1
+            for p in pa:
+                conf = conf * cards[p] + data[:, p]
+                mult *= cards[p]
+        else:
+            conf = np.zeros(n, dtype=np.int64)
+        probs = cpts[i][conf]  # (n, card_i)
+        u = rng.random((n, 1))
+        data[:, i] = (u > np.cumsum(probs, axis=1)).sum(axis=1)
+
+    return data.astype(np.float64), adj

@@ -1,0 +1,3 @@
+from repro.distributed.fault_tolerance import FaultTolerantRunner, HeartbeatMonitor
+
+__all__ = ["FaultTolerantRunner", "HeartbeatMonitor"]

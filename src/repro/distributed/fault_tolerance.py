@@ -1,0 +1,113 @@
+"""Fault tolerance & elasticity for the training runtime.
+
+Mechanisms (exercised by tests/test_fault_tolerance.py and
+launch/train.py --resume auto):
+
+1. **Checkpoint/restart** — periodic async checkpoints (atomic-rename
+   commit), restart resumes from `latest_step`; the data pipeline is
+   addressed by (step, row) so the replayed batch stream is bit-identical.
+2. **Elastic re-shard** — checkpoints store logical arrays; restore
+   re-places them under whatever mesh the restarted job has
+   (`restore_checkpoint(..., sharding_fn=...)`), so recovery onto a
+   different device count is a placement change, not a format change.
+3. **Straggler / lost-worker mitigation** — on real multi-host TPU this is
+   driven by the coordinator's missed-heartbeat signal; the HeartbeatMonitor
+   below reproduces the detection logic (deadline-based, with a grace
+   count) in a host-local, testable form.  Upon detection the runner's
+   policy is restart-from-checkpoint with the survivor set (elastic) —
+   the industry-standard policy for SPMD jobs, where a lost participant
+   stalls every collective.
+4. **Simulated failures** — FaultTolerantRunner.step() accepts a
+   `fail_hook` so tests can kill arbitrary steps and assert recovery
+   reproduces the uninterrupted run exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.checkpoint.store import (
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+)
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    """Deadline-based liveness: worker w is suspect after `timeout` without
+    a beat and dead after `grace` consecutive misses."""
+
+    num_workers: int
+    timeout: float = 10.0
+    grace: int = 3
+
+    def __post_init__(self):
+        now = time.monotonic()
+        self.last_beat = {w: now for w in range(self.num_workers)}
+        self.misses = {w: 0 for w in range(self.num_workers)}
+
+    def beat(self, worker: int, at: float | None = None):
+        self.last_beat[worker] = time.monotonic() if at is None else at
+        self.misses[worker] = 0
+
+    def check(self, at: float | None = None):
+        """Returns (alive, suspect, dead) worker id lists."""
+        now = time.monotonic() if at is None else at
+        alive, suspect, dead = [], [], []
+        for w in range(self.num_workers):
+            if now - self.last_beat[w] <= self.timeout:
+                alive.append(w)
+                continue
+            self.misses[w] += 1
+            (dead if self.misses[w] >= self.grace else suspect).append(w)
+        return alive, suspect, dead
+
+
+class FaultTolerantRunner:
+    """Wraps a jitted train_step with checkpoint-every-N + auto-resume."""
+
+    def __init__(
+        self,
+        train_step,
+        init_state,
+        ckpt_dir: str,
+        ckpt_every: int = 50,
+        sharding_fn=None,
+    ):
+        self.train_step = train_step
+        self.ckpt = AsyncCheckpointer(ckpt_dir)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.sharding_fn = sharding_fn
+        resume = latest_step(ckpt_dir)
+        if resume is not None:
+            self.state = restore_checkpoint(
+                ckpt_dir, resume, init_state, sharding_fn=sharding_fn
+            )
+            self.step_num = resume
+        else:
+            self.state = init_state
+            self.step_num = 0
+
+    def run(self, batches, num_steps: int, fail_hook=None):
+        """batches: callable step -> batch.  fail_hook(step) may raise to
+        simulate a mid-run crash (the exception propagates after state is
+        consistent, i.e. like a real preemption)."""
+        metrics = []
+        try:
+            while self.step_num < num_steps:
+                batch = batches(self.step_num)
+                if fail_hook is not None:
+                    fail_hook(self.step_num)
+                self.state, m = self.train_step(self.state, batch)
+                self.step_num += 1
+                metrics.append(m)
+                if self.step_num % self.ckpt_every == 0:
+                    self.ckpt.save(self.step_num, self.state)
+        finally:
+            # drain pending async saves even on crash, so a committed
+            # checkpoint is never half-written at restart time
+            self.ckpt.wait()
+        return metrics

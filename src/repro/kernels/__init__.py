@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the CV-LR hot spots.
+
+- rbf_gram:      tiled pairwise RBF strip K(X, pivots) — the ICL/Nystroem
+                 feature evaluation hot loop.
+- centered_gram: fused mean-centering + Lam^T Lam Gram contraction — the
+                 P/E/F/V/U/S block stage of the dumbbell-form score.
+
+Validated against ref.py oracles in interpret mode (this container is
+CPU-only); on TPU the same pallas_call lowers to Mosaic.
+"""
+
+from repro.kernels.ops import centered_gram, rbf_gram
+
+__all__ = ["centered_gram", "rbf_gram"]

@@ -1,0 +1,72 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handle padding/masking so callers see arbitrary shapes; select interpret
+mode automatically on non-TPU backends (this container is CPU-only — the
+kernels are TPU-targeted and validated under interpret=True).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.centered_gram import gram_centered_pallas
+from repro.kernels.rbf_gram import rbf_gram_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def rbf_gram(
+    x,
+    y,
+    width,
+    *,
+    block_n: int = 256,
+    block_m: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """K(X, Y) strip, any (n, d) x (m, d). Returns (n, m) float32."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    if x.ndim == 1:
+        x = x[:, None]
+    if y.ndim == 1:
+        y = y[:, None]
+    n, m = x.shape[0], y.shape[0]
+    # Zero-pad: rows -> sliced off; feature dim -> adds 0 to sq-dists.
+    xp = _pad_to(_pad_to(x, 0, block_n), 1, 128)
+    yp = _pad_to(_pad_to(y, 0, block_m), 1, 128)
+    out = rbf_gram_pallas(
+        xp, yp, width, block_n=block_n, block_m=block_m, interpret=interpret
+    )
+    return out[:n, :m]
+
+
+def centered_gram(
+    lam, *, block_n: int = 512, interpret: bool | None = None
+) -> jnp.ndarray:
+    """(Lam - mean)^T (Lam - mean) for Lam (n, m). Returns (m, m) float32."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    lam = jnp.asarray(lam, jnp.float32)
+    n, m = lam.shape
+    mu = jnp.mean(lam, axis=0, keepdims=True)  # cheap memory-bound pass
+    pad = (-n) % block_n
+    if pad:
+        # Pad with copies of mu: padded rows contribute (mu - mu) = 0.
+        lam = jnp.concatenate([lam, jnp.broadcast_to(mu, (pad, m))], axis=0)
+    return gram_centered_pallas(lam, mu, block_n=block_n, interpret=interpret)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness reference)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rbf_gram_ref(x: jnp.ndarray, y: jnp.ndarray, width) -> jnp.ndarray:
+    """K[i, j] = exp(-||x_i - y_j||^2 / (2 width^2)); x (n,d), y (m,d)."""
+    xn = jnp.sum(x * x, axis=-1, keepdims=True)
+    yn = jnp.sum(y * y, axis=-1, keepdims=True).T
+    d2 = jnp.maximum(xn + yn - 2.0 * (x @ y.T), 0.0)
+    return jnp.exp(-d2 / (2.0 * width * width))
+
+
+def centered_gram_ref(lam: jnp.ndarray) -> jnp.ndarray:
+    """C = (Lam - mean)^T (Lam - mean) over rows; lam (n, m) -> (m, m)."""
+    lc = lam - jnp.mean(lam, axis=0, keepdims=True)
+    return lc.T @ lc

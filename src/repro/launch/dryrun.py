@@ -1,0 +1,343 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+512 placeholder host devices and extract the roofline inputs.
+
+The XLA_FLAGS assignment above MUST run before any other import (jax locks
+the device count at first backend init).
+
+Per cell:
+  - build the step function (train_step / prefill / decode_step, or the
+    paper's distributed scorer for arch=cvlr_paper),
+  - derive in/out shardings from the logical-axis resolver,
+  - jax.jit(...).lower(*ShapeDtypeStructs).compile(),
+  - record memory_analysis(), cost_analysis() (per-device, post-SPMD),
+    and collective payload bytes parsed from the compiled HLO.
+
+Results land in benchmarks/dryrun_results/<mesh>/<arch>__<shape>.json
+(incremental: existing cells are skipped unless --force).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama_1b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun          # all cells
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.shardings import (  # noqa: E402
+    adafactor_state_shardings,
+    adamw_state_shardings,
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+)
+from repro.models.config import SHAPES  # noqa: E402
+from repro.models.registry import ARCH_IDS, load_arch  # noqa: E402
+from repro.optim.optimizers import OptimConfig, make_optimizer  # noqa: E402
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "benchmarks", "dryrun_results"
+)
+
+# long_500k needs sub-quadratic attention: only SSM/hybrid archs run it
+# (full-attention archs skip, per the assignment; see DESIGN.md §2.4).
+SUBQUADRATIC = {"xlstm_1b", "zamba2_1b"}
+
+COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "ragged-all-to-all",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one 'dtype[d0,d1,...]' HLO shape literal."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op, by op kind.
+
+    Parses lines like:
+      %ar = bf16[16,128]{1,0} all-reduce(...), replica_groups=...
+      %ag = (f32[4,8]{...}, f32[2]{...}) all-gather(...)
+    """
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        for op in COLLECTIVE_OPS:
+            token = f" {op}("
+            if token not in line or "= " not in line:
+                continue
+            if f"{op}-start" in line or f"{op}-done" in line:
+                pass  # async forms also match the plain token below
+            rhs = line.split("= ", 1)[1]
+            shapes_part = rhs.split(f" {op}(")[0].strip()
+            if shapes_part.startswith("("):
+                shapes = re.findall(r"\w+\[[0-9,]*\]", shapes_part)
+                out[op] += sum(_shape_bytes(s) for s in shapes)
+            else:
+                out[op] += _shape_bytes(shapes_part)
+            counts[op] += 1
+            break
+    out_named = {f"{k}_bytes": v for k, v in out.items()}
+    out_named.update({f"{k}_count": v for k, v in counts.items()})
+    out_named["total_collective_bytes"] = sum(out.values())
+    return out_named
+
+
+def _jsonable_memory(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    keys = (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    )
+    return {k: int(getattr(ma, k, 0) or 0) for k in keys}
+
+
+def build_lm_cell(arch: str, shape_name: str, mesh):
+    """Returns (fn, example_args, in_shardings, donate) for one LM cell."""
+    import dataclasses
+
+    from repro.models.registry import build_model
+
+    cfg, _ = load_arch(arch)
+    shape = SHAPES[shape_name]
+    # Unroll layer + inner chunk scans so cost_analysis counts every
+    # iteration (XLA counts while bodies once — EXPERIMENTS.md §Dry-run).
+    overrides = {"unroll_scans": True}
+    if cfg.family in ("ssm", "hybrid") and shape.seq_len > 8192:
+        overrides["ssm_chunk"] = 1024  # bound trip count x unroll size
+    cfg = dataclasses.replace(cfg, **overrides)
+    model = build_model(cfg)
+    # eval_shape the params; capture the (static, string-leaved) logical
+    # axes tree via closure — it is built at trace time with no allocation.
+    box = {}
+
+    def _init_params_only(k):
+        p, a = model.init(k)
+        box["axes"] = a
+        return p
+
+    params_shapes = jax.eval_shape(_init_params_only, jax.random.PRNGKey(0))
+    axes_tree = box["axes"]
+    p_shard, resolver = param_shardings(mesh, params_shapes, axes_tree)
+
+    if shape.kind == "train":
+        opt_kind = "adafactor" if arch == "arctic_480b" else "adamw"
+        opt_init, opt_update = make_optimizer(OptimConfig(kind=opt_kind))
+        opt_shapes = jax.eval_shape(opt_init, params_shapes)
+        if opt_kind == "adamw":
+            o_shard = adamw_state_shardings(p_shard, mesh)
+        else:
+            o_shard = adafactor_state_shardings(params_shapes, axes_tree, mesh)
+        batch_specs = model.input_specs(shape)
+        b_shard = batch_shardings(mesh, batch_specs)
+
+        def train_step(state, batch):
+            loss, grads = jax.value_and_grad(model.loss)(state["params"], batch)
+            new_params, new_opt, metrics = opt_update(
+                grads, state["opt"], state["params"]
+            )
+            return {"params": new_params, "opt": new_opt}, {
+                "loss": loss,
+                "grad_norm": metrics["grad_norm"],
+            }
+
+        state_shapes = {"params": params_shapes, "opt": opt_shapes}
+        state_shard = {"params": p_shard, "opt": o_shard}
+        return (
+            train_step,
+            (state_shapes, batch_specs),
+            (state_shard, b_shard),
+            resolver,
+            (0,),
+        )
+
+    if shape.kind == "prefill":
+        batch_specs = model.input_specs(shape)
+        b_shard = batch_shardings(mesh, batch_specs)
+
+        def prefill_step(params, batch):
+            if hasattr(model, "prefill"):
+                return model.prefill(params, batch)
+            logits, _ = model.forward(params, batch)
+            return logits[:, -1]
+
+        return prefill_step, (params_shapes, batch_specs), (p_shard, b_shard), resolver, ()
+
+    # decode
+    cache_specs, tok_spec = model.decode_specs(SHAPES[shape_name])
+    c_shard, _ = cache_shardings(mesh, cache_specs, model.cache_logical_axes())
+    t_shard = batch_shardings(mesh, tok_spec)
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return (
+        serve_step,
+        (params_shapes, cache_specs, tok_spec),
+        (p_shard, c_shard, t_shard),
+        resolver,
+        (1,),  # donate the cache
+    )
+
+
+def build_cvlr_cell(mesh):
+    """The paper's workload: distributed CV-LR frontier scoring.
+
+    Samples shard over every FSDP axis (("pod", "data") multi-pod), so the
+    multi-pod pass proves the pod axis shards the paper's collective too."""
+    from repro.configs.cvlr_paper import config
+    from repro.core.distributed_score import make_sharded_scorer
+
+    w = config()
+    data_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    fn = make_sharded_scorer(mesh, data_axis=data_axes, model_axis="model")
+    spec = jax.ShapeDtypeStruct(
+        (w.num_candidates, w.q_folds, w.samples_per_fold, w.m), jnp.float64
+    )
+    in_spec = NamedSharding(
+        mesh, P("model", None, data_axes if len(data_axes) > 1 else data_axes[0], None)
+    )
+    return fn, (spec, spec), (in_spec, in_spec), None, ()
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str, force=False):
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, f"{arch}__{shape_name}.json")
+    if os.path.exists(out_path) and not force:
+        print(f"[skip] {arch} x {shape_name} ({mesh_kind}) — cached")
+        return json.load(open(out_path))
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "mesh_shape": dict(mesh.shape),
+        "status": "error",
+    }
+    try:
+        if arch == "cvlr_paper":
+            fn, args, in_shards, resolver, donate = build_cvlr_cell(mesh)
+        else:
+            fn, args, in_shards, resolver, donate = build_lm_cell(
+                arch, shape_name, mesh
+            )
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(fn, in_shardings=in_shards, donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            cost = compiled.cost_analysis() or {}
+            mem = _jsonable_memory(compiled)
+            hlo = compiled.as_text()
+            coll = collective_bytes(hlo)
+        record.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            flops=float(cost.get("flops", 0.0)),
+            bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+            transcendentals=float(cost.get("transcendentals", 0.0)),
+            memory=mem,
+            collectives=coll,
+            hlo_ops=len(hlo.splitlines()),
+            fallbacks=[
+                list(map(str, f)) for f in (resolver.fallbacks if resolver else [])
+            ],
+        )
+        print(
+            f"[ok]   {arch} x {shape_name} ({mesh_kind}): "
+            f"flops/dev={record['flops']:.3e} "
+            f"coll={coll['total_collective_bytes']:.3e}B "
+            f"compile={t_compile:.1f}s"
+        )
+    except Exception as e:  # noqa: BLE001 — record and continue
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[FAIL] {arch} x {shape_name} ({mesh_kind}): {record['error']}")
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+def cells_for(arch: str):
+    if arch == "cvlr_paper":
+        return ["train_4k"]  # one representative cell (shape is internal)
+    cfg, _ = load_arch(arch)
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch in SUBQUADRATIC:
+        shapes.append("long_500k")
+    return shapes
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    n_fail = 0
+    for mesh_kind in meshes:
+        out_dir = os.path.join(args.out, mesh_kind)
+        for arch in archs:
+            shapes = cells_for(arch) if args.shape == "all" else args.shape.split(",")
+            for shape in shapes:
+                rec = run_cell(arch, shape, mesh_kind, out_dir, force=args.force)
+                n_fail += rec.get("status") != "ok"
+    print(f"dry-run complete; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

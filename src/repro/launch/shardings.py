@@ -1,0 +1,91 @@
+"""Sharding derivation for the launch layer: params, optimizer state,
+batches and caches -> NamedShardings on a given mesh, via the logical-axis
+resolver (repro.models.config.ShardingResolver)."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ShardingResolver
+
+
+def _is_axes(x):
+    return isinstance(x, tuple)
+
+
+def param_shardings(mesh, params_shapes, axes_tree, rules=None):
+    """NamedSharding tree congruent with params.
+
+    axes_tree leaves are tuples of logical names (None entries allowed).
+    Records divisibility fallbacks on the returned resolver."""
+    resolver = ShardingResolver(mesh, rules)
+
+    def one(shape_struct, axes):
+        return NamedSharding(mesh, resolver.spec(shape_struct.shape, axes))
+
+    tree = jax.tree.map(one, params_shapes, axes_tree, is_leaf=None)
+    return tree, resolver
+
+
+def batch_shardings(mesh, batch_specs):
+    """Token/label/frame batches: leading (batch) dim over all FSDP axes."""
+    fsdp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    fsdp_size = int(np.prod([mesh.shape[a] for a in fsdp]))
+
+    def one(s):
+        if s.shape and s.shape[0] % fsdp_size == 0:
+            return NamedSharding(mesh, P(fsdp, *(None,) * (len(s.shape) - 1)))
+        return NamedSharding(mesh, P(*(None,) * len(s.shape)))
+
+    return jax.tree.map(one, batch_specs)
+
+
+def cache_shardings(mesh, cache_specs, cache_axes, rules=None):
+    resolver = ShardingResolver(mesh, rules)
+
+    def one(s, axes):
+        if axes is None or len(axes) != len(s.shape):
+            return NamedSharding(mesh, P(*(None,) * len(s.shape)))
+        return NamedSharding(mesh, resolver.spec(s.shape, axes))
+
+    tree = jax.tree.map(
+        one, cache_specs, cache_axes, is_leaf=lambda x: _is_axes(x) or x is None
+    )
+    return tree, resolver
+
+
+def adamw_state_shardings(param_shard_tree, mesh):
+    """AdamW moments mirror the parameter shardings exactly (ZeRO falls out
+    of FSDP-sharded params)."""
+    scalar = NamedSharding(mesh, P())
+    return {
+        "mu": param_shard_tree,
+        "nu": param_shard_tree,
+        "step": scalar,
+    }
+
+
+def adafactor_state_shardings(params_shapes, axes_tree, mesh, rules=None):
+    """Factored stats: vr drops the last dim's axis, vc drops the
+    second-to-last dim's axis (matching repro.optim.adafactor_init)."""
+    resolver = ShardingResolver(mesh, rules)
+    scalar = NamedSharding(mesh, P())
+
+    def one(shape_struct, axes):
+        shape = shape_struct.shape
+        if len(shape) < 2:
+            return {"v": NamedSharding(mesh, resolver.spec(shape, axes))}
+        r, c = len(shape) - 2, len(shape) - 1
+        row_shape = tuple(d for i, d in enumerate(shape) if i != c)
+        row_axes = tuple(a for i, a in enumerate(axes) if i != c)
+        col_shape = tuple(d for i, d in enumerate(shape) if i != r)
+        col_axes = tuple(a for i, a in enumerate(axes) if i != r)
+        return {
+            "vr": NamedSharding(mesh, resolver.spec(row_shape, row_axes)),
+            "vc": NamedSharding(mesh, resolver.spec(col_shape, col_axes)),
+        }
+
+    v = jax.tree.map(one, params_shapes, axes_tree, is_leaf=None)
+    return {"v": v, "step": scalar}

@@ -1,0 +1,146 @@
+"""End-to-end training driver.
+
+Runs on anything from 1 CPU (reduced configs; the CI path and
+examples/train_lm.py) to the production mesh (full configs on TPU pods):
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama_1b \
+      --reduced --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ck --resume auto
+
+Features: cosine-schedule AdamW/Adafactor, grad clipping, optional int8
+error-feedback gradient compression, deterministic sharded data, async
+checkpointing + auto-resume (restart-from-latest), loss logging.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokens import TokenStream
+from repro.distributed.fault_tolerance import FaultTolerantRunner
+from repro.models.config import ShapeConfig
+from repro.models.registry import build_model, load_arch
+from repro.optim.compression import ef_allreduce, init_error_state
+from repro.optim.optimizers import OptimConfig, make_optimizer
+
+
+def make_train_step(model, opt_update, compress: bool = False):
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(state["params"], batch)
+        if compress:
+            grads, new_err = ef_allreduce(grads, state["err"])
+        new_params, new_opt, metrics = opt_update(
+            grads, state["opt"], state["params"]
+        )
+        new_state = {"params": new_params, "opt": new_opt}
+        if compress:
+            new_state["err"] = new_err
+        return new_state, {"loss": loss, **metrics}
+
+    return jax.jit(train_step, donate_argnums=(0,))
+
+
+def train(
+    arch: str = "tinyllama_1b",
+    reduced: bool = True,
+    steps: int = 50,
+    batch: int = 8,
+    seq: int = 128,
+    lr: float = 3e-4,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 25,
+    compress: bool = False,
+    seed: int = 0,
+    log_every: int = 10,
+    opt_kind: str = "adamw",
+):
+    cfg, model = load_arch(arch, reduced=reduced)
+    ocfg = OptimConfig(kind=opt_kind, lr=lr, warmup_steps=max(steps // 10, 1), total_steps=steps)
+    opt_init, opt_update = make_optimizer(ocfg)
+    params, _ = model.init(jax.random.PRNGKey(seed))
+    state = {"params": params, "opt": opt_init(params)}
+    if compress:
+        state["err"] = init_error_state(params)
+    step_fn = make_train_step(model, opt_update, compress=compress)
+
+    stream = TokenStream(cfg.vocab_size, seq, batch, seed=seed)
+    shape = ShapeConfig("cli", seq, batch, "train")
+    needs_frames = cfg.is_encoder_decoder
+    needs_patches = cfg.frontend == "vit_stub"
+    rng = np.random.default_rng(seed)
+
+    def batches(step):
+        b = stream.batch_at(step)
+        b = {k: jnp.asarray(v) for k, v in b.items()}
+        if needs_frames:
+            b["frames"] = jnp.asarray(
+                rng.standard_normal((batch, seq, cfg.frontend_dim)), jnp.float32
+            )
+        if needs_patches:
+            b["patch_embeds"] = jnp.asarray(
+                rng.standard_normal(
+                    (batch, cfg.num_prefix_tokens, cfg.frontend_dim)
+                ),
+                jnp.float32,
+            )
+        return b
+
+    losses = []
+    t0 = time.time()
+    if ckpt_dir:
+        runner = FaultTolerantRunner(step_fn, state, ckpt_dir, ckpt_every=ckpt_every)
+        metrics = runner.run(batches, steps)
+        losses = [float(m["loss"]) for m in metrics]
+        state = runner.state
+    else:
+        for step in range(steps):
+            state, m = step_fn(state, batches(step))
+            losses.append(float(m["loss"]))
+            if step % log_every == 0:
+                print(
+                    f"step {step:5d}  loss {losses[-1]:.4f}  "
+                    f"lr {float(m['lr']):.2e}  gnorm {float(m['grad_norm']):.2f}"
+                )
+    dt = time.time() - t0
+    print(
+        f"[train] {arch} {'reduced' if reduced else 'full'}: "
+        f"{steps} steps in {dt:.1f}s; loss {losses[0]:.4f} -> {losses[-1]:.4f}"
+    )
+    return state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama_1b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--opt", default="adamw", choices=["adamw", "adafactor"])
+    args = ap.parse_args()
+    train(
+        arch=args.arch,
+        reduced=args.reduced,
+        steps=args.steps,
+        batch=args.batch,
+        seq=args.seq,
+        lr=args.lr,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        compress=args.compress,
+        opt_kind=args.opt,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES, ShardingResolver
+from repro.models.registry import ARCH_IDS, build_model, load_arch
+
+__all__ = [
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "ShardingResolver",
+    "ARCH_IDS",
+    "build_model",
+    "load_arch",
+]

@@ -1,0 +1,203 @@
+"""Model configuration + logical->physical sharding resolution.
+
+Every parameter carries a tuple of *logical* axis names; `resolve_rules`
+maps them to mesh axes with divisibility validation (e.g. gemma's 8 query
+heads cannot split over a 16-way `model` axis -> that dim falls back to
+replicated and the fallback is recorded for the roofline notes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | vlm | ssm | hybrid | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    mlp_kind: str = "swiglu"  # swiglu | geglu | gelu
+    norm_kind: str = "rmsnorm"  # rmsnorm | nonparam_ln
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 2
+    moe_dense_residual: bool = False  # arctic: dense FFN in parallel w/ MoE
+    dense_ff: int = 0
+    capacity_factor: float = 1.0
+    moe_dispatch: str = "einsum"  # einsum (Mesh-TF) | gather (scatter-based)
+    # ssm / hybrid
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    attn_every: int = 0  # zamba2: shared attention block cadence
+    slstm_every: int = 0  # xlstm: sLSTM cadence (rest mLSTM)
+    # enc-dec
+    is_encoder_decoder: bool = False
+    enc_layers: int = 0
+    # frontends (stubs per assignment)
+    frontend: str = ""  # "" | vit_stub | audio_stub
+    num_prefix_tokens: int = 0
+    frontend_dim: int = 0
+    rope_theta: float = 10000.0
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    attn_chunk: int = 2048  # chunked attention above this seq len
+    ssm_chunk: int = 256  # SSD / mLSTM chunk length
+    tie_embeddings: bool = False
+    # Dry-run costing knob: XLA's HLO cost analysis counts a while-loop
+    # body ONCE regardless of trip count (verified in EXPERIMENTS.md
+    # §Dry-run), so the dry-run unrolls layer scans and inner
+    # attention/SSD chunk scans to obtain true per-step FLOPs/bytes.
+    unroll_scans: bool = False
+
+    def layer_unroll(self, n: int) -> int:
+        return n if self.unroll_scans else 1
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks), for 6ND."""
+        e, h, kv, dh, f, v = (
+            self.d_model,
+            self.num_heads,
+            self.num_kv_heads,
+            self.resolved_head_dim,
+            self.d_ff,
+            self.vocab_size,
+        )
+        n = v * e  # embed
+        if not self.tie_embeddings:
+            n += v * e  # lm head
+        per_attn = e * h * dh + 2 * e * kv * dh + h * dh * e
+        if self.family in ("ssm",):
+            # mLSTM block: qkv/gates up-down projections (factor-2 inner)
+            inner = 2 * e
+            per_block = 3 * e * inner + inner * e + 4 * e * inner
+            n += self.num_layers * per_block
+            return n
+        gates = 3 if self.mlp_kind in ("swiglu", "geglu") else 2
+        if self.num_experts:
+            per_ffn = self.num_experts * gates * e * f
+            if self.moe_dense_residual:
+                per_ffn += gates * e * self.dense_ff
+            per_ffn += e * self.num_experts  # router
+        else:
+            per_ffn = gates * e * f
+        layers = self.num_layers + self.enc_layers
+        if self.family == "hybrid":
+            # mamba2 per-layer + one shared attention block
+            d_inner = 2 * e
+            per_m = e * (2 * d_inner) + d_inner * e + d_inner * (
+                2 * self.ssm_state
+            )
+            n += self.num_layers * (per_m + gates * e * f)
+            n += per_attn  # shared block
+            return n
+        n += layers * (per_attn + per_ffn)
+        return n
+
+    def active_param_count(self) -> int:
+        """Active (per-token) params for MoE (6*N_active*D)."""
+        if not self.num_experts:
+            return self.param_count()
+        e, f = self.d_model, self.d_ff
+        gates = 3 if self.mlp_kind in ("swiglu", "geglu") else 2
+        total = self.param_count()
+        inactive = (
+            (self.num_experts - self.num_experts_per_tok)
+            * gates
+            * e
+            * f
+            * self.num_layers
+        )
+        return total - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str  # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+# --------------------------------------------------------- sharding rules
+# logical axis -> preferred mesh axes, in priority order.  "fsdp" expands to
+# ("pod", "data") on the multi-pod mesh and ("data",) on a single pod.
+DEFAULT_RULES = {
+    "batch": ("fsdp",),
+    "vocab": ("model",),
+    "embed": ("fsdp",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "dense_mlp": ("model",),
+    "layers": (),
+    "head_dim": (),
+    "state": (),
+    "seq": (),
+    "cache_seq": (),
+    "chunk": (),
+}
+
+
+class ShardingResolver:
+    """Maps logical axis tuples to PartitionSpecs for a given mesh."""
+
+    def __init__(self, mesh, rules=None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES, **(rules or {}))
+        self.fsdp_axes = (
+            ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        )
+        self.fallbacks: list = []  # (logical, dim_size, axes) records
+
+    def _expand(self, axes):
+        out = []
+        for ax in axes:
+            out.extend(self.fsdp_axes if ax == "fsdp" else (ax,))
+        return tuple(out)
+
+    def _axes_size(self, axes) -> int:
+        size = 1
+        for ax in axes:
+            size *= self.mesh.shape[ax]
+        return size
+
+    def spec(self, shape, logical) -> P:
+        assert len(shape) == len(logical), (shape, logical)
+        used = set()
+        entries = []
+        for dim, name in zip(shape, logical):
+            axes = self._expand(self.rules.get(name, ()))
+            axes = tuple(a for a in axes if a not in used)
+            if axes and dim % self._axes_size(axes) == 0:
+                used.update(axes)
+                entries.append(axes if len(axes) > 1 else axes[0])
+            else:
+                if axes:
+                    self.fallbacks.append((name, dim, axes))
+                entries.append(None)
+        return P(*entries)

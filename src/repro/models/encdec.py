@@ -1,0 +1,238 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+Per the assignment the modality frontend is a STUB: `input_specs()` supplies
+precomputed audio frame embeddings (B, S_enc, frontend_dim); a single linear
+projection maps them into the encoder width.  Encoder = bidirectional
+self-attention blocks; decoder = causal self-attention + cross-attention.
+Decode shapes lower `decode_step` with a self-attn KV cache plus the
+precomputed cross-attention K/V of the encoded source.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+def _cross_attention_init(rng, cfg):
+    return L.attention_init(rng, cfg)
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.is_encoder_decoder
+        self.cfg = cfg
+
+    def init(self, rng):
+        cfg = self.cfg
+        r_front, r_enc, r_dec, r_embed, r_head = jax.random.split(rng, 5)
+
+        def enc_block(r):
+            ra, rm = jax.random.split(r)
+            p, a = {}, {}
+            p["attn"], a["attn"] = L.attention_init(ra, cfg)
+            p["mlp"], a["mlp"] = L.mlp_init(rm, cfg)
+            p["ln1"], a["ln1"] = L.norm_init(cfg)
+            p["ln2"], a["ln2"] = L.norm_init(cfg)
+            return p, a
+
+        def dec_block(r):
+            ra, rc, rm = jax.random.split(r, 3)
+            p, a = {}, {}
+            p["self_attn"], a["self_attn"] = L.attention_init(ra, cfg)
+            p["cross_attn"], a["cross_attn"] = _cross_attention_init(rc, cfg)
+            p["mlp"], a["mlp"] = L.mlp_init(rm, cfg)
+            p["ln1"], a["ln1"] = L.norm_init(cfg)
+            p["ln2"], a["ln2"] = L.norm_init(cfg)
+            p["ln3"], a["ln3"] = L.norm_init(cfg)
+            return p, a
+
+        def stack(r, n, fn):
+            rr = jax.random.split(r, n)
+            per = [fn(x) for x in rr]
+            p = jax.tree.map(lambda *xs: jnp.stack(xs), *[q for q, _ in per])
+            a = jax.tree.map(
+                lambda ax: ("layers",) + ax,
+                per[0][1],
+                is_leaf=lambda t: isinstance(t, tuple),
+            )
+            return p, a
+
+        enc_p, enc_a = stack(r_enc, cfg.enc_layers, enc_block)
+        dec_p, dec_a = stack(r_dec, cfg.num_layers, dec_block)
+        params = {
+            "frontend": jax.random.normal(
+                r_front, (cfg.frontend_dim, cfg.d_model), cfg.dtype
+            )
+            * 0.02,
+            "encoder": enc_p,
+            "decoder": dec_p,
+            "embed": jax.random.normal(
+                r_embed, (cfg.vocab_size, cfg.d_model), cfg.dtype
+            )
+            * 0.02,
+            "ln_enc": L.norm_init(cfg)[0],
+            "ln_dec": L.norm_init(cfg)[0],
+            "lm_head": jax.random.normal(
+                r_head, (cfg.d_model, cfg.vocab_size), cfg.dtype
+            )
+            * 0.02,
+        }
+        axes = {
+            "frontend": (None, "embed"),
+            "encoder": enc_a,
+            "decoder": dec_a,
+            "embed": ("vocab", "embed"),
+            "ln_enc": L.norm_init(cfg)[1],
+            "ln_dec": L.norm_init(cfg)[1],
+            "lm_head": ("embed", "vocab"),
+        }
+        return params, axes
+
+    # ------------------------------------------------------------ encode
+    def encode(self, params, frames):
+        cfg = self.cfg
+        h = (frames.astype(cfg.dtype) @ params["frontend"]).astype(cfg.dtype)
+        positions = jnp.arange(h.shape[1])[None, :]
+
+        def body(hh, bp):
+            x = L.apply_norm(hh, bp.get("ln1"), cfg.norm_kind)
+            attn, _ = L.attention_forward(
+                bp["attn"], x, cfg, positions, bidirectional=True
+            )
+            hh = hh + attn
+            x = L.apply_norm(hh, bp.get("ln2"), cfg.norm_kind)
+            return hh + L.mlp_forward(bp["mlp"], x, cfg), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        h, _ = jax.lax.scan(
+            body_fn, h, params["encoder"],
+            unroll=cfg.layer_unroll(cfg.enc_layers),
+        )
+        return L.apply_norm(h, params.get("ln_enc"), cfg.norm_kind)
+
+    def _cross_attend(self, bp, x, enc_out, cfg):
+        q = jnp.einsum("bse,ehd->bshd", x, bp["cross_attn"]["wq"])
+        k = jnp.einsum("bse,ekd->bskd", enc_out, bp["cross_attn"]["wk"])
+        v = jnp.einsum("bse,ekd->bskd", enc_out, bp["cross_attn"]["wv"])
+        kr = L._repeat_kv(k, cfg.num_heads)
+        vr = L._repeat_kv(v, cfg.num_heads)
+        scale = 1.0 / float(np.sqrt(q.shape[-1]))
+        sc = jnp.einsum("bqhd,bkhd->bhqk", q, kr) * scale
+        probs = jax.nn.softmax(sc.astype(jnp.float32), -1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, vr)
+        return jnp.einsum("bshd,hde->bse", out, bp["cross_attn"]["wo"])
+
+    # ------------------------------------------------------------ decode
+    def forward(self, params, batch):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        h = (params["embed"][tokens] * float(np.sqrt(cfg.d_model))).astype(cfg.dtype)
+        positions = jnp.arange(tokens.shape[1])[None, :]
+
+        def body(hh, bp):
+            x = L.apply_norm(hh, bp.get("ln1"), cfg.norm_kind)
+            attn, _ = L.attention_forward(bp["self_attn"], x, cfg, positions)
+            hh = hh + attn
+            x = L.apply_norm(hh, bp.get("ln2"), cfg.norm_kind)
+            hh = hh + self._cross_attend(bp, x, enc_out, cfg)
+            x = L.apply_norm(hh, bp.get("ln3"), cfg.norm_kind)
+            return hh + L.mlp_forward(bp["mlp"], x, cfg), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        h, _ = jax.lax.scan(
+            body_fn, h, params["decoder"],
+            unroll=cfg.layer_unroll(cfg.num_layers),
+        )
+        h = L.apply_norm(h, params.get("ln_dec"), cfg.norm_kind)
+        logits = L.shard_hint(
+            jnp.einsum("bse,ev->bsv", h, params["lm_head"]),
+            "batch", None, "vocab",
+        )
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, _ = self.forward(params, batch)
+        return L.vocab_parallel_ce(logits, batch["labels"])
+
+    def decode_step(self, params, cache, tokens):
+        """Single-token decode with self-attn KV cache + fixed cross K/V."""
+        cfg = self.cfg
+        h = (params["embed"][tokens] * float(np.sqrt(cfg.d_model))).astype(cfg.dtype)
+        idx = cache["index"]
+
+        def body(hh, inputs):
+            bp, ck, cv, xk, xv = inputs
+            x = L.apply_norm(hh, bp.get("ln1"), cfg.norm_kind)
+            attn, ck, cv = L.attention_decode(bp["self_attn"], x, ck, cv, idx, cfg)
+            hh = hh + attn
+            x = L.apply_norm(hh, bp.get("ln2"), cfg.norm_kind)
+            # cross-attention against precomputed enc K/V
+            q = jnp.einsum("bse,ehd->bshd", x, bp["cross_attn"]["wq"])
+            kr = L._repeat_kv(xk, cfg.num_heads)
+            vr = L._repeat_kv(xv, cfg.num_heads)
+            scale = 1.0 / float(np.sqrt(q.shape[-1]))
+            sc = jnp.einsum("bqhd,bkhd->bhqk", q, kr) * scale
+            probs = jax.nn.softmax(sc.astype(jnp.float32), -1).astype(x.dtype)
+            out = jnp.einsum("bhqk,bkhd->bqhd", probs, vr)
+            hh = hh + jnp.einsum("bshd,hde->bse", out, bp["cross_attn"]["wo"])
+            x = L.apply_norm(hh, bp.get("ln3"), cfg.norm_kind)
+            hh = hh + L.mlp_forward(bp["mlp"], x, cfg)
+            return hh, (ck, cv)
+
+        h, (ks, vs) = jax.lax.scan(
+            body,
+            h,
+            (
+                params["decoder"],
+                cache["k"],
+                cache["v"],
+                cache["cross_k"],
+                cache["cross_v"],
+            ),
+            unroll=cfg.layer_unroll(cfg.num_layers),
+        )
+        h = L.apply_norm(h, params.get("ln_dec"), cfg.norm_kind)
+        logits = jnp.einsum("be,ev->bv", h[:, -1], params["lm_head"])
+        return logits, dict(cache, k=ks, v=vs, index=idx + 1)
+
+    # ------------------------------------------------------------ specs
+    def input_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        specs = {
+            "frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), jnp.float32),
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return specs
+
+    def decode_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        kv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        nl = cfg.num_layers
+        cache = {
+            "k": jax.ShapeDtypeStruct((nl, b, s, kv, dh), cfg.dtype),
+            "v": jax.ShapeDtypeStruct((nl, b, s, kv, dh), cfg.dtype),
+            "cross_k": jax.ShapeDtypeStruct((nl, b, s, kv, dh), cfg.dtype),
+            "cross_v": jax.ShapeDtypeStruct((nl, b, s, kv, dh), cfg.dtype),
+            "index": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        return cache, jax.ShapeDtypeStruct((b, 1), jnp.int32)
+
+    def cache_logical_axes(self):
+        kv_axes = ("layers", "batch", "cache_seq", "kv", "head_dim")
+        return {
+            "k": kv_axes,
+            "v": kv_axes,
+            "cross_k": kv_axes,
+            "cross_v": kv_axes,
+            "index": (),
+        }

@@ -1,0 +1,378 @@
+"""Mamba2 (SSD — state-space dual, chunked) + Zamba2 hybrid.
+
+The SSD recurrence per head (state S in R^{P x N}):
+
+    S_t = exp(dt_t * A) S_{t-1} + dt_t * x_t B_t^T        y_t = C_t S_t
+
+is evaluated chunk-parallel: within a chunk the output is an attention-like
+contraction weighted by cumulative decays; across chunks a small carried
+state flows through `lax.scan`.  Per-chunk cost O(c^2 (N + P)); state
+O(H P N) — this is what makes the `long_500k` decode shape tractable
+(no KV cache; see DESIGN.md §2.4).
+
+Zamba2: `attn_every` Mamba2 layers per group followed by ONE SHARED
+full-attention block (same parameters every application, Zamba-style);
+groups run under an outer scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+CHUNK = 256
+CONV_K = 4
+
+
+def _mamba_block_init(rng, cfg: ModelConfig):
+    e = cfg.d_model
+    d_inner = 2 * e
+    n = cfg.ssm_state
+    heads = cfg.ssm_heads or max(1, d_inner // 64)
+    p = d_inner // heads
+    k1, k2, k3, k4, k5, k6 = jax.random.split(rng, 6)
+    sd = 1.0 / float(np.sqrt(e))
+    params = {
+        # fused input projection: [x, z, B, C, dt]
+        "in_x": jax.random.normal(k1, (e, d_inner), cfg.dtype) * sd,
+        "in_z": jax.random.normal(k2, (e, d_inner), cfg.dtype) * sd,
+        "in_bc": jax.random.normal(k3, (e, 2 * n), cfg.dtype) * sd,
+        "in_dt": jax.random.normal(k4, (e, heads), cfg.dtype) * sd,
+        "conv_w": jax.random.normal(k5, (CONV_K, d_inner), cfg.dtype) * 0.2,
+        "a_log": jnp.zeros((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "out": jax.random.normal(k6, (d_inner, e), cfg.dtype)
+        * sd
+        / float(np.sqrt(cfg.num_layers)),
+        "ln": {"scale": jnp.zeros((e,), cfg.dtype)},
+    }
+    axes = {
+        "in_x": ("embed", "mlp"),
+        "in_z": ("embed", "mlp"),
+        "in_bc": ("embed", "state"),
+        "in_dt": ("embed", "heads"),
+        "conv_w": (None, "mlp"),
+        "a_log": ("heads",),
+        "dt_bias": ("heads",),
+        "out": ("mlp", "embed"),
+        "ln": {"scale": ("embed",)},
+    }
+    return params, axes
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv: x (B, S, D), w (K, D)."""
+    k = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pads[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    return out
+
+
+def _ssd_chunked(xh, dt, bmat, cmat, a_log, state0=None, chunk=CHUNK, unroll=False):
+    """Chunk-parallel SSD scan.
+
+    xh: (B, S, H, P)  dt: (B, S, H)  bmat/cmat: (B, S, N)  a_log: (H,)
+    Returns (y (B, S, H, P), final state (B, H, P, N)).
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    c = min(chunk, s)
+    nc = s // c
+    assert s % c == 0, (s, c)
+
+    xc = xh.reshape(b, nc, c, h, p)
+    dtc = dt.reshape(b, nc, c, h)
+    bc = bmat.reshape(b, nc, c, n)
+    cc = cmat.reshape(b, nc, c, n)
+    neg_a = -jnp.exp(a_log)  # (H,) continuous-time decay < 0
+    dta = dtc * neg_a  # (B, nc, c, H) log decays
+    lcum = jnp.cumsum(dta, axis=2)  # inclusive cumulative log decay
+
+    # intra-chunk: W[b,i,j,h] = exp(l_i - l_j) for i >= j
+    tri = jnp.tril(jnp.ones((c, c), bool))
+
+    def chunk_step(state, inputs):
+        x_k, dt_k, b_k, c_k, l_k, dta_k = inputs
+        # scores (B, c, c): C_i . B_j
+        scores = jnp.einsum("bin,bjn->bij", c_k, b_k)
+        decay = jnp.exp(
+            jnp.clip(l_k[:, :, None, :] - l_k[:, None, :, :], -60.0, 0.0)
+        )  # (B, c, c, H) valid for i >= j
+        w = scores[..., None] * decay * jnp.where(tri[None, ..., None], 1.0, 0.0)
+        xbar = dt_k[..., None] * x_k  # (B, c, H, P)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xbar)
+        # inter-chunk: y_inter_i = C_i (exp(l_i) * S_prev)
+        y_inter = jnp.einsum("bin,bih,bhpn->bihp", c_k, jnp.exp(l_k), state)
+        # state update: S_new = exp(l_c) S_prev + sum_j exp(l_c - l_j) xbar_j B_j^T
+        total = l_k[:, -1, :]  # (B, H)
+        carry_decay = jnp.exp(
+            jnp.clip(total[:, None, :] - l_k, -60.0, 0.0)
+        )  # (B, c, H)
+        s_in = jnp.einsum("bjh,bjhp,bjn->bhpn", carry_decay, xbar, b_k)
+        state = jnp.exp(total)[..., None, None] * state + s_in
+        return state, y_intra + y_inter
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    swap = lambda t: jnp.swapaxes(t, 0, 1)  # scan over chunks
+    state, ys = jax.lax.scan(
+        chunk_step,
+        state0,
+        (swap(xc), swap(dtc), swap(bc), swap(cc), swap(lcum), swap(dta)),
+        # NOT unrolled even in dry-run costing: the intra-chunk einsums are
+        # ~1-2% of SSD FLOPs at c=256 (projections dominate), and full
+        # unrolling explodes compile time (EXPERIMENTS.md §Dry-run caveat).
+        unroll=1,
+    )
+    y = jnp.swapaxes(ys, 0, 1).reshape(b, s, h, p)
+    return y.astype(xh.dtype), state
+
+
+def mamba_block_forward(params, h, cfg, state=None, conv_state=None):
+    """h: (B, S, E).  Returns (out, (ssm_state, conv_state))."""
+    b, s, e = h.shape
+    d_inner = 2 * e
+    heads = cfg.ssm_heads or max(1, d_inner // 64)
+    p = d_inner // heads
+    x = L.rms_norm(h, params["ln"]["scale"])
+    xb = x @ params["in_x"]  # (B, S, 2E)
+    z = jax.nn.silu(x @ params["in_z"])
+    if conv_state is not None:
+        # decode: roll conv window
+        window = jnp.concatenate([conv_state, xb], axis=1)[:, -CONV_K:]
+        conv_out = jnp.einsum("bkd,kd->bd", window, params["conv_w"])[:, None]
+        new_conv_state = window[:, 1:]
+    else:
+        conv_out = _causal_conv(xb, params["conv_w"])
+        new_conv_state = xb[:, -(CONV_K - 1) :]
+    xb = jax.nn.silu(conv_out)
+    bc = x @ params["in_bc"]
+    bmat, cmat = jnp.split(bc, 2, axis=-1)  # (B, S, N) each
+    dt = jax.nn.softplus(
+        (x @ params["in_dt"]).astype(jnp.float32) + params["dt_bias"]
+    )  # (B, S, H)
+    xh = xb.reshape(b, s, heads, p)
+    if s == 1 and state is not None:
+        # recurrent single-step decode
+        neg_a = -jnp.exp(params["a_log"])
+        decay = jnp.exp(dt[:, 0] * neg_a)  # (B, H)
+        xbar = dt[:, 0, :, None] * xh[:, 0]  # (B, H, P)
+        state = decay[..., None, None] * state + jnp.einsum(
+            "bhp,bn->bhpn", xbar, bmat[:, 0]
+        )
+        y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0], state)[:, None]
+        y = y.reshape(b, 1, d_inner).astype(h.dtype)
+    else:
+        y, state = _ssd_chunked(
+            xh,
+            dt,
+            bmat,
+            cmat,
+            params["a_log"],
+            state0=state,
+            chunk=cfg.ssm_chunk,
+            unroll=cfg.unroll_scans,
+        )
+        y = y.reshape(b, s, d_inner)
+    out = (y * z) @ params["out"]
+    return h + out, (state, new_conv_state)
+
+
+class Zamba2Hybrid:
+    """Mamba2 backbone + shared attention block every `attn_every` layers."""
+
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.num_layers % cfg.attn_every == 0, (
+            cfg.num_layers,
+            cfg.attn_every,
+        )
+        self.cfg = cfg
+        self.groups = cfg.num_layers // cfg.attn_every
+
+    def init(self, rng):
+        cfg = self.cfg
+        r_embed, r_m, r_a, r_mlp, r_head = jax.random.split(rng, 5)
+
+        def group_init(r):
+            rr = jax.random.split(r, cfg.attn_every)
+            per = [_mamba_block_init(x, cfg) for x in rr]
+            p = jax.tree.map(lambda *xs: jnp.stack(xs), *[q for q, _ in per])
+            a = jax.tree.map(
+                lambda ax: ("layers",) + ax,
+                per[0][1],
+                is_leaf=lambda x: isinstance(x, tuple),
+            )
+            return p, a
+
+        rg = jax.random.split(r_m, self.groups)
+        per_g = [group_init(x) for x in rg]
+        mamba = jax.tree.map(lambda *xs: jnp.stack(xs), *[p for p, _ in per_g])
+        mamba_axes = jax.tree.map(
+            lambda ax: ("layers",) + ax,
+            per_g[0][1],
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+        attn_p, attn_a = L.attention_init(r_a, cfg)
+        mlp_p, mlp_a = L.mlp_init(r_mlp, cfg)
+        params = {
+            "embed": jax.random.normal(
+                r_embed, (cfg.vocab_size, cfg.d_model), cfg.dtype
+            )
+            * 0.02,
+            "mamba": mamba,
+            "shared_attn": attn_p,
+            "shared_ln1": {"scale": jnp.zeros((cfg.d_model,), cfg.dtype)},
+            "shared_mlp": mlp_p,
+            "shared_ln2": {"scale": jnp.zeros((cfg.d_model,), cfg.dtype)},
+            "ln_f": {"scale": jnp.zeros((cfg.d_model,), cfg.dtype)},
+            "lm_head": jax.random.normal(
+                r_head, (cfg.d_model, cfg.vocab_size), cfg.dtype
+            )
+            * 0.02,
+        }
+        axes = {
+            "embed": ("vocab", "embed"),
+            "mamba": mamba_axes,
+            "shared_attn": attn_a,
+            "shared_ln1": {"scale": ("embed",)},
+            "shared_mlp": mlp_a,
+            "shared_ln2": {"scale": ("embed",)},
+            "ln_f": {"scale": ("embed",)},
+            "lm_head": ("embed", "vocab"),
+        }
+        return params, axes
+
+    def _shared_attn_block(self, params, h, positions):
+        cfg = self.cfg
+        x = L.rms_norm(h, params["shared_ln1"]["scale"])
+        attn_out, kv = L.attention_forward(params["shared_attn"], x, cfg, positions)
+        h = h + attn_out
+        x = L.rms_norm(h, params["shared_ln2"]["scale"])
+        return h + L.mlp_forward(params["shared_mlp"], x, cfg), kv
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        h = (params["embed"][tokens] * float(np.sqrt(cfg.d_model))).astype(cfg.dtype)
+        positions = jnp.arange(tokens.shape[1])[None, :]
+
+        def group(hh, group_params):
+            def layer(hhh, lp):
+                hhh, _ = mamba_block_forward(lp, hhh, cfg)
+                return hhh, None
+
+            layer_fn = jax.checkpoint(layer) if cfg.remat else layer
+            hh, _ = jax.lax.scan(
+                layer_fn, hh, group_params,
+                unroll=cfg.layer_unroll(cfg.attn_every),
+            )
+            hh, _ = self._shared_attn_block(params, hh, positions)
+            return hh, None
+
+        h, _ = jax.lax.scan(
+            group, h, params["mamba"], unroll=cfg.layer_unroll(self.groups)
+        )
+        h = L.rms_norm(h, params["ln_f"]["scale"])
+        logits = L.shard_hint(
+            jnp.einsum("bse,ev->bsv", h, params["lm_head"]),
+            "batch", None, "vocab",
+        )
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, _ = self.forward(params, batch)
+        return L.vocab_parallel_ce(logits, batch["labels"])
+
+    # ---- serve: recurrent decode (ssm states + shared-attn KV cache) ----
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        h = (params["embed"][tokens] * float(np.sqrt(cfg.d_model))).astype(cfg.dtype)
+        idx = cache["index"]
+
+        def group(carry, inputs):
+            hh, g = carry
+            group_params, ssm_state, conv_state, ck, cv = inputs
+
+            def layer(inner, lp_state):
+                hhh = inner
+                lp, st, cst = lp_state
+                hhh, (st, cst) = mamba_block_forward(
+                    lp, hhh, cfg, state=st, conv_state=cst
+                )
+                return hhh, (st, cst)
+
+            hh, (ssm_state, conv_state) = jax.lax.scan(
+                layer,
+                hh,
+                (group_params, ssm_state, conv_state),
+                unroll=cfg.layer_unroll(cfg.attn_every),
+            )
+            x = L.rms_norm(hh, params["shared_ln1"]["scale"])
+            attn_out, ck, cv = L.attention_decode(
+                params["shared_attn"], x, ck, cv, idx, cfg
+            )
+            hh = hh + attn_out
+            x = L.rms_norm(hh, params["shared_ln2"]["scale"])
+            hh = hh + L.mlp_forward(params["shared_mlp"], x, cfg)
+            return (hh, g), (ssm_state, conv_state, ck, cv)
+
+        (h, _), (ssm, conv, ks, vs) = jax.lax.scan(
+            group,
+            (h, 0),
+            (
+                params["mamba"],
+                cache["ssm"],
+                cache["conv"],
+                cache["k"],
+                cache["v"],
+            ),
+            unroll=cfg.layer_unroll(self.groups),
+        )
+        h = L.rms_norm(h, params["ln_f"]["scale"])
+        logits = jnp.einsum("be,ev->bv", h[:, -1], params["lm_head"])
+        return logits, {
+            "ssm": ssm,
+            "conv": conv,
+            "k": ks,
+            "v": vs,
+            "index": idx + 1,
+        }
+
+    def input_specs(self, shape: ShapeConfig):
+        b, s = shape.global_batch, shape.seq_len
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return specs
+
+    def decode_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        e = cfg.d_model
+        d_inner = 2 * e
+        heads = cfg.ssm_heads or max(1, d_inner // 64)
+        p = d_inner // heads
+        g, a = self.groups, cfg.attn_every
+        kv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        cache = {
+            "ssm": jax.ShapeDtypeStruct((g, a, b, heads, p, cfg.ssm_state), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((g, a, b, CONV_K - 1, d_inner), cfg.dtype),
+            "k": jax.ShapeDtypeStruct((g, b, s, kv, dh), cfg.dtype),
+            "v": jax.ShapeDtypeStruct((g, b, s, kv, dh), cfg.dtype),
+            "index": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        return cache, jax.ShapeDtypeStruct((b, 1), jnp.int32)
+
+    def cache_logical_axes(self):
+        return {
+            "ssm": ("layers", "layers2", "batch", "heads", None, "state"),
+            "conv": ("layers", "layers2", "batch", None, "mlp"),
+            "k": ("layers", "batch", "cache_seq", "kv", "head_dim"),
+            "v": ("layers", "batch", "cache_seq", "kv", "head_dim"),
+            "index": (),
+        }

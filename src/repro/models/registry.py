@@ -1,0 +1,55 @@
+"""Model registry: family -> model class; arch id -> (config, model)."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+from repro.models.encdec import EncDecLM
+from repro.models.mamba2 import Zamba2Hybrid
+from repro.models.transformer import TransformerLM
+from repro.models.xlstm import XLSTM
+
+ARCH_IDS = (
+    "tinyllama_1b",
+    "gemma_2b",
+    "starcoder2_15b",
+    "olmo_1b",
+    "arctic_480b",
+    "phi35_moe",
+    "internvl2_26b",
+    "xlstm_1b",
+    "zamba2_1b",
+    "seamless_m4t_medium",
+    "cvlr_paper",  # the paper's own distributed-score workload
+)
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return TransformerLM(cfg)
+    if cfg.family == "audio":
+        return EncDecLM(cfg)
+    if cfg.family == "ssm":
+        return XLSTM(cfg)
+    if cfg.family == "hybrid":
+        return Zamba2Hybrid(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def load_arch(arch: str, reduced: bool = False):
+    """Returns (ModelConfig, model) for an arch id from repro.configs."""
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    cfg = mod.reduced() if reduced else mod.config()
+    return cfg, build_model(cfg)
+
+
+def param_count_exact(model) -> int:
+    """Exact parameter count via eval_shape (no allocation; works at 480B)."""
+    import jax
+
+    shapes = jax.eval_shape(lambda k: model.init(k)[0], jax.random.PRNGKey(0))
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+
+
+import numpy as np  # noqa: E402  (used by param_count_exact)

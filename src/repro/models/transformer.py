@@ -1,0 +1,279 @@
+"""Decoder-only transformer LM (dense / MoE / Arctic-residual / VLM-prefix).
+
+Layers run under `lax.scan` over stacked parameters (one HLO block for all
+layers -> small programs, fast multi-cell dry-run compiles) with optional
+remat on the block body.  Supports:
+
+  - GQA/MQA attention + RoPE (full or chunked-causal by seq length)
+  - RMSNorm / OLMo non-parametric LN
+  - SwiGLU / GeGLU / GELU MLPs
+  - top-2 einsum-dispatch MoE, optionally with Arctic's parallel dense
+    residual FFN
+  - VLM mode: stub patch embeddings prepended to the token stream
+  - KV-cache prefill + single-token decode
+
+Public API used by launch/dryrun/train/serve:
+  init, loss, forward, prefill, decode_step, input_specs, decode_specs,
+  param_logical_axes (via init's second return).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+def _split_like(rng, n):
+    return list(jax.random.split(rng, n))
+
+
+def _stack_init(rng, n_layers, init_fn):
+    """Initialize per-layer params and stack along a leading L axis."""
+    rngs = _split_like(rng, n_layers)
+    per = [init_fn(r) for r in rngs]
+    params = jax.tree.map(lambda *xs: jnp.stack(xs), *[p for p, _ in per])
+    axes = jax.tree.map(
+        lambda a: ("layers",) + a,
+        per[0][1],
+        is_leaf=lambda t: isinstance(t, tuple),
+    )
+    return params, axes
+
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- init
+    def init(self, rng):
+        cfg = self.cfg
+        r_embed, r_blocks, r_head, r_front = jax.random.split(rng, 4)
+
+        def block_init(r):
+            ra, rm, rd = jax.random.split(r, 3)
+            p, a = {}, {}
+            p["attn"], a["attn"] = L.attention_init(ra, cfg)
+            p["ln1"], a["ln1"] = L.norm_init(cfg)
+            p["ln2"], a["ln2"] = L.norm_init(cfg)
+            if cfg.num_experts:
+                p["moe"], a["moe"] = L.moe_init(rm, cfg)
+                if cfg.moe_dense_residual:
+                    p["dense"], a["dense"] = L.mlp_init(
+                        rd, cfg, d_ff=cfg.dense_ff, tag="dense_mlp"
+                    )
+            else:
+                p["mlp"], a["mlp"] = L.mlp_init(rm, cfg)
+            return p, a
+
+        blocks, block_axes = _stack_init(r_blocks, cfg.num_layers, block_init)
+        params = {
+            "embed": jax.random.normal(
+                r_embed, (cfg.vocab_size, cfg.d_model), cfg.dtype
+            )
+            * 0.02,
+            "blocks": blocks,
+            "ln_f": L.norm_init(cfg)[0],
+        }
+        axes = {
+            "embed": ("vocab", "embed"),
+            "blocks": block_axes,
+            "ln_f": L.norm_init(cfg)[1],
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = (
+                jax.random.normal(r_head, (cfg.d_model, cfg.vocab_size), cfg.dtype)
+                * 0.02
+            )
+            axes["lm_head"] = ("embed", "vocab")
+        if cfg.frontend == "vit_stub":
+            params["vit_proj"] = (
+                jax.random.normal(
+                    r_front, (cfg.frontend_dim, cfg.d_model), cfg.dtype
+                )
+                * 0.02
+            )
+            axes["vit_proj"] = ("embed", None)
+        return params, axes
+
+    # ------------------------------------------------------- block body
+    def _block(self, h, block_params, positions):
+        cfg = self.cfg
+        x = L.apply_norm(h, block_params.get("ln1"), cfg.norm_kind)
+        attn_out, _ = L.attention_forward(block_params["attn"], x, cfg, positions)
+        h = h + attn_out
+        x = L.apply_norm(h, block_params.get("ln2"), cfg.norm_kind)
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.num_experts:
+            moe_out, aux = L.moe_forward(block_params["moe"], x, cfg)
+            if cfg.moe_dense_residual:
+                moe_out = moe_out + L.mlp_forward(block_params["dense"], x, cfg)
+            h = h + moe_out
+        else:
+            h = h + L.mlp_forward(block_params["mlp"], x, cfg)
+        # pin the residual stream once per block: stops GSPMD propagation
+        # flip-flopping between layers (saves per-layer reshard collectives)
+        h = L.shard_hint(h, "batch", None, None)
+        return h, aux
+
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        h = params["embed"][tokens] * float(np.sqrt(cfg.d_model))
+        if cfg.frontend == "vit_stub":
+            prefix = batch["patch_embeds"].astype(cfg.dtype) @ params["vit_proj"]
+            h = jnp.concatenate([prefix, h], axis=1)
+        return h.astype(cfg.dtype)
+
+    # ---------------------------------------------------------- forward
+    def forward(self, params, batch):
+        """Returns (logits (B, S_total, V), aux_loss)."""
+        cfg = self.cfg
+        h = self._embed_inputs(params, batch)
+        s_total = h.shape[1]
+        positions = jnp.arange(s_total)[None, :]
+
+        def body(carry, block_params):
+            hh, aux = carry
+            hh, a = self._block(hh, block_params, positions)
+            return (hh, aux + a), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (h, aux), _ = jax.lax.scan(
+            body_fn,
+            (h, jnp.zeros((), jnp.float32)),
+            params["blocks"],
+            unroll=cfg.layer_unroll(cfg.num_layers),
+        )
+        h = L.apply_norm(h, params.get("ln_f"), cfg.norm_kind)
+        head = (
+            params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        )
+        logits = L.shard_hint(
+            jnp.einsum("bse,ev->bsv", h, head), "batch", None, "vocab"
+        )
+        return logits, aux / cfg.num_layers
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        if cfg.frontend == "vit_stub":
+            # prefix positions carry no next-token loss
+            logits = logits[:, -labels.shape[1] :]
+        return L.vocab_parallel_ce(logits, labels) + 0.01 * aux
+
+    # ------------------------------------------------------------ serve
+    def prefill(self, params, batch, max_len: int | None = None):
+        """Full forward + KV-cache build. Returns (last_logits, cache).
+
+        max_len: total cache capacity (>= prompt length); decode steps
+        write at cache["index"], so headroom must be preallocated here."""
+        cfg = self.cfg
+        h = self._embed_inputs(params, batch)
+        s_total = h.shape[1]
+        positions = jnp.arange(s_total)[None, :]
+
+        def body(hh, block_params):
+            x = L.apply_norm(hh, block_params.get("ln1"), cfg.norm_kind)
+            attn_out, (k, v) = L.attention_forward(
+                block_params["attn"], x, cfg, positions
+            )
+            hh = hh + attn_out
+            x = L.apply_norm(hh, block_params.get("ln2"), cfg.norm_kind)
+            if cfg.num_experts:
+                moe_out, _ = L.moe_forward(block_params["moe"], x, cfg)
+                if cfg.moe_dense_residual:
+                    moe_out = moe_out + L.mlp_forward(block_params["dense"], x, cfg)
+                hh = hh + moe_out
+            else:
+                hh = hh + L.mlp_forward(block_params["mlp"], x, cfg)
+            return hh, (k, v)
+
+        h, (ks, vs) = jax.lax.scan(
+            body, h, params["blocks"], unroll=cfg.layer_unroll(cfg.num_layers)
+        )
+        h = L.apply_norm(h, params.get("ln_f"), cfg.norm_kind)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("be,ev->bv", h[:, -1], head)
+        if max_len is not None and max_len > s_total:
+            pad = ((0, 0), (0, 0), (0, max_len - s_total), (0, 0), (0, 0))
+            ks = jnp.pad(ks, pad)
+            vs = jnp.pad(vs, pad)
+        return logits, {"k": ks, "v": vs, "index": jnp.asarray(s_total, jnp.int32)}
+
+    def decode_step(self, params, cache, tokens):
+        """tokens (B, 1) -> (logits (B, V), new cache).  Scan over layers."""
+        cfg = self.cfg
+        h = (params["embed"][tokens] * float(np.sqrt(cfg.d_model))).astype(cfg.dtype)
+        idx = cache["index"]
+
+        def body(hh, inputs):
+            block_params, ck, cv = inputs
+            x = L.apply_norm(hh, block_params.get("ln1"), cfg.norm_kind)
+            attn_out, ck, cv = L.attention_decode(
+                block_params["attn"], x, ck, cv, idx, cfg
+            )
+            hh = hh + attn_out
+            x = L.apply_norm(hh, block_params.get("ln2"), cfg.norm_kind)
+            if cfg.num_experts:
+                moe_out, _ = L.moe_forward(block_params["moe"], x, cfg)
+                if cfg.moe_dense_residual:
+                    moe_out = moe_out + L.mlp_forward(block_params["dense"], x, cfg)
+                hh = hh + moe_out
+            else:
+                hh = hh + L.mlp_forward(block_params["mlp"], x, cfg)
+            return hh, (ck, cv)
+
+        h, (ks, vs) = jax.lax.scan(
+            body,
+            h,
+            (params["blocks"], cache["k"], cache["v"]),
+            unroll=cfg.layer_unroll(cfg.num_layers),
+        )
+        h = L.apply_norm(h, params.get("ln_f"), cfg.norm_kind)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("be,ev->bv", h[:, -1], head)
+        return logits, {"k": ks, "v": vs, "index": idx + 1}
+
+    # ------------------------------------------------------------ specs
+    def input_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if cfg.frontend == "vit_stub":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_prefix_tokens, cfg.frontend_dim), jnp.float32
+            )
+        return specs
+
+    def decode_specs(self, shape: ShapeConfig):
+        """ShapeDtypeStructs of (cache, tokens) for serve_step lowering."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        kv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        cache = {
+            "k": jax.ShapeDtypeStruct(
+                (cfg.num_layers, b, s, kv, dh), cfg.dtype
+            ),
+            "v": jax.ShapeDtypeStruct(
+                (cfg.num_layers, b, s, kv, dh), cfg.dtype
+            ),
+            "index": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        return cache, tokens
+
+    def cache_logical_axes(self):
+        kv_axes = ("layers", "batch", "cache_seq", "kv", "head_dim")
+        return {"k": kv_axes, "v": kv_axes, "index": ()}

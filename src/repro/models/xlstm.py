@@ -1,0 +1,383 @@
+"""xLSTM: alternating mLSTM (matrix memory, chunk-parallel) and sLSTM
+(scalar memory, sequential scan) blocks — arXiv:2405.04517.
+
+Blocks are grouped for scan-friendliness: each group is
+(slstm_every - 1) mLSTM blocks + 1 sLSTM block; `num_layers` must divide.
+
+mLSTM recurrence per head (stabilized, log-space forget gates):
+
+    C_t = f_t C_{t-1} + i_t k_t v_t^T      n_t = f_t n_{t-1} + i_t k_t
+    y_t = (q_t^T C_t) / max(|q_t^T n_t|, 1)
+
+evaluated chunk-parallel exactly like SSD (cumulative log-decay weights
+within a chunk, carried (C, n) across chunks).  No KV cache ever exists —
+decode state is O(H dqk dv) per sequence, which is what makes the
+`long_500k` cell feasible (DESIGN.md §2.4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig, ShapeConfig
+
+CHUNK = 256
+DQK = 256  # per-head query/key dim (value dim = d_inner / heads)
+
+
+def _mlstm_init(rng, cfg):
+    e = cfg.d_model
+    d_inner = 2 * e
+    h = cfg.num_heads
+    dv = d_inner // h
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(rng, 7)
+    sd = 1.0 / float(np.sqrt(e))
+    params = {
+        "up": jax.random.normal(k1, (e, d_inner), cfg.dtype) * sd,
+        "gate": jax.random.normal(k2, (e, d_inner), cfg.dtype) * sd,
+        "wq": jax.random.normal(k3, (d_inner, h, DQK), cfg.dtype) * sd,
+        "wk": jax.random.normal(k4, (d_inner, h, DQK), cfg.dtype) * sd,
+        "wif": jax.random.normal(k5, (e, 2 * h), cfg.dtype) * sd,
+        "if_bias": jnp.concatenate(
+            [jnp.zeros((h,)), 3.0 * jnp.ones((h,))]
+        ).astype(jnp.float32),
+        "down": jax.random.normal(k6, (d_inner, e), cfg.dtype)
+        * sd
+        / float(np.sqrt(cfg.num_layers)),
+        "ln": {"scale": jnp.zeros((e,), cfg.dtype)},
+    }
+    axes = {
+        "up": ("embed", "mlp"),
+        "gate": ("embed", "mlp"),
+        "wq": ("mlp", "heads", "head_dim"),
+        "wk": ("mlp", "heads", "head_dim"),
+        "wif": ("embed", "heads"),
+        "if_bias": ("heads",),
+        "down": ("mlp", "embed"),
+        "ln": {"scale": ("embed",)},
+    }
+    return params, axes
+
+
+def _slstm_init(rng, cfg):
+    e = cfg.d_model
+    h = cfg.num_heads
+    dh = e // h
+    k1, k2, k3 = jax.random.split(rng, 3)
+    sd = 1.0 / float(np.sqrt(e))
+    params = {
+        # fused gates: [z, i, f, o] per head
+        "wz": jax.random.normal(k1, (e, 4, h, dh), cfg.dtype) * sd,
+        "rz": jax.random.normal(k2, (h, dh, 4, dh), cfg.dtype) * sd,
+        "bias": jnp.zeros((4, h, dh), jnp.float32),
+        "down": jax.random.normal(k3, (e, e), cfg.dtype) * sd / float(np.sqrt(cfg.num_layers)),
+        "ln": {"scale": jnp.zeros((e,), cfg.dtype)},
+    }
+    axes = {
+        "wz": ("embed", None, "heads", "head_dim"),
+        "rz": ("heads", "head_dim", None, "head_dim"),
+        "bias": (None, "heads", "head_dim"),
+        "down": ("embed", "embed2"),
+        "ln": {"scale": ("embed",)},
+    }
+    return params, axes
+
+
+def _mlstm_chunked(q, k, v, log_f, log_i, state=None, chunk=CHUNK, unroll=False):
+    """q,k: (B,S,H,DQK), v: (B,S,H,DV), log_f/log_i: (B,S,H) in log space.
+
+    Returns (y, (C, n)) with C (B,H,DQK,DV), n (B,H,DQK)."""
+    b, s, h, dqk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    nc = s // c
+    qc = q.reshape(b, nc, c, h, dqk)
+    kc = k.reshape(b, nc, c, h, dqk)
+    vc = v.reshape(b, nc, c, h, dv)
+    fc = log_f.reshape(b, nc, c, h)
+    ic = log_i.reshape(b, nc, c, h)
+    lcum = jnp.cumsum(fc, axis=2)  # inclusive cumulative log forget
+    tri = jnp.tril(jnp.ones((c, c), bool))
+
+    def step(carry, inputs):
+        C_prev, n_prev = carry
+        q_k, k_k, v_k, l_k, i_k = inputs
+        # intra: w[b,i,j,h] = exp(l_i - l_j + log_i_j) (q_i . k_j), i >= j
+        scores = jnp.einsum("bihd,bjhd->bijh", q_k, k_k) / float(np.sqrt(dqk))
+        logw = jnp.clip(l_k[:, :, None, :] - l_k[:, None, :, :] + i_k[:, None, :, :], -60.0, 20.0)
+        w = scores * jnp.exp(logw) * jnp.where(tri[None, ..., None], 1.0, 0.0)
+        y_intra = jnp.einsum("bijh,bjhv->bihv", w, v_k)
+        norm_intra = jnp.einsum("bijh,bjhd->bihd", w, k_k)
+        # inter
+        decay_i = jnp.exp(jnp.clip(l_k, -60.0, 20.0))  # (B, c, H)
+        y_inter = jnp.einsum("bihd,bih,bhdv->bihv", q_k, decay_i, C_prev) / float(np.sqrt(dqk))
+        n_inter = jnp.einsum("bihd,bih,bhd->bih", q_k, decay_i, n_prev) / float(np.sqrt(dqk))
+        # denom: |q . n_total| with n_total tracked via k-sums
+        n_intra = jnp.einsum("bihd,bihd->bih", q_k, norm_intra) / float(np.sqrt(dqk))
+        denom = jnp.maximum(jnp.abs(n_intra + n_inter), 1.0)[..., None]
+        y = (y_intra + y_inter) / denom
+        # carry update
+        total = l_k[:, -1, :]
+        cd = jnp.exp(jnp.clip(total[:, None, :] - l_k + i_k, -60.0, 20.0))  # (B,c,H)
+        C_new = jnp.exp(jnp.clip(total, -60.0, 20.0))[:, :, None, None] * C_prev + jnp.einsum(
+            "bjh,bjhd,bjhv->bhdv", cd, k_k, v_k
+        )
+        n_new = jnp.exp(jnp.clip(total, -60.0, 20.0))[:, :, None] * n_prev + jnp.einsum(
+            "bjh,bjhd->bhd", cd, k_k
+        )
+        return (C_new, n_new), y
+
+    if state is None:
+        C0 = jnp.zeros((b, h, dqk, dv), jnp.float32)
+        n0 = jnp.zeros((b, h, dqk), jnp.float32)
+    else:
+        C0, n0 = state
+    swap = lambda t: jnp.swapaxes(t, 0, 1)
+    (C, n), ys = jax.lax.scan(
+        step,
+        (C0, n0),
+        (swap(qc), swap(kc), swap(vc), swap(lcum), swap(ic)),
+        # NOT unrolled in dry-run costing (same rationale as mamba2: the
+        # intra-chunk part is ~1-2% of block FLOPs; unrolling 48x16 bodies
+        # explodes compile time)
+        unroll=1,
+    )
+    return jnp.swapaxes(ys, 0, 1).reshape(b, s, h, dv).astype(q.dtype), (C, n)
+
+
+def mlstm_forward(params, hidden, cfg, state=None):
+    b, s, e = hidden.shape
+    d_inner = 2 * e
+    h = cfg.num_heads
+    dv = d_inner // h
+    x = L.rms_norm(hidden, params["ln"]["scale"])
+    up = x @ params["up"]
+    z = jax.nn.silu(x @ params["gate"])
+    q = jnp.einsum("bsd,dhk->bshk", up, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", up, params["wk"])
+    v = up.reshape(b, s, h, dv)
+    gates = (x @ params["wif"]).astype(jnp.float32) + params["if_bias"]
+    log_i, f_raw = jnp.split(gates, 2, axis=-1)  # (B,S,H) each
+    log_f = jax.nn.log_sigmoid(f_raw)
+    if s == 1 and state is not None:
+        C_prev, n_prev = state
+        f = jnp.exp(log_f[:, 0])
+        i = jnp.exp(jnp.clip(log_i[:, 0], -60.0, 20.0))
+        C = f[..., None, None] * C_prev + i[..., None, None] * jnp.einsum(
+            "bhd,bhv->bhdv", k[:, 0], v[:, 0]
+        )
+        n = f[..., None] * n_prev + i[..., None] * k[:, 0]
+        num = jnp.einsum("bhd,bhdv->bhv", q[:, 0], C) / float(np.sqrt(DQK))
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", q[:, 0], n)) / float(np.sqrt(DQK)), 1.0
+        )
+        y = (num / den[..., None])[:, None].astype(hidden.dtype)
+        new_state = (C, n)
+    else:
+        y, new_state = _mlstm_chunked(
+            q, k, v, log_f, log_i, state,
+            chunk=cfg.ssm_chunk, unroll=cfg.unroll_scans,
+        )
+    y = y.reshape(b, s, d_inner)
+    return hidden + (y * z) @ params["down"], new_state
+
+
+def slstm_forward(params, hidden, cfg, state=None):
+    """Sequential scalar-memory LSTM with exponential gating."""
+    b, s, e = hidden.shape
+    h = cfg.num_heads
+    dh = e // h
+    x = L.rms_norm(hidden, params["ln"]["scale"])
+    zs = jnp.einsum("bse,eghd->bsghd", x, params["wz"]).astype(jnp.float32)
+
+    def step(carry, z_t):
+        c_prev, n_prev, h_prev, m_prev = carry
+        rec = jnp.einsum("bhd,hdgk->bghk", h_prev, params["rz"].astype(jnp.float32))
+        g = z_t + rec + params["bias"]
+        z_g, i_g, f_g, o_g = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+        log_f = jax.nn.log_sigmoid(f_g)
+        m_new = jnp.maximum(log_f + m_prev, i_g)
+        i_s = jnp.exp(i_g - m_new)
+        f_s = jnp.exp(log_f + m_prev - m_new)
+        c_new = f_s * c_prev + i_s * jnp.tanh(z_g)
+        n_new = f_s * n_prev + i_s
+        h_new = jax.nn.sigmoid(o_g) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    if state is None:
+        zero = jnp.zeros((b, h, dh), jnp.float32)
+        state = (zero, zero, zero, zero - 10.0)
+    state, ys = jax.lax.scan(step, state, jnp.swapaxes(zs, 0, 1))
+    y = jnp.swapaxes(ys, 0, 1).reshape(b, s, e).astype(hidden.dtype)
+    return hidden + y @ params["down"], state
+
+
+class XLSTM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.num_layers % cfg.slstm_every == 0
+        self.cfg = cfg
+        self.groups = cfg.num_layers // cfg.slstm_every
+        self.m_per_group = cfg.slstm_every - 1
+
+    def init(self, rng):
+        cfg = self.cfg
+        r_embed, r_m, r_s, r_head = jax.random.split(rng, 4)
+
+        def group_m(r):
+            rr = jax.random.split(r, self.m_per_group)
+            per = [_mlstm_init(x, cfg) for x in rr]
+            p = jax.tree.map(lambda *xs: jnp.stack(xs), *[q for q, _ in per])
+            a = jax.tree.map(
+                lambda ax: ("layers",) + ax,
+                per[0][1],
+                is_leaf=lambda t: isinstance(t, tuple),
+            )
+            return p, a
+
+        rg = jax.random.split(r_m, self.groups)
+        per_g = [group_m(x) for x in rg]
+        mparams = jax.tree.map(lambda *xs: jnp.stack(xs), *[p for p, _ in per_g])
+        maxes = jax.tree.map(
+            lambda ax: ("layers",) + ax,
+            per_g[0][1],
+            is_leaf=lambda t: isinstance(t, tuple),
+        )
+        rs = jax.random.split(r_s, self.groups)
+        per_s = [_slstm_init(x, cfg) for x in rs]
+        sparams = jax.tree.map(lambda *xs: jnp.stack(xs), *[p for p, _ in per_s])
+        saxes = jax.tree.map(
+            lambda ax: ("layers",) + ax,
+            per_s[0][1],
+            is_leaf=lambda t: isinstance(t, tuple),
+        )
+        params = {
+            "embed": jax.random.normal(
+                r_embed, (cfg.vocab_size, cfg.d_model), cfg.dtype
+            )
+            * 0.02,
+            "mlstm": mparams,
+            "slstm": sparams,
+            "ln_f": {"scale": jnp.zeros((cfg.d_model,), cfg.dtype)},
+            "lm_head": jax.random.normal(
+                r_head, (cfg.d_model, cfg.vocab_size), cfg.dtype
+            )
+            * 0.02,
+        }
+        axes = {
+            "embed": ("vocab", "embed"),
+            "mlstm": maxes,
+            "slstm": saxes,
+            "ln_f": {"scale": ("embed",)},
+            "lm_head": ("embed", "vocab"),
+        }
+        return params, axes
+
+    def forward(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        h = (params["embed"][tokens] * float(np.sqrt(cfg.d_model))).astype(cfg.dtype)
+
+        def group(hh, gp):
+            m_gp, s_gp = gp
+
+            def mlayer(hhh, lp):
+                hhh, _ = mlstm_forward(lp, hhh, cfg)
+                return hhh, None
+
+            mfn = jax.checkpoint(mlayer) if cfg.remat else mlayer
+            hh, _ = jax.lax.scan(
+                mfn, hh, m_gp, unroll=cfg.layer_unroll(self.m_per_group)
+            )
+            hh, _ = slstm_forward(s_gp, hh, cfg)
+            return hh, None
+
+        h, _ = jax.lax.scan(
+            group,
+            h,
+            (params["mlstm"], params["slstm"]),
+            unroll=cfg.layer_unroll(self.groups),
+        )
+        h = L.rms_norm(h, params["ln_f"]["scale"])
+        logits = L.shard_hint(
+            jnp.einsum("bse,ev->bsv", h, params["lm_head"]),
+            "batch", None, "vocab",
+        )
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, _ = self.forward(params, batch)
+        return L.vocab_parallel_ce(logits, batch["labels"])
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        h = (params["embed"][tokens] * float(np.sqrt(cfg.d_model))).astype(cfg.dtype)
+
+        def group(hh, inputs):
+            m_gp, s_gp, mC, mn, sc = inputs
+
+            def mlayer(hhh, lp_state):
+                lp, C, n = lp_state
+                hhh, (C, n) = mlstm_forward(lp, hhh, cfg, state=(C, n))
+                return hhh, (C, n)
+
+            hh, (mC, mn) = jax.lax.scan(
+                mlayer, hh, (m_gp, mC, mn),
+                unroll=cfg.layer_unroll(self.m_per_group),
+            )
+            hh, sc = slstm_forward(s_gp, hh, cfg, state=tuple(sc))
+            return hh, (mC, mn, jnp.stack(sc))
+
+        h, (mC, mn, sc) = jax.lax.scan(
+            group,
+            h,
+            (
+                params["mlstm"],
+                params["slstm"],
+                cache["mC"],
+                cache["mn"],
+                cache["slstm"],
+            ),
+            unroll=cfg.layer_unroll(self.groups),
+        )
+        h = L.rms_norm(h, params["ln_f"]["scale"])
+        logits = jnp.einsum("be,ev->bv", h[:, -1], params["lm_head"])
+        return logits, {
+            "mC": mC,
+            "mn": mn,
+            "slstm": sc,
+            "index": cache["index"] + 1,
+        }
+
+    def input_specs(self, shape: ShapeConfig):
+        b, s = shape.global_batch, shape.seq_len
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return specs
+
+    def decode_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        b = shape.global_batch
+        e = cfg.d_model
+        h = cfg.num_heads
+        dv = 2 * e // h
+        dh = e // h
+        g, m = self.groups, self.m_per_group
+        cache = {
+            "mC": jax.ShapeDtypeStruct((g, m, b, h, DQK, dv), jnp.float32),
+            "mn": jax.ShapeDtypeStruct((g, m, b, h, DQK), jnp.float32),
+            "slstm": jax.ShapeDtypeStruct((g, 4, b, h, dh), jnp.float32),
+            "index": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        return cache, jax.ShapeDtypeStruct((b, 1), jnp.int32)
+
+    def cache_logical_axes(self):
+        return {
+            "mC": ("layers", "layers2", "batch", "heads", None, None),
+            "mn": ("layers", "layers2", "batch", "heads", None),
+            "slstm": ("layers", None, "batch", "heads", "head_dim"),
+            "index": (),
+        }

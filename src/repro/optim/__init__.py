@@ -1,0 +1,25 @@
+from repro.optim.optimizers import (
+    OptimConfig,
+    adamw_init,
+    adamw_update,
+    adafactor_init,
+    adafactor_update,
+    make_optimizer,
+    cosine_schedule,
+    global_norm_clip,
+)
+from repro.optim.compression import compress_int8, decompress_int8, ef_allreduce
+
+__all__ = [
+    "OptimConfig",
+    "adamw_init",
+    "adamw_update",
+    "adafactor_init",
+    "adafactor_update",
+    "make_optimizer",
+    "cosine_schedule",
+    "global_norm_clip",
+    "compress_int8",
+    "decompress_int8",
+    "ef_allreduce",
+]

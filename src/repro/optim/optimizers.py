@@ -1,0 +1,150 @@
+"""Optimizers: AdamW (fp32 moments) and Adafactor-style factored second
+moment (the memory-extreme option that lets arctic-480b fit 16 GB/chip —
+see DESIGN.md §2.3).  Pure-pytree implementations, pjit/FSDP friendly:
+optimizer state mirrors the parameter sharding (same logical axes), so
+ZeRO-style sharding falls out of the normal out_shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimConfig:
+    kind: str = "adamw"  # adamw | adafactor
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_schedule(cfg: OptimConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm_clip(grads, max_norm):
+    norm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ------------------------------------------------------------------ AdamW
+def adamw_init(params):
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros32, params),
+        "nu": jax.tree.map(zeros32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(grads, state, params, cfg: OptimConfig):
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    b1, b2 = cfg.betas
+    grads, gnorm = global_norm_clip(grads, cfg.clip_norm)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        m_hat = m_new / (1 - b1 ** step.astype(jnp.float32))
+        v_hat = v_new / (1 - b2 ** step.astype(jnp.float32))
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mu": mu, "nu": nu, "step": step}, {"grad_norm": gnorm, "lr": lr}
+
+
+# -------------------------------------------------------------- Adafactor
+def _factored_dims(shape):
+    """Last two non-trivial dims, or None for vectors/scalars."""
+    if len(shape) < 2:
+        return None
+    return len(shape) - 2, len(shape) - 1
+
+
+def adafactor_init(params):
+    def init_one(p):
+        dims = _factored_dims(p.shape)
+        if dims is None:
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        r, c = dims
+        row_shape = tuple(d for i, d in enumerate(p.shape) if i != c)
+        col_shape = tuple(d for i, d in enumerate(p.shape) if i != r)
+        return {
+            "vr": jnp.zeros(row_shape, jnp.float32),
+            "vc": jnp.zeros(col_shape, jnp.float32),
+        }
+
+    return {
+        "v": jax.tree.map(init_one, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(grads, state, params, cfg: OptimConfig):
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+    grads, gnorm = global_norm_clip(grads, cfg.clip_norm)
+
+    def upd(g, v, p):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + 1e-30
+        dims = _factored_dims(p.shape)
+        if dims is None:
+            v_new = {"v": decay * v["v"] + (1 - decay) * g2}
+            precond = g32 / (jnp.sqrt(v_new["v"]) + cfg.eps)
+        else:
+            r, c = dims
+            vr = decay * v["vr"] + (1 - decay) * jnp.mean(g2, axis=c)
+            vc = decay * v["vc"] + (1 - decay) * jnp.mean(g2, axis=r)
+            v_new = {"vr": vr, "vc": vc}
+            rmean = jnp.mean(vr, axis=-1, keepdims=True)
+            rfac = jnp.expand_dims(vr / jnp.maximum(rmean, 1e-30), c)
+            cfac = jnp.expand_dims(vc, r)
+            precond = g32 * jax.lax.rsqrt(rfac * cfac + cfg.eps)
+        delta = precond + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), v_new
+
+    leaves_is = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    out = jax.tree.map(upd, grads, state["v"], params, is_leaf=None)
+    new_params = jax.tree.map(
+        lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    del leaves_is
+    return new_params, {"v": v, "step": step}, {"grad_norm": gnorm, "lr": lr}
+
+
+def make_optimizer(cfg: OptimConfig):
+    if cfg.kind == "adamw":
+        return adamw_init, partial(adamw_update, cfg=cfg)
+    if cfg.kind == "adafactor":
+        return adafactor_init, partial(adafactor_update, cfg=cfg)
+    raise ValueError(cfg.kind)

@@ -1,0 +1,11 @@
+"""Make `repro` (src layout) and `benchmarks` importable however pytest is
+invoked.  Does NOT set XLA flags — smoke tests must see 1 CPU device; the
+dry-run machinery tests spawn subprocesses with their own XLA_FLAGS."""
+
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (os.path.join(_ROOT, "src"), _ROOT):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,0 +1,70 @@
+"""Data-generation tests: SCM generator + discrete networks."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import is_dag
+from repro.data.networks import CHILD, SACHS, sample_network
+from repro.data.synthetic import generate_scm_data
+
+
+@pytest.mark.parametrize("kind", ["continuous", "mixed", "multidim"])
+def test_scm_shapes(kind):
+    ds = generate_scm_data(d=7, n=100, density=0.4, kind=kind, seed=1)
+    assert ds.data.shape == (100, sum(ds.dims))
+    assert ds.dag.shape == (7, 7)
+    assert is_dag(ds.dag)
+    assert np.all(np.isfinite(ds.data))
+    if kind == "mixed":
+        assert sum(ds.discrete) == 4  # 50% (ceil) discretized
+        for i, disc in enumerate(ds.discrete):
+            if disc:
+                col = ds.data[:, sum(ds.dims[:i])]
+                assert set(np.unique(col)) <= {1.0, 2.0, 3.0, 4.0, 5.0}
+    if kind == "multidim":
+        assert any(d > 1 for d in ds.dims)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(3, 10),
+    density=st.floats(0.2, 0.8),
+    seed=st.integers(0, 1000),
+)
+def test_scm_generator_properties(d, density, seed):
+    ds = generate_scm_data(d=d, n=50, density=density, kind="continuous", seed=seed)
+    assert is_dag(ds.dag)
+    assert np.all(np.isfinite(ds.data))
+    # determinism
+    ds2 = generate_scm_data(d=d, n=50, density=density, kind="continuous", seed=seed)
+    np.testing.assert_array_equal(ds.data, ds2.data)
+
+
+def test_network_structures():
+    assert SACHS.d == 11 and len(SACHS.edges) == 17
+    assert CHILD.d == 20 and len(CHILD.edges) == 25
+    assert is_dag(SACHS.adjacency()) and is_dag(CHILD.adjacency())
+
+
+def test_network_sampling():
+    data, adj = sample_network(SACHS, n=500, seed=0)
+    assert data.shape == (500, 11)
+    assert np.array_equal(adj, SACHS.adjacency())
+    # integer category codes, small cardinality
+    assert np.array_equal(data, np.round(data))
+    assert data.max() < 6
+    # children depend on parents: mutual information sanity on one edge
+    raf, mek = 0, 1  # Raf -> Mek in SACHS
+    joint = np.histogram2d(data[:, raf], data[:, mek], bins=4)[0] / 500
+    px = joint.sum(1, keepdims=True)
+    py = joint.sum(0, keepdims=True)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        mi = np.nansum(joint * np.log(joint / (px * py)))
+    assert mi > 0.01
+
+
+def test_network_sampling_deterministic():
+    d1, _ = sample_network(CHILD, n=100, seed=7)
+    d2, _ = sample_network(CHILD, n=100, seed=7)
+    np.testing.assert_array_equal(d1, d2)

@@ -1,0 +1,89 @@
+"""Graph-machinery tests: Meek closure, CPDAG conversion, PDAG extension."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph as g
+
+
+def _dag_from_bits(d, bits, perm):
+    a = np.zeros((d, d), dtype=np.int8)
+    k = 0
+    for i in range(d):
+        for j in range(i + 1, d):
+            if bits[k]:
+                a[perm[i], perm[j]] = 1
+            k += 1
+    return a
+
+
+def test_v_structure_is_kept():
+    # x -> z <- y, x,y non-adjacent: CPDAG keeps both arrows
+    a = np.zeros((3, 3), dtype=np.int8)
+    a[0, 2] = 1
+    a[1, 2] = 1
+    c = g.dag_to_cpdag(a)
+    assert g.has_dir(c, 0, 2) and g.has_dir(c, 1, 2)
+
+
+def test_chain_becomes_undirected():
+    # x -> y -> z: equivalence class is the undirected chain
+    a = np.zeros((3, 3), dtype=np.int8)
+    a[0, 1] = 1
+    a[1, 2] = 1
+    c = g.dag_to_cpdag(a)
+    assert g.has_undir(c, 0, 1) and g.has_undir(c, 1, 2)
+
+
+def test_pdag_to_dag_roundtrip_chain():
+    c = np.zeros((3, 3), dtype=np.int8)
+    c[0, 1] = c[1, 0] = 1
+    c[1, 2] = c[2, 1] = 1
+    dag = g.pdag_to_dag(c)
+    assert g.is_dag(dag)
+    np.testing.assert_array_equal(g.dag_to_cpdag(dag), c)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    d=st.integers(3, 6),
+    data=st.data(),
+)
+def test_cpdag_roundtrip_property(d, data):
+    """For any DAG G: every consistent extension of cpdag(G) is Markov
+    equivalent to G, i.e. cpdag(extension) == cpdag(G)."""
+    n_pairs = d * (d - 1) // 2
+    bits = data.draw(st.lists(st.booleans(), min_size=n_pairs, max_size=n_pairs))
+    perm = data.draw(st.permutations(range(d)))
+    dag = _dag_from_bits(d, bits, list(perm))
+    assert g.is_dag(dag)
+    cpdag = g.dag_to_cpdag(dag)
+    ext = g.pdag_to_dag(cpdag)
+    assert g.is_dag(ext)
+    np.testing.assert_array_equal(g.dag_to_cpdag(ext), cpdag)
+    # skeletons agree
+    np.testing.assert_array_equal(g.skeleton(ext), g.skeleton(dag))
+
+
+def test_semi_directed_blocking():
+    # y -- w -> x ; blocking {w} cuts the only path
+    a = np.zeros((3, 3), dtype=np.int8)
+    y, w, x = 0, 1, 2
+    a[y, w] = a[w, y] = 1
+    a[w, x] = 1
+    assert not g.semi_directed_blocked(a, y, x, set())
+    assert g.semi_directed_blocked(a, y, x, {w})
+    # directed against travel does not open a path
+    b = np.zeros((3, 3), dtype=np.int8)
+    b[x, w] = 1  # w <- x
+    b[y, w] = b[w, y] = 1
+    assert g.semi_directed_blocked(b, y, x, set())
+
+
+def test_random_dag_density():
+    rng = np.random.default_rng(0)
+    a = g.random_dag(30, 0.5, rng)
+    assert g.is_dag(a)
+    dens = a.sum() / (30 * 29 / 2)
+    assert 0.35 < dens < 0.65

@@ -1,0 +1,96 @@
+"""Alg. 1 (ICL) and Alg. 2 (discrete exact decomposition) tests."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kernel_fns import KernelSpec, kernel_matrix, median_heuristic_width
+from repro.core.lowrank import (
+    count_distinct_rows,
+    discrete_lowrank,
+    incomplete_cholesky,
+    lowrank_features,
+)
+
+
+def test_icl_full_rank_exact():
+    """With m_max = n and eta ~ 0, ICL reconstructs K exactly."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((40, 2))
+    spec = KernelSpec("rbf", median_heuristic_width(x))
+    k = np.asarray(kernel_matrix(x, x, spec))
+    lam, m_eff = incomplete_cholesky(x, spec, m_max=40, eta=1e-14)
+    np.testing.assert_allclose(np.asarray(lam @ lam.T), k, atol=1e-8)
+
+
+def test_icl_eta_bound():
+    """||Lam Lam^T - K||_F respects the trace-residual stopping bound."""
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((150, 1))
+    spec = KernelSpec("rbf", median_heuristic_width(x))
+    k = np.asarray(kernel_matrix(x, x, spec))
+    lam, m_eff = incomplete_cholesky(x, spec, m_max=100, eta=1e-6)
+    err = np.abs(np.asarray(lam @ lam.T) - k).max()
+    assert int(m_eff) < 100  # smooth 1-d RBF: early stop well before budget
+    assert err < 1e-3
+
+
+def test_icl_monotone_residual():
+    """More pivots -> no worse approximation (greedy is monotone)."""
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((120, 3))
+    spec = KernelSpec("rbf", median_heuristic_width(x))
+    k = np.asarray(kernel_matrix(x, x, spec))
+    errs = []
+    for m in (5, 15, 40):
+        lam, _ = incomplete_cholesky(x, spec, m_max=m, eta=0.0)
+        errs.append(np.linalg.norm(np.asarray(lam @ lam.T) - k))
+    assert errs[0] >= errs[1] >= errs[2]
+
+
+@pytest.mark.parametrize("card", [2, 3, 6])
+def test_discrete_exact(card):
+    """Lemma 4.3: for discrete data the decomposition is EXACT."""
+    rng = np.random.default_rng(3)
+    x = rng.integers(0, card, size=(200, 1)).astype(np.float64)
+    spec = KernelSpec("rbf", 1.7)
+    k = np.asarray(kernel_matrix(x, x, spec))
+    lam, m_d = discrete_lowrank(x, spec, m_max=32)
+    assert m_d <= card  # Lemma 4.1 rank bound
+    np.testing.assert_allclose(np.asarray(lam @ lam.T), k, atol=1e-7)
+
+
+def test_discrete_multivariate_exact():
+    rng = np.random.default_rng(4)
+    x = rng.integers(0, 3, size=(150, 2)).astype(np.float64)
+    spec = KernelSpec("rbf", 1.0)
+    k = np.asarray(kernel_matrix(x, x, spec))
+    lam, m_d = discrete_lowrank(x, spec, m_max=16)
+    assert m_d <= 9
+    np.testing.assert_allclose(np.asarray(lam @ lam.T), k, atol=1e-7)
+
+
+def test_count_distinct_rows_cap():
+    x = np.arange(100)[:, None].astype(float)
+    assert count_distinct_rows(x, cap=10) == 11  # early exit just past cap
+    assert count_distinct_rows(np.zeros((50, 2)), cap=10) == 1
+
+
+def test_lowrank_features_routes_discrete():
+    rng = np.random.default_rng(5)
+    x = rng.integers(0, 4, size=(300,)).astype(np.float64)
+    lam, m_eff, spec = lowrank_features(x, discrete=True, m_max=100)
+    assert m_eff <= 4
+    # centered: column means ~ 0
+    np.testing.assert_allclose(np.asarray(lam).mean(axis=0), 0.0, atol=1e-10)
+
+
+def test_lowrank_features_centering_matches_centered_kernel():
+    rng = np.random.default_rng(6)
+    x = rng.standard_normal((100, 1))
+    lam, m_eff, spec = lowrank_features(x, m_max=100, eta=1e-12)
+    from repro.core.kernel_fns import center_gram, standardize
+
+    k = kernel_matrix(standardize(x), standardize(x), spec)
+    kc = np.asarray(center_gram(k))
+    np.testing.assert_allclose(np.asarray(lam @ lam.T), kc, atol=1e-5)

@@ -1,0 +1,69 @@
+"""Roofline derivation units: model FLOPs, analytic memory, term math."""
+
+import pytest
+
+from benchmarks.roofline import (
+    analytic_hbm_bytes_per_device,
+    model_flops_per_device,
+    roofline_row,
+)
+
+MESH = {"data": 16, "model": 16}
+
+
+def test_model_flops_train_dense():
+    # tinyllama: ~1.1B params, 6ND over 256 chips
+    f = model_flops_per_device("tinyllama_1b", "train_4k", MESH)
+    tokens = 4096 * 256
+    assert 0.8 * 6 * 1.0e9 * tokens / 256 < f < 6 * 1.6e9 * tokens / 256
+
+
+def test_model_flops_moe_uses_active_params():
+    f_moe = model_flops_per_device("arctic_480b", "train_4k", MESH)
+    # active ~17B not total ~482B
+    tokens = 4096 * 256
+    assert f_moe < 6 * 40e9 * tokens / 256, "MoE must count ACTIVE params"
+    assert f_moe > 6 * 8e9 * tokens / 256
+
+
+def test_decode_flops_tiny():
+    f_train = model_flops_per_device("olmo_1b", "train_4k", MESH)
+    f_dec = model_flops_per_device("olmo_1b", "decode_32k", MESH)
+    assert f_dec < f_train / 1000  # one token vs 4096*256
+
+
+def test_analytic_memory_orders():
+    # decode reads params + cache; train moves much more (activations)
+    m_train = analytic_hbm_bytes_per_device("olmo_1b", "train_4k", MESH)
+    m_dec = analytic_hbm_bytes_per_device("olmo_1b", "decode_32k", MESH)
+    assert m_train > m_dec
+    assert m_dec > 2e9 / 256  # at least the sharded bf16 params
+
+
+def test_roofline_row_terms():
+    rec = {
+        "status": "ok",
+        "arch": "olmo_1b",
+        "shape": "train_4k",
+        "mesh": "single",
+        "mesh_shape": MESH,
+        "flops": 197e12,  # exactly 1 second of compute
+        "bytes_accessed": 819e9,  # 1 second of (pre-fusion) memory
+        "collectives": {
+            "total_collective_bytes": 50e9 * 3,
+            "all-reduce_count": 2,
+            "all-to-all_count": 1,
+        },
+        "memory": {},
+    }
+    row = roofline_row(rec)
+    assert abs(row["compute_s"] - 1.0) < 1e-9
+    assert abs(row["memory_s"] - 1.0) < 1e-9
+    assert abs(row["collective_s"] - 3.0) < 1e-9
+    assert row["bottleneck"] == "collective"
+    assert 0 < row["roofline_fraction"] <= 1.0
+
+
+def test_roofline_row_error_passthrough():
+    row = roofline_row({"status": "error", "arch": "x", "shape": "y"})
+    assert row["bottleneck"] == "ERROR"

@@ -1,0 +1,79 @@
+"""The dumbbell-form algebra is an *identity*, not an approximation:
+the CV-LR score evaluated on factors Lambda must equal the exact Eq.-8 score
+evaluated on the kernel K = Lambda Lambda^T to machine precision."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.score_exact import cv_score_from_kernels
+from repro.core.score_lowrank import cvlr_score_from_features
+from repro.core.score_common import fold_layout
+
+
+def _centered(rng, n, m, m_pad):
+    lam = rng.standard_normal((n, m))
+    lam = np.concatenate([lam, np.zeros((n, m_pad - m))], axis=1)
+    lam -= lam.mean(axis=0, keepdims=True)
+    return jnp.asarray(lam)
+
+
+@pytest.mark.parametrize("q", [2, 5, 10])
+@pytest.mark.parametrize("mx,mz", [(3, 5), (8, 8), (1, 12)])
+def test_identity_nonempty_z(q, mx, mz):
+    rng = np.random.default_rng(0)
+    n = 40 * q
+    m_pad = 16
+    lam_x = _centered(rng, n, mx, m_pad)
+    lam_z = _centered(rng, n, mz, m_pad)
+    kx = lam_x @ lam_x.T
+    kz = lam_z @ lam_z.T
+
+    _, n_eff, n0, n1, train_idx = fold_layout(n, q, seed=0)
+    assert n_eff == n
+    lm, gm = jnp.float64(0.01), jnp.float64(0.01)
+    s_exact = cv_score_from_kernels(kx, kz, jnp.asarray(train_idx), n0, n1, q, lm, gm)
+    s_lr = cvlr_score_from_features(lam_x, lam_z, q, lm, gm)
+    np.testing.assert_allclose(float(s_lr), float(s_exact), rtol=1e-9)
+
+
+def test_identity_empty_z():
+    rng = np.random.default_rng(1)
+    n, q, m_pad = 200, 10, 16
+    lam_x = _centered(rng, n, 6, m_pad)
+    kx = lam_x @ lam_x.T
+    _, n_eff, n0, n1, train_idx = fold_layout(n, q, seed=0)
+    lm, gm = jnp.float64(0.01), jnp.float64(0.01)
+    s_exact = cv_score_from_kernels(
+        kx, jnp.zeros_like(kx), jnp.asarray(train_idx), n0, n1, q, lm, gm
+    )
+    s_lr = cvlr_score_from_features(lam_x, jnp.zeros_like(lam_x), q, lm, gm)
+    np.testing.assert_allclose(float(s_lr), float(s_exact), rtol=1e-9)
+
+
+def test_zero_padding_is_exact():
+    """Appending zero columns to the factors must not change the score."""
+    rng = np.random.default_rng(2)
+    n, q = 120, 4
+    lam_x = _centered(rng, n, 5, 5)
+    lam_z = _centered(rng, n, 7, 7)
+    lm, gm = jnp.float64(0.01), jnp.float64(0.01)
+    s_small = cvlr_score_from_features(lam_x, lam_z, q, lm, gm)
+    pad = lambda a, m: jnp.concatenate([a, jnp.zeros((n, m - a.shape[1]))], axis=1)
+    s_padded = cvlr_score_from_features(pad(lam_x, 32), pad(lam_z, 32), q, lm, gm)
+    np.testing.assert_allclose(float(s_padded), float(s_small), rtol=1e-10)
+
+
+def test_lambda_gamma_general():
+    """Identity must hold for lambda != gamma too (beta != lambda)."""
+    rng = np.random.default_rng(3)
+    n, q, m_pad = 80, 4, 12
+    lam_x = _centered(rng, n, 4, m_pad)
+    lam_z = _centered(rng, n, 9, m_pad)
+    kx = lam_x @ lam_x.T
+    kz = lam_z @ lam_z.T
+    _, _, n0, n1, train_idx = fold_layout(n, q, seed=0)
+    lm, gm = jnp.float64(0.03), jnp.float64(0.007)
+    s_exact = cv_score_from_kernels(kx, kz, jnp.asarray(train_idx), n0, n1, q, lm, gm)
+    s_lr = cvlr_score_from_features(lam_x, lam_z, q, lm, gm)
+    np.testing.assert_allclose(float(s_lr), float(s_exact), rtol=1e-9)

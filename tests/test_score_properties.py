@@ -1,0 +1,83 @@
+"""Hypothesis property tests on the score's invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.score_common import ScoreConfig
+from repro.core.score_lowrank import CVLRScorer
+
+
+def _data(n=200, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    x0 = rng.standard_normal(n)
+    x1 = np.tanh(x0) + 0.3 * rng.standard_normal(n)
+    x2 = rng.standard_normal(n)
+    return np.stack([x0, x1, x2], axis=1)
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.floats(0.1, 100.0), shift=st.floats(-50.0, 50.0))
+def test_affine_invariance(scale, shift):
+    """Column z-scoring makes the score invariant to affine rescaling of
+    any variable (the kernel width heuristic sees identical data)."""
+    x = _data(seed=1)
+    cfg = ScoreConfig(seed=2)
+    s_base = CVLRScorer(x, config=cfg).local_score(1, (0,))
+    x2 = x.copy()
+    x2[:, 0] = scale * x2[:, 0] + shift
+    s_scaled = CVLRScorer(x2, config=cfg).local_score(1, (0,))
+    assert abs(s_base - s_scaled) < 1e-5 * max(1.0, abs(s_base))
+
+
+def test_determinism():
+    x = _data(seed=3)
+    cfg = ScoreConfig(seed=5)
+    a = CVLRScorer(x, config=cfg).local_score(0, (1, 2))
+    b = CVLRScorer(x, config=cfg).local_score(0, (1, 2))
+    assert a == b
+
+
+def test_constant_variable_is_finite():
+    """A degenerate (constant) conditioning variable must not blow up."""
+    x = _data(seed=4)
+    x[:, 2] = 1.0
+    sc = CVLRScorer(x, config=ScoreConfig(seed=0))
+    s = sc.local_score(0, (2,))
+    assert np.isfinite(s)
+    # conditioning on a constant ~ conditioning on nothing
+    s_empty = sc.local_score(0, ())
+    assert abs(s - s_empty) < 0.05 * abs(s_empty)
+
+
+def test_seed_changes_folds_not_conclusion():
+    """Different fold seeds perturb the score slightly but preserve the
+    parent-vs-no-parent ordering (local consistency in practice)."""
+    x = _data(n=300, seed=6)
+    for seed in (0, 1, 2):
+        sc = CVLRScorer(x, config=ScoreConfig(seed=seed))
+        assert sc.local_score(1, (0,)) > sc.local_score(1, ())
+
+
+@settings(max_examples=8, deadline=None)
+@given(perm_seed=st.integers(0, 100))
+def test_parent_order_irrelevant(perm_seed):
+    """S(X | Z) must not depend on the order the parent set is given."""
+    rng = np.random.default_rng(perm_seed)
+    x = _data(n=200, seed=7)
+    sc = CVLRScorer(x, config=ScoreConfig(seed=1))
+    pa = [0, 2]
+    rng.shuffle(pa)
+    a = sc.local_score(1, tuple(pa))
+    sc2 = CVLRScorer(x, config=ScoreConfig(seed=1))
+    b = sc2.local_score(1, (0, 2))
+    assert abs(a - b) < 1e-9 * max(1.0, abs(b))
+
+
+def test_more_pivots_never_hurt_much():
+    """Score with m=50 vs m=100 pivots should agree closely on smooth data
+    (ICL converges well before the budget)."""
+    x = _data(n=250, seed=8)
+    s50 = CVLRScorer(x, config=ScoreConfig(seed=3, m_max=50)).local_score(1, (0,))
+    s100 = CVLRScorer(x, config=ScoreConfig(seed=3, m_max=100)).local_score(1, (0,))
+    assert abs(s50 - s100) < 5e-3 * abs(s100)
