@@ -1,0 +1,131 @@
+"""GES frontier-scoring throughput: sequential per-candidate dispatch vs
+the batched engine (feature bank + Gram-block cache + chunked fold algebra).
+
+For each (d, n) cell the benchmark builds the sweep-1 GES frontier on
+synthetic SCM data — every Insert(X, Y, {}) needs (y, {x}) and (y, {})
+local scores, d^2 configurations total — and measures candidate-scores/sec
+through both paths of the SAME scorer state (features prebuilt, jit warm,
+so the comparison isolates the scoring engine).  Emits BENCH_frontier.json
+at the repo root so future PRs track the trajectory.
+
+``python -m benchmarks.frontier_scoring``            — full grid
+``python -m benchmarks.frontier_scoring --quick``    — small cells only
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_frontier.json")
+
+
+def _frontier_configs(d: int):
+    configs = [(y, ()) for y in range(d)]
+    configs += [(y, (x,)) for x in range(d) for y in range(d) if x != y]
+    return configs
+
+
+def _bench_cell(d: int, n: int, seq_cap: int, seed: int = 0) -> dict:
+    from repro.core.score_common import ScoreConfig, config_key
+    from repro.core.score_lowrank import CVLRScorer
+    from repro.data.synthetic import generate_scm_data
+
+    ds = generate_scm_data(d=d, n=n, density=0.3, kind="continuous", seed=seed)
+    configs = _frontier_configs(d)
+
+    scorer = CVLRScorer(ds.data, config=ScoreConfig(seed=seed))
+    # Feature bank built once, outside the timers: both paths read the same
+    # cached factors, so the cell measures scoring engines, not ICL.
+    t0 = time.perf_counter()
+    for v in range(d):
+        scorer.features((v,))
+    t_features = time.perf_counter() - t0
+    m_effs = [scorer.m_eff_log[(v,)] for v in range(d)]
+
+    # -- sequential oracle path: one jit dispatch + host sync per config --
+    seq_configs = configs[: min(seq_cap, len(configs))]
+    scorer._compute(*config_key(*configs[0]))  # jit warmup (not timed)
+    seq_scores = []
+    t0 = time.perf_counter()
+    for i, ps in seq_configs:
+        seq_scores.append(scorer._compute(*config_key(i, ps)))
+    t_seq = time.perf_counter() - t0
+    rate_seq = len(seq_configs) / t_seq
+
+    # -- batched engine, cold Gram cache (jit warmed on a half-size probe) --
+    warm = CVLRScorer(ds.data, config=ScoreConfig(seed=seed))
+    warm._feat_cache = scorer._feat_cache
+    warm.m_eff_log = scorer.m_eff_log
+    warm.prefetch(configs)  # compiles every chunk shape (not timed)
+
+    cold = CVLRScorer(ds.data, config=ScoreConfig(seed=seed))
+    cold._feat_cache = scorer._feat_cache
+    cold.m_eff_log = scorer.m_eff_log
+    t0 = time.perf_counter()
+    n_done = cold.prefetch(configs)
+    t_bat = time.perf_counter() - t0
+    assert n_done == len(configs)
+    rate_bat = len(configs) / t_bat
+
+    # numerical agreement spot-check (engine == oracle)
+    worst = 0.0
+    for (i, ps), b in zip(seq_configs, seq_scores):
+        a = cold._score_cache[config_key(i, ps)]
+        worst = max(worst, abs(a - b) / max(1.0, abs(b)))
+
+    return {
+        "d": d,
+        "n": n,
+        "n_configs": len(configs),
+        "n_seq_timed": len(seq_configs),
+        "m_eff_range": [int(min(m_effs)), int(max(m_effs))],
+        "feature_build_s": round(t_features, 4),
+        "seq_scores_per_sec": round(rate_seq, 3),
+        "batched_scores_per_sec": round(rate_bat, 3),
+        "speedup": round(rate_bat / rate_seq, 3),
+        "max_rel_err": worst,
+        "gram_cache": cold.gram_cache.stats,
+    }
+
+
+def run(quick: bool = False, out_path: str = OUT_PATH) -> dict:
+    grid = (
+        [(8, 1000), (16, 1000)]
+        if quick
+        else [(d, n) for n in (1000, 10000) for d in (8, 16, 32)]
+    )
+    cells = []
+    print("d,n,n_configs,seq/s,batched/s,speedup,max_rel_err")
+    for d, n in grid:
+        cell = _bench_cell(d, n, seq_cap=24 if n >= 10000 else 48)
+        cells.append(cell)
+        print(
+            f"{d},{n},{cell['n_configs']},{cell['seq_scores_per_sec']},"
+            f"{cell['batched_scores_per_sec']},{cell['speedup']},"
+            f"{cell['max_rel_err']:.2e}"
+        )
+    result = {
+        "benchmark": "frontier_scoring",
+        "unit": "candidate-scores/sec",
+        "quick": quick,
+        "cells": cells,
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    run(quick=args.quick, out_path=args.out)

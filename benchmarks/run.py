@@ -19,14 +19,21 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default="all",
-        help="comma list: table1,fig1,figs234,fig5,roofline",
+        help="comma list: table1,fig1,figs234,fig5,roofline,frontier",
     )
     args, _ = ap.parse_known_args()
     quick = not args.full
     which = set(args.only.split(","))
     t0 = time.time()
 
-    from benchmarks import approx_error, discrete_networks, roofline, runtime_scaling, synthetic_accuracy
+    from benchmarks import (
+        approx_error,
+        discrete_networks,
+        frontier_scoring,
+        roofline,
+        runtime_scaling,
+        synthetic_accuracy,
+    )
 
     if which & {"all", "table1"}:
         print("# Table 1 — approximation error (m=100)")
@@ -40,6 +47,9 @@ def main() -> None:
     if which & {"all", "fig5"}:
         print("# Fig. 5 — discrete networks (SACHS/CHILD)")
         discrete_networks.run(quick=quick)
+    if which & {"all", "frontier"}:
+        print("# Frontier scoring — sequential vs batched engine")
+        frontier_scoring.run(quick=quick)
     if which & {"all", "roofline"}:
         print("# Roofline — from dry-run artifacts")
         roofline.main()

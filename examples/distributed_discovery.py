@@ -14,17 +14,17 @@ import os
 if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 
+import contextlib
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
 
 from repro.core.api import make_scorer
 from repro.core.distributed_score import (
     block_folds,
-    cvlr_scores_batched,
+    cvlr_scores_stacked,
     ges_batch_hook,
     make_sharded_scorer,
 )
@@ -51,18 +51,33 @@ def main():
     #    candidates over 'model') — the multi-pod dry-run workload
     n_dev = len(jax.devices())
     if n_dev >= 2:
-        mesh = jax.make_mesh(
-            (2, n_dev // 2), ("model", "data"),
-            axis_types=(AxisType.Auto,) * 2,
-        )
+        try:  # jax >= 0.5 spells the mesh axis types explicitly
+            from jax.sharding import AxisType
+
+            mesh = jax.make_mesh(
+                (2, n_dev // 2), ("model", "data"),
+                axis_types=(AxisType.Auto,) * 2,
+            )
+        except ImportError:
+            from jax.sharding import Mesh
+
+            mesh = Mesh(
+                np.array(jax.devices()).reshape(2, n_dev // 2),
+                ("model", "data"),
+            )
         fn = make_sharded_scorer(mesh)
         q = 4
         lam = scorer.features((0,))
         lx = jnp.stack([block_folds(lam, q)] * 4)
         lz = jnp.stack([block_folds(scorer.features((1,)), q)] * 4)
-        with jax.set_mesh(mesh):
+        ctx = (
+            jax.set_mesh(mesh)
+            if hasattr(jax, "set_mesh")
+            else contextlib.nullcontext()
+        )
+        with ctx:
             sharded = fn(lx, lz)
-        ref = cvlr_scores_batched(lx, lz)
+        ref = cvlr_scores_stacked(lx, lz)
         err = float(jnp.max(jnp.abs(sharded - ref)))
         print(f"shard_map scorer on {n_dev} devices: max |delta| vs single = {err:.2e}")
     else:

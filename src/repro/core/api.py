@@ -16,10 +16,18 @@ def make_scorer(
     dims=None,
     discrete=None,
     config: ScoreConfig | None = None,
+    batched: bool = True,
 ):
-    """method: 'cvlr' (the paper) or 'cv' (exact O(n^3) baseline)."""
+    """method: 'cvlr' (the paper) or 'cv' (exact O(n^3) baseline).
+
+    batched: let the CV-LR scorer evaluate GES frontiers through the
+    batched engine (default); False forces the sequential per-candidate
+    oracle path.  Ignored by the exact scorer, which is always lazy.
+    """
     if method == "cvlr":
-        return CVLRScorer(data, dims=dims, discrete=discrete, config=config)
+        return CVLRScorer(
+            data, dims=dims, discrete=discrete, config=config, batched=batched
+        )
     if method == "cv":
         return CVScorer(data, dims=dims, discrete=discrete, config=config)
     raise ValueError(f"unknown scoring method {method!r}")
@@ -34,12 +42,19 @@ def causal_discover(
     max_subset: int | None = None,
     batch_hook=None,
     verbose: bool = False,
+    batched: bool = True,
 ) -> GESResult:
     """GES + (CV-LR | CV) generalized score on an (n, cols) data matrix.
 
     dims: per-variable column widths (multi-dim variables); default all 1.
     discrete: per-variable discreteness flags (routes Alg. 2).
+    batched: evaluate each GES frontier through the batched scoring engine
+    (CV-LR only; the default).  Results are identical to the sequential
+    path up to machine-precision reassociation.
     Returns a GESResult whose `cpdag` is the estimated equivalence class.
     """
-    scorer = make_scorer(data, method=method, dims=dims, discrete=discrete, config=config)
+    scorer = make_scorer(
+        data, method=method, dims=dims, discrete=discrete, config=config,
+        batched=batched,
+    )
     return ges(scorer, max_subset=max_subset, batch_hook=batch_hook, verbose=verbose)

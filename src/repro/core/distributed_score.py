@@ -17,40 +17,47 @@ Two parallelism axes (DESIGN.md §2.3):
 n0 over `data`.  Under `shard_map` the collective schedule is explicit and
 inspectable — the dry-run (launch/dryrun.py --arch cvlr_paper) lowers this
 exact function on the production mesh.
+
+All fold math lives in `score_lowrank.scores_from_fold_blocks` — this
+module only adds the einsum-to-blocks step and the collective schedule, so
+the local batched frontier engine and the sharded scorer can never drift
+apart numerically.
 """
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.score_lowrank import _fold_score_lr
+from repro.core.score_common import config_key
+from repro.core.score_lowrank import scores_from_fold_blocks
+
+try:  # jax >= 0.5 exports shard_map at top level
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - depends on jax version
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 
-def _score_from_blocked(lam_x_b, lam_z_b, n0, n1, lmbda, gamma, data_axis=None):
-    """Score from fold-blocked factors (Q, n0_local, m); psum over data."""
-    q = lam_x_b.shape[0]
-    V = jnp.einsum("qni,qnj->qij", lam_x_b, lam_x_b)
-    U = jnp.einsum("qni,qnj->qij", lam_z_b, lam_x_b)
-    S = jnp.einsum("qni,qnj->qij", lam_z_b, lam_z_b)
-    if data_axis is not None:
-        V = jax.lax.psum(V, data_axis)
-        U = jax.lax.psum(U, data_axis)
-        S = jax.lax.psum(S, data_axis)
-    Gxx = jnp.sum(V, axis=0)
-    Gzx = jnp.sum(U, axis=0)
-    Gzz = jnp.sum(S, axis=0)
-    Pb = Gxx[None] - V
-    Eb = Gzx[None] - U
-    Fb = Gzz[None] - S
-    fold = jax.vmap(
-        lambda p, e, f, v, u, s: _fold_score_lr(p, e, f, v, u, s, n0, n1, lmbda, gamma)
-    )
-    return jnp.mean(fold(Pb, Eb, Fb, V, U, S))
+def _block_grams(lam_x_b, lam_z_b, data_axes=None):
+    """Per-fold test Gram blocks (V, U, S) from fold-blocked factors.
+
+    lam_x_b, lam_z_b: (..., Q, n0_local, m) with any leading batch dims.
+    When `data_axes` is given, the n0 axis is a shard and the blocks are
+    summed across it with one fused psum (3 tensors per *batch*, not per
+    candidate: batching the all-reduce amortizes collective latency across
+    the GES frontier).
+    (A concat-Gram [X|Z]^T[X|Z] single-einsum variant was tried and
+    REFUTED: the materialized concat costs an extra write+read that
+    exceeds the duplicate-stream saving — EXPERIMENTS.md §Perf.)
+    """
+    V = jnp.einsum("...qni,...qnj->...qij", lam_x_b, lam_x_b)
+    U = jnp.einsum("...qni,...qnj->...qij", lam_z_b, lam_x_b)
+    S = jnp.einsum("...qni,...qnj->...qij", lam_z_b, lam_z_b)
+    if data_axes is not None:
+        V, U, S = jax.lax.psum((V, U, S), data_axes)
+    return V, U, S
 
 
 def block_folds(lam: jnp.ndarray, q: int) -> jnp.ndarray:
@@ -60,20 +67,22 @@ def block_folds(lam: jnp.ndarray, q: int) -> jnp.ndarray:
     return lam[: q * n0].reshape(q, n0, m)
 
 
-def cvlr_scores_batched(lam_x_b, lam_z_b, lmbda=0.01, gamma=0.01):
-    """Batched scores for a GES frontier.
+def cvlr_scores_stacked(lam_x_b, lam_z_b, lmbda=0.01, gamma=0.01):
+    """Batched scores for a GES frontier from pre-blocked stacked factors.
 
     lam_x_b, lam_z_b: (B, Q, n0, m) fold-blocked centered factors.
-    Returns (B,) scores.  Pure vmap — shard the B axis with pjit for
-    candidate parallelism.
+    Returns (B,) scores.  Pure einsum + the shared fold kernel — shard the
+    B axis with pjit for candidate parallelism.  (The local search path
+    uses `score_lowrank.cvlr_scores_batched` instead — a different,
+    bank+pairs signature — which shares Gram blocks across candidates
+    through the Gram-block cache.)
     """
     _, q, n0, _ = lam_x_b.shape
     n1 = (q - 1) * n0
     lm = jnp.asarray(lmbda, lam_x_b.dtype)
     gm = jnp.asarray(gamma, lam_x_b.dtype)
-    return jax.vmap(
-        lambda lx, lz: _score_from_blocked(lx, lz, n0, n1, lm, gm)
-    )(lam_x_b, lam_z_b)
+    V, U, S = _block_grams(lam_x_b, lam_z_b)
+    return scores_from_fold_blocks(V, U, S, n0, n1, lm, gm)
 
 
 def make_sharded_scorer(mesh: Mesh, data_axis="data", model_axis: str = "model"):
@@ -92,37 +101,17 @@ def make_sharded_scorer(mesh: Mesh, data_axis="data", model_axis: str = "model")
 
     def local_fn(lam_x_b, lam_z_b):
         # shapes here are per-device: (B/pm, Q, n0/pd, m)
-        b, q, n0_local, _ = lam_x_b.shape
+        _, q, n0_local, _ = lam_x_b.shape
         n0 = n0_local * data_size
         n1 = (q - 1) * n0
         lm = jnp.asarray(0.01, lam_x_b.dtype)
         gm = jnp.asarray(0.01, lam_x_b.dtype)
-        # Local Gram blocks for the WHOLE candidate batch, then one fused
-        # all-reduce over the data axis (3 tensors, not 3*B): batching the
-        # psum amortizes collective latency across the GES frontier.
-        # (A concat-Gram [X|Z]^T[X|Z] single-einsum variant was tried and
-        # REFUTED: the materialized concat costs an extra write+read that
-        # exceeds the duplicate-stream saving — §Perf iteration 7.)
-        V = jnp.einsum("bqni,bqnj->bqij", lam_x_b, lam_x_b)
-        U = jnp.einsum("bqni,bqnj->bqij", lam_z_b, lam_x_b)
-        S = jnp.einsum("bqni,bqnj->bqij", lam_z_b, lam_z_b)
-        V, U, S = jax.lax.psum((V, U, S), data_axes)
-
-        def one(v, u, s):
-            gxx, gzx, gzz = (jnp.sum(t, axis=0) for t in (v, u, s))
-            pb, eb, fb = gxx[None] - v, gzx[None] - u, gzz[None] - s
-            fold = jax.vmap(
-                lambda p, e, f, vv, uu, ss: _fold_score_lr(
-                    p, e, f, vv, uu, ss, n0, n1, lm, gm
-                )
-            )
-            return jnp.mean(fold(pb, eb, fb, v, u, s))
-
-        return jax.vmap(one)(V, U, S)
+        V, U, S = _block_grams(lam_x_b, lam_z_b, data_axes)
+        return scores_from_fold_blocks(V, U, S, n0, n1, lm, gm)
 
     spec_in = P(model_axis, None, data_axes if len(data_axes) > 1 else data_axes[0], None)
     spec_out = P(model_axis)
-    fn = jax.shard_map(
+    fn = _shard_map(
         local_fn, mesh=mesh, in_specs=(spec_in, spec_in), out_specs=spec_out
     )
     return jax.jit(fn)
@@ -132,18 +121,22 @@ def ges_batch_hook(scorer, configs, lmbda=None, gamma=None):
     """`batch_hook` for repro.core.ges.ges: evaluate a whole sweep's local
     scores in one batched (vmapped) call and fill the scorer cache.
 
-    configs: list of (node, parents_tuple).  Uses the scorer's feature
-    cache for Lambda construction (host-side ICL), then one vmapped score
-    kernel for everything uncached.
+    configs: list of (node, parents_tuple).  With default hyperparameters
+    this delegates to the scorer's own batched frontier engine
+    (`CVLRScorer.prefetch`), which shares Gram blocks across candidates;
+    with explicit lmbda/gamma overrides it falls back to stacking the
+    scorer's feature bank and scoring through the same shared fold kernel.
     """
     cfg = scorer.config
+    if lmbda is None and gamma is None and getattr(scorer, "batched", False):
+        return scorer.prefetch(configs)
     lmbda = cfg.lmbda if lmbda is None else lmbda
     gamma = cfg.gamma if gamma is None else gamma
     todo = []
     for node, parents in configs:
-        key = (int(node), frozenset(int(p) for p in parents))
+        key = config_key(node, parents)
         if key not in scorer._score_cache:
-            todo.append((node, tuple(sorted(parents))))
+            todo.append(key)
     if not todo:
         return 0
     q = cfg.q_folds
@@ -155,9 +148,9 @@ def ges_batch_hook(scorer, configs, lmbda=None, gamma=None):
         )
         lxs.append(block_folds(lam_x, q))
         lzs.append(block_folds(lam_z, q))
-    scores = cvlr_scores_batched(
+    scores = cvlr_scores_stacked(
         jnp.stack(lxs), jnp.stack(lzs), lmbda=lmbda, gamma=gamma
     )
-    for (node, parents), s in zip(todo, np.asarray(scores)):
-        scorer._score_cache[(int(node), frozenset(parents))] = float(s)
+    for key, s in zip(todo, np.asarray(scores)):
+        scorer._score_cache[key] = float(s)
     return len(todo)

@@ -14,11 +14,17 @@ Operator validity and score deltas follow Chickering's Theorems 15/17:
     Valid iff NA_{Y,X} \\ H is a clique.
     delta = s(Y, (NA\\H) u Pa_Y \\ {X}) - s(Y, (NA\\H) u Pa_Y u {X})
 
-Scores are cached inside the scorer (keyed by (node, parent-set)), so the
-search only pays for *new* local configurations.  `batch_hook`, when set, is
-called with the full list of (node, parents) configurations needed by a
-sweep before any delta is computed — the distributed runtime uses it to
-evaluate the whole GES frontier in parallel (repro.core.distributed_score).
+Scores are cached inside the scorer (keyed by `score_common.config_key`),
+so the search only pays for *new* local configurations.  Before any delta
+is computed, each sweep iteration hands the full frontier's (node, parents)
+configurations to the scorer's `prefetch` — the batched engine
+(score_lowrank.cvlr_scores_batched) evaluates them in a handful of device
+dispatches instead of one jit call + host sync per candidate.  This is the
+default local path; a scorer whose `prefetch` declines (returns 0 without
+caching, e.g. CVLRScorer(batched=False) or the exact CVScorer) falls back
+to lazy per-candidate `local_score` — kept as the oracle for tests.
+`batch_hook`, when set, overrides `prefetch`; the distributed runtime uses
+it to evaluate the frontier on a mesh (repro.core.distributed_score).
 """
 
 from __future__ import annotations
@@ -29,6 +35,7 @@ import itertools
 import numpy as np
 
 from repro.core import graph as g
+from repro.core.score_common import config_key
 
 
 @dataclasses.dataclass
@@ -136,19 +143,22 @@ def ges(
             cands = list(gen(a, max_subset))
             if not cands:
                 break
+            configs = set()
+            for _, _, y, _, with_set, without_set in cands:
+                configs.add(config_key(y, with_set))
+                configs.add(config_key(y, without_set))
+            configs = sorted(configs)
             if batch_hook is not None:
-                configs = set()
-                for _, _, y, _, with_set, without_set in cands:
-                    configs.add((y, tuple(sorted(with_set))))
-                    configs.add((y, tuple(sorted(without_set))))
-                batch_hook(scorer, sorted(configs))
+                batch_hook(scorer, configs)
+            else:
+                prefetch = getattr(scorer, "prefetch", None)
+                if prefetch is not None:
+                    prefetch(configs)
             best_delta, best = 0.0, None
             for op, x, y, sub, with_set, without_set in cands:
-                delta = scorer.local_score(
-                    y, tuple(sorted(with_set))
-                ) - scorer.local_score(y, tuple(sorted(without_set)))
-                if phase == "backward":
-                    pass  # delta already oriented: with=after-delete basis
+                delta = scorer.local_score(y, with_set) - scorer.local_score(
+                    y, without_set
+                )
                 if delta > best_delta + 1e-12:
                     best_delta, best = delta, (op, x, y, sub)
             if best is None:

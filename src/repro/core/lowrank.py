@@ -146,17 +146,36 @@ def discrete_lowrank(
     return jnp.concatenate([lam, pad], axis=1), m_d
 
 
-def count_distinct_rows(x: np.ndarray, cap: int) -> int:
-    """Number of distinct rows, early-exiting once > cap (hash-based, O(n))."""
+def count_distinct_rows(x: np.ndarray, cap: int, chunk: int = 16384) -> int:
+    """Number of distinct rows, early-exiting once > cap.
+
+    Vectorized: rows are compared as raw bytes through a contiguous void
+    view (one np.unique per chunk, C speed) instead of a per-row Python
+    tuple()/hash loop.  The chunked scan keeps the early-exit-at-cap
+    semantics: counts <= cap are exact, and any count beyond the cap is
+    reported as cap + 1 (the value the incremental loop stopped at).
+    """
     xn = np.asarray(x)
     if xn.ndim == 1:
         xn = xn[:, None]
-    seen = set()
-    for row in map(tuple, np.round(xn, 12)):
-        seen.add(row)
-        if len(seen) > cap:
-            return len(seen)
-    return len(seen)
+    if xn.shape[0] == 0:
+        return 0
+    if xn.shape[1] == 0:
+        return 1  # every zero-width row is the same (empty) row
+    r = np.round(np.asarray(xn, dtype=np.float64), 12)
+    r += 0.0  # normalize -0.0 -> +0.0 so the byte view matches == semantics
+    r = np.ascontiguousarray(r)
+    void = np.dtype((np.void, r.dtype.itemsize * r.shape[1]))
+    rows = r.view(void).ravel()
+    uniq = None
+    for lo in range(0, rows.shape[0], chunk):
+        block = np.unique(rows[lo : lo + chunk])
+        uniq = block if uniq is None else np.unique(
+            np.concatenate([uniq, block])
+        )
+        if uniq.size > cap:
+            return int(cap) + 1
+    return int(uniq.size)
 
 
 def lowrank_features(

@@ -16,6 +16,69 @@ import dataclasses
 import numpy as np
 
 
+def set_key(vars_idx) -> tuple:
+    """Canonical variable-set key: deduplicated sorted tuple of ints.
+
+    The one normalization used everywhere a variable set indexes a cache —
+    feature banks, Gram-block caches, kernel caches, score caches — so the
+    search layer and the scorers can never disagree on identity.
+    """
+    if isinstance(vars_idx, (int, np.integer)):
+        return (int(vars_idx),)
+    return tuple(sorted({int(v) for v in vars_idx}))
+
+
+def config_key(i, parents=()) -> tuple:
+    """Canonical (node, parent-set) key for local-score caches and the GES
+    frontier: ``(int, sorted-tuple)``."""
+    return int(i), set_key(parents)
+
+
+class GramBlockCache:
+    """Host-side cache of per-fold Gram blocks keyed on ``(key_a, key_b)``
+    canonical variable-set keys (``set_key`` tuples).
+
+    The batched frontier engine stores each diagonal block V = X_q^T X_q
+    under ``(kx, kx)``, each S = Z_q^T Z_q under ``(kz, kz)`` and each cross
+    block U = Z_q^T X_q under ``(kz, kx)`` — so a child's Grams are computed
+    once per sweep no matter how many candidate parent sets reference it,
+    and persist across sweeps.  Hit/miss counters expose the sharing
+    structure to tests and perf tooling.  The exact-CV scorer reuses the
+    same interface for its centered kernel matrices.
+    """
+
+    def __init__(self):
+        self._store: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __contains__(self, key) -> bool:
+        return key in self._store
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def get(self, key):
+        """Counted lookup: returns the block or None (and tallies hit/miss)."""
+        if key in self._store:
+            self.hits += 1
+            return self._store[key]
+        self.misses += 1
+        return None
+
+    def put(self, key, value) -> None:
+        self._store[key] = value
+
+    def clear(self) -> None:
+        self._store.clear()
+        self.hits = 0
+        self.misses = 0
+
+    @property
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses, "entries": len(self._store)}
+
+
 @dataclasses.dataclass(frozen=True)
 class ScoreConfig:
     """Paper defaults (Sec. 7.1 / Appendix A.2)."""
@@ -106,10 +169,19 @@ class ScorerBase:
 
     # -- public API ------------------------------------------------------
     def local_score(self, i: int, parents=()) -> float:
-        key = (int(i), frozenset(int(p) for p in parents))
+        key = config_key(i, parents)
         if key not in self._score_cache:
-            self._score_cache[key] = float(self._compute(int(i), tuple(sorted(key[1]))))
+            self._score_cache[key] = float(self._compute(key[0], key[1]))
         return self._score_cache[key]
+
+    def prefetch(self, configs) -> int:
+        """Batch-evaluate ``(node, parents)`` configurations ahead of the
+        `local_score` lookups of a GES sweep.  Returns the number of scores
+        actually computed.  The base implementation is lazy (0 computed;
+        `local_score` falls back to per-candidate evaluation) — batched
+        scorers override this with a single-dispatch engine.
+        """
+        return 0
 
     def score_graph(self, adj: np.ndarray) -> float:
         """S(G) = sum_i S(X_i, Pa_i) — decomposability (paper Eq. 31)."""

@@ -23,7 +23,13 @@ from repro.core.kernel_fns import (
     median_heuristic_width,
     standardize,
 )
-from repro.core.score_common import ScoreConfig, ScorerBase, VariableView
+from repro.core.score_common import (
+    GramBlockCache,
+    ScoreConfig,
+    ScorerBase,
+    VariableView,
+    set_key,
+)
 
 
 def _fold_score(kx, kz, tr, te, n0, n1, lmbda, gamma):
@@ -83,15 +89,20 @@ class CVScorer(ScorerBase):
     def __init__(self, data, dims=None, discrete=None, config: ScoreConfig | None = None):
         config = config or ScoreConfig()
         super().__init__(VariableView(data, dims, discrete), config)
-        self._kernel_cache: dict = {}
+        # Same keyed-cache interface as the low-rank scorer's Gram-block
+        # cache: (set_key, set_key)-keyed with hit/miss accounting.  An
+        # (n, n) centered kernel is the m -> n degenerate Gram block.
+        self.kernel_cache = GramBlockCache()
 
     def _centered_kernel(self, vars_key: tuple) -> jnp.ndarray:
-        if vars_key not in self._kernel_cache:
-            cols = standardize(self.view.columns(vars_key))[self.perm]
+        key = set_key(vars_key)
+        k = self.kernel_cache.get((key, key))
+        if k is None:
+            cols = standardize(self.view.columns(key))[self.perm]
             width = median_heuristic_width(cols, factor=self.config.width_factor)
-            k = kernel_matrix(cols, cols, KernelSpec("rbf", width))
-            self._kernel_cache[vars_key] = center_gram(k)
-        return self._kernel_cache[vars_key]
+            k = center_gram(kernel_matrix(cols, cols, KernelSpec("rbf", width)))
+            self.kernel_cache.put((key, key), k)
+        return k
 
     def _compute(self, i: int, parents: tuple) -> float:
         kx = self._centered_kernel((i,))

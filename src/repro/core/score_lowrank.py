@@ -30,8 +30,23 @@ score = -n0^2/2 log 2pi - n0/2 logdet Q - n0 n1/2 log g
         - [T1 + T2 - 2 T3 - n1 b (T4 + T5) + 2 n1 b T6] / (2 g).
 
 Cross-fold trick (beyond paper, exact): with contiguous test blocks the full
-Grams G_xx = X^T X etc. are computed once and each fold's train blocks are
-P_q = G_xx - V_q — O(n m^2) total for ALL Q folds instead of O(Q n m^2).
+Grams G_xx = X^T X etc. fall out of the per-fold test Grams by summing the
+fold axis, and each fold's train blocks are P_q = G_xx - V_q — O(n m^2)
+total for ALL Q folds instead of O(Q n m^2).
+
+The module has one copy of the fold algebra (`scores_from_fold_blocks`),
+consumed three ways:
+
+* `cvlr_score_from_features` — single-config sequential score (the oracle);
+* `cvlr_scores_batched` — the GES frontier engine: a device-resident
+  feature bank, a Gram-block cache keyed on (set_a, set_b) so V/U/S blocks
+  are computed once per feature *pair* instead of once per candidate, live-
+  rank bucketed trimming (zero padding is score-neutral, so slicing to the
+  batch's max m_eff is exact), and chunked batched fold algebra — one
+  device dispatch per ~64 candidates instead of one (plus a host sync) per
+  candidate;
+* `repro.core.distributed_score` — the same kernel under shard_map, with
+  Gram blocks psum'd over the data axis.
 """
 
 from __future__ import annotations
@@ -43,11 +58,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lowrank import lowrank_features
-from repro.core.score_common import ScoreConfig, ScorerBase, VariableView
+from repro.core.score_common import (
+    GramBlockCache,
+    ScoreConfig,
+    ScorerBase,
+    VariableView,
+    config_key,
+    set_key,
+)
 
 
 def _fold_score_lr(P, E, F, V, U, S, n0, n1, lmbda, gamma):
-    """One fold from Gram blocks; all O(m^3)."""
+    """One fold from Gram blocks; all O(m^3) or cheaper.
+
+    D = (F + n1 l I)^-1 is never materialized: F is PSD, so one Cholesky
+    of the regularized matrix serves every F-solve, and the identities
+    only ever need D E (an mz x mx solve, usually mx << mz) and F D E —
+    O(mz^2 mx) instead of the O(mz^3) explicit inverse."""
     mx, mz = P.shape[0], F.shape[0]
     dtype = P.dtype
     beta = lmbda * lmbda / gamma
@@ -55,11 +82,11 @@ def _fold_score_lr(P, E, F, V, U, S, n0, n1, lmbda, gamma):
     eye_x = jnp.eye(mx, dtype=dtype)
     eye_z = jnp.eye(mz, dtype=dtype)
 
-    D = jnp.linalg.solve(F + n1l * eye_z, eye_z)
-    IFD = eye_z - F @ D  # (I - F D);  (I - D F) = IFD^T
-    Jt = (IFD @ E) / n1l  # Z1^T A X1
-    DE = D @ E
-    M = (P - 2.0 * (E.T @ DE) + DE.T @ F @ DE) / (n1l * n1l)
+    chol_f = jnp.linalg.cholesky(F + n1l * eye_z)
+    DE = jax.scipy.linalg.cho_solve((chol_f, True), E)  # D E
+    FDE = F @ DE
+    Jt = (E - FDE) / n1l  # (I - F D) E / (n1 l) = Z1^T A X1
+    M = (P - 2.0 * (E.T @ DE) + DE.T @ FDE) / (n1l * n1l)
     Qm = eye_x + (n1 * beta) * M
     chol = jnp.linalg.cholesky(Qm)
     logdet_q = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chol)))
@@ -89,6 +116,10 @@ def cvlr_score_from_features(lam_x, lam_z, q: int, lmbda, gamma):
 
     lam_x, lam_z: centered factors, shape (n_eff, m) with n_eff = q * n0.
     Total cost O(n m^2) for the Grams + O(q m^3) for the fold algebra.
+    Thin single-config wrapper over the shared batched fold kernel: the
+    per-fold *test* Grams are one reshape+einsum each, and the full-data
+    Grams / train blocks fall out of the fold axis by sum + subtraction
+    inside `scores_from_fold_blocks` (exact; no separate full-Gram einsum).
     """
     n_eff, mx = lam_x.shape
     mz = lam_z.shape[1]
@@ -97,24 +128,326 @@ def cvlr_score_from_features(lam_x, lam_z, q: int, lmbda, gamma):
 
     xb = lam_x.reshape(q, n0, mx)
     zb = lam_z.reshape(q, n0, mz)
-    # Per-fold *test* Grams, all folds at once: O(n m^2).
     V = jnp.einsum("qni,qnj->qij", xb, xb)
     U = jnp.einsum("qni,qnj->qij", zb, xb)
     S = jnp.einsum("qni,qnj->qij", zb, zb)
-    # Full-data Grams once; train blocks by subtraction (exact).
-    Gxx = lam_x.T @ lam_x
-    Gzx = lam_z.T @ lam_x
-    Gzz = lam_z.T @ lam_z
-    P = Gxx[None] - V
-    E = Gzx[None] - U
-    F = Gzz[None] - S
+    return scores_from_fold_blocks(
+        V[None], U[None], S[None], n0, n1, lmbda, gamma
+    )[0]
 
-    fold = jax.vmap(
-        lambda p, e, f, v, u, s: _fold_score_lr(
-            p, e, f, v, u, s, n0, n1, lmbda, gamma
+
+def scores_from_fold_blocks(V, U, S, n0, n1, lmbda, gamma):
+    """Batched CV-LR scores from per-fold *test* Gram blocks.
+
+    V: (B, q, mx, mx)  X_q^T X_q       U: (B, q, mz, mx)  Z_q^T X_q
+    S: (B, q, mz, mz)  Z_q^T Z_q       ->  (B,) mean-over-folds scores.
+
+    Full-data Grams are recovered by summing the fold axis and each fold's
+    train blocks by subtraction (the cross-fold trick, exact).  This is the
+    single copy of the fold algebra: the sequential scorer, the batched
+    frontier engine and the shard_map distributed scorer all route here.
+    Traceable (no jit) so it composes under shard_map/vmap.
+    """
+
+    def one(v, u, s):
+        gxx = jnp.sum(v, axis=0)
+        gzx = jnp.sum(u, axis=0)
+        gzz = jnp.sum(s, axis=0)
+        fold = jax.vmap(
+            lambda p, e, f, vv, uu, ss: _fold_score_lr(
+                p, e, f, vv, uu, ss, n0, n1, lmbda, gamma
+            )
         )
-    )
-    return jnp.mean(fold(P, E, F, V, U, S))
+        return jnp.mean(fold(gxx[None] - v, gzx[None] - u, gzz[None] - s, v, u, s))
+
+    return jax.vmap(one)(V, U, S)
+
+
+cvlr_scores_from_blocks = partial(jax.jit, static_argnames=("n0", "n1"))(
+    scores_from_fold_blocks
+)
+
+
+@partial(jax.jit, static_argnames=("q",))
+def _fold_block_grams(fa, fb, q: int):
+    """Per-fold test Gram blocks for a stack of factor pairs.
+
+    fa: (B, n_eff, ma), fb: (B, n_eff, mb)  ->  (B, q, ma, mb) with
+    out[b, i] = fa[b, fold_i]^T fb[b, fold_i].  One einsum for the whole
+    stack: O(B n ma mb) and a single device dispatch.
+    """
+    b, n_eff, ma = fa.shape
+    n0 = n_eff // q
+    fa_b = fa.reshape(b, q, n0, ma)
+    fb_b = fb.reshape(b, q, n0, fb.shape[-1])
+    return jnp.einsum("bqni,bqnj->bqij", fa_b, fb_b)
+
+
+@partial(jax.jit, static_argnames=("q",))
+def _fold_block_grams_idx(bank_a, bank_b, ia, ib, q: int):
+    """Gather-then-Gram, fused in one dispatch: bank_a (Sa, n_eff, ma) and
+    bank_b (Sb, n_eff, mb) are stacked trimmed feature banks, ia/ib (C,)
+    index the pairs of a chunk.  Gathering *inside* the jit keeps the
+    per-chunk host work to a single call — per-pair jnp.stack of bank
+    slices was measured at ~0.2 s/chunk of pure dispatch overhead, 15x the
+    einsum itself."""
+    return _fold_block_grams(bank_a[ia], bank_b[ib], q)
+
+
+def _bucket(m: int, cap: int) -> int:
+    """Round a live rank up to a small ladder of bucket widths (bounds the
+    jit cache) without ever exceeding the padded factor width."""
+    m = min(max(int(m), 1), cap)
+    for b in _BUCKET_LADDER:
+        if m <= b <= cap:
+            return b
+    return cap
+
+
+_BUCKET_LADDER = (8, 16, 32, 48, 64, 96)
+
+
+def _pow2_pad(k: int, hi: int) -> int:
+    """Next power of two >= k, capped at hi (shape-stable stack heights)."""
+    p = 1
+    while p < min(k, hi):
+        p *= 2
+    return min(p, hi)
+
+
+def cvlr_scores_batched(
+    lam_x_bank,
+    lam_z_bank,
+    pairs,
+    q: int,
+    lmbda: float = 0.01,
+    gamma: float = 0.01,
+    *,
+    m_eff_x=None,
+    m_eff_z=None,
+    x_keys=None,
+    z_keys=None,
+    gram_cache: GramBlockCache | None = None,
+    pair_chunk: int = 32,
+    score_chunk: int = 64,
+) -> np.ndarray:
+    """Score a whole GES frontier in a handful of device dispatches.
+
+    lam_x_bank / lam_z_bank: the *feature bank* — sequences of centered
+    (n_eff, m) factors, one entry per distinct variable set (children on
+    the x side, candidate parent sets on the z side; a |Z|=0 entry is an
+    all-zero factor, the exact Eq.-9 specialization).
+    pairs: (B, 2) ints, pairs[b] = (x_bank_idx, z_bank_idx) — one row per
+    frontier configuration.  Returns (B,) float64 scores.
+
+    Work is shared at the Gram-block level: V = X_q^T X_q once per child,
+    S = Z_q^T Z_q once per parent set, U = Z_q^T X_q once per (parent-set,
+    child) pair — never once per candidate — with blocks stored in
+    `gram_cache` (keyed on (set_key_a, set_key_b)) so they persist across
+    sweeps.  Every factor takes part only at its *bucketed live rank*:
+    zero-padded columns are provably score-neutral
+    (tests/test_score_lowrank.py::test_zero_padding_is_exact), so slicing
+    to a per-set bucket is exact while cutting the m^2/m^3 terms by the
+    (m_max / m_eff)^2 the padding was wasting — and because m_eff varies a
+    lot across variable sets (9..88 observed on one SCM draw), the einsum
+    and fold phases are *grouped by bucket shape* rather than padded to
+    the batch max.  Within a group everything is chunked and padded to
+    fixed chunk heights, so the jit cache stays small and no call
+    dispatches more than O(B / chunk) kernels.
+    """
+    pairs = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+    n_pairs = pairs.shape[0]
+    if n_pairs == 0:
+        return np.zeros((0,), dtype=np.float64)
+    lam_x_bank = [jnp.asarray(a) for a in lam_x_bank]
+    lam_z_bank = [jnp.asarray(a) for a in lam_z_bank]
+    n_eff = lam_x_bank[0].shape[0]
+    n0 = n_eff // q
+    n1 = n_eff - n0
+    if m_eff_x is None:
+        m_eff_x = [a.shape[1] for a in lam_x_bank]
+    if m_eff_z is None:
+        m_eff_z = [a.shape[1] for a in lam_z_bank]
+    if x_keys is None:
+        x_keys = [("_x", i) for i in range(len(lam_x_bank))]
+    if z_keys is None:
+        z_keys = [("_z", i) for i in range(len(lam_z_bank))]
+    cache = gram_cache if gram_cache is not None else GramBlockCache()
+
+    xs_used = sorted({int(p) for p in pairs[:, 0]})
+    zs_used = sorted({int(p) for p in pairs[:, 1]})
+    bx = {i: _bucket(m_eff_x[i], lam_x_bank[i].shape[1]) for i in xs_used}
+    bz = {
+        i: _bucket(m_eff_z[i], lam_z_bank[i].shape[1])
+        for i in zs_used
+        if m_eff_z[i] > 0
+    }
+
+    def _take(a, w):
+        return a[:, :w] if a.shape[1] >= w else jnp.pad(
+            a, ((0, 0), (0, w - a.shape[1]))
+        )
+
+    blocks: dict = {}  # cache-key -> host (q, me_a, me_b) block for this call
+
+    def _gather_missing(needed):
+        """One counted cache lookup per needed key; returns keys to compute."""
+        missing = []
+        for key, spec in needed.items():
+            blk = cache.get(key)
+            if blk is None:
+                missing.append((key, spec))
+            else:
+                blocks[key] = blk
+        return missing
+
+    def _store(key, out_row, ea, eb):
+        # copy: a view would pin the whole padded chunk buffer in the cache
+        blk = np.ascontiguousarray(out_row[:, :ea, :eb])
+        blocks[key] = blk
+        cache.put(key, blk)
+
+    def _drain(pending, trim):
+        """Second half of the submit/drain pipeline: convert the in-flight
+        device chunks to host blocks.  Draining only after every chunk is
+        submitted lets JAX's async dispatch overlap device einsums with the
+        host-side chunk preparation instead of syncing per chunk."""
+        for out_dev, chunk in pending:
+            out = np.asarray(out_dev)
+            for j, (key, spec) in enumerate(chunk):
+                ea, eb = trim(spec)
+                _store(key, out[j], ea, eb)
+
+    def _diag_blocks(missing, bank, m_eff, buckets):
+        """Diagonal per-fold Grams, grouped by bucket width, chunked with
+        pow2-padded stack heights (shape-stable, cheap einsum variants)."""
+        groups: dict = {}
+        for key, i in missing:
+            groups.setdefault(buckets[i], []).append((key, i))
+        pending = []
+        for w, items in sorted(groups.items()):
+            for c0 in range(0, len(items), pair_chunk):
+                chunk = items[c0 : c0 + pair_chunk]
+                cpad = _pow2_pad(len(chunk), pair_chunk)
+                ids = [i for _, i in chunk]
+                ids += [ids[0]] * (cpad - len(ids))
+                st = jnp.stack([_take(bank[i], w) for i in ids])
+                pending.append((_fold_block_grams(st, st, q), chunk))
+        _drain(pending, lambda i: (m_eff[i], m_eff[i]))
+
+    def _cross_blocks(missing):
+        """Cross per-fold Grams U = Z_q^T X_q, grouped by (bucket_z,
+        bucket_x).  Each group stacks its unique z / x factors once
+        (pow2-padded heights) and runs fused gather+Gram chunks — one
+        dispatch per `pair_chunk` pairs."""
+        groups: dict = {}
+        for key, (zi, xi) in missing:
+            groups.setdefault((bz[zi], bx[xi]), []).append((key, (zi, xi)))
+        pending = []
+        for (wz, wx), items in sorted(groups.items()):
+            z_ids = sorted({zi for _, (zi, _) in items})
+            x_ids = sorted({xi for _, (_, xi) in items})
+            z_pad = _pow2_pad(len(z_ids), len(lam_z_bank))
+            x_pad = _pow2_pad(len(x_ids), len(lam_x_bank))
+            z_loc = {i: k for k, i in enumerate(z_ids)}
+            x_loc = {i: k for k, i in enumerate(x_ids)}
+            dt = lam_z_bank[0].dtype
+            za = jnp.stack(
+                [_take(lam_z_bank[i], wz) for i in z_ids]
+                + [jnp.zeros((n_eff, wz), dt)] * (z_pad - len(z_ids))
+            )
+            xa = jnp.stack(
+                [_take(lam_x_bank[i], wx) for i in x_ids]
+                + [jnp.zeros((n_eff, wx), dt)] * (x_pad - len(x_ids))
+            )
+            for c0 in range(0, len(items), pair_chunk):
+                chunk = items[c0 : c0 + pair_chunk]
+                cpad = _pow2_pad(len(chunk), pair_chunk)
+                ia = [z_loc[zi] for _, (zi, _) in chunk]
+                ib = [x_loc[xi] for _, (_, xi) in chunk]
+                ia += [ia[0]] * (cpad - len(ia))
+                ib += [ib[0]] * (cpad - len(ib))
+                pending.append(
+                    (
+                        _fold_block_grams_idx(
+                            za, xa, jnp.asarray(ia), jnp.asarray(ib), q
+                        ),
+                        chunk,
+                    )
+                )
+        _drain(pending, lambda zx: (m_eff_z[zx[0]], m_eff_x[zx[1]]))
+
+    # -- diagonal blocks: V once per child set, S once per parent set ----
+    need_v = {}
+    for i in xs_used:
+        if m_eff_x[i] > 0:
+            need_v[(x_keys[i], x_keys[i])] = i
+        else:
+            blocks[(x_keys[i], x_keys[i])] = np.zeros((q, 0, 0))
+    _diag_blocks(_gather_missing(need_v), lam_x_bank, m_eff_x, bx)
+    need_s = {}
+    for i in zs_used:
+        if m_eff_z[i] > 0:
+            need_s[(z_keys[i], z_keys[i])] = i
+        else:
+            blocks[(z_keys[i], z_keys[i])] = np.zeros((q, 0, 0))
+    _diag_blocks(_gather_missing(need_s), lam_z_bank, m_eff_z, bz)
+    # -- cross blocks: U once per (parent-set, child) pair ---------------
+    need_u = {}
+    for xi, zi in {(int(a), int(b)) for a, b in pairs}:
+        if m_eff_z[zi] == 0:
+            blocks[(z_keys[zi], x_keys[xi])] = np.zeros((q, 0, m_eff_x[xi]))
+        else:
+            need_u[(z_keys[zi], x_keys[xi])] = (zi, xi)
+    _cross_blocks(_gather_missing(need_u))
+
+    # -- fold algebra: grouped by (bucket_z, bucket_x), fixed-size chunks -
+    lm = jnp.asarray(lmbda, jnp.float64)
+    gm = jnp.asarray(gamma, jnp.float64)
+    score_groups: dict = {}
+    for b, (xi, zi) in enumerate(pairs):
+        wkey = (bz.get(zi, _BUCKET_LADDER[0]), bx[xi])
+        score_groups.setdefault(wkey, []).append(b)
+    scores = np.empty((n_pairs,), dtype=np.float64)
+    in_flight = []  # (device scores, target pair indices) — drained at the end
+    for (wz, wx), idxs in sorted(score_groups.items()):
+        g = len(idxs)
+        c0 = 0
+        while c0 < g:
+            # few chunk heights (bounds compile variants): the full chunk,
+            # or a pow2 short chunk when the tail is small — padding a
+            # 9-pair group to 64 at a large bucket wastes ~7x the fold work
+            rem = g - c0
+            size = (
+                score_chunk
+                if rem >= score_chunk // 2
+                else max(score_chunk // 4, _pow2_pad(rem, score_chunk))
+            )
+            hi = min(c0 + size, g)
+            # assemble ONLY this chunk's padded blocks: peak host memory
+            # stays O(score_chunk), not O(frontier); pad rows repeat row 0
+            V = np.zeros((size, q, wx, wx))
+            U = np.zeros((size, q, wz, wx))
+            S = np.zeros((size, q, wz, wz))
+            chunk_idxs = idxs[c0:hi] + [idxs[c0]] * (size - (hi - c0))
+            for row, b in enumerate(chunk_idxs):
+                xi, zi = int(pairs[b, 0]), int(pairs[b, 1])
+                bv = blocks[(x_keys[xi], x_keys[xi])]
+                bu = blocks[(z_keys[zi], x_keys[xi])]
+                bs = blocks[(z_keys[zi], z_keys[zi])]
+                V[row, :, : bv.shape[1], : bv.shape[2]] = bv
+                U[row, :, : bu.shape[1], : bu.shape[2]] = bu
+                S[row, :, : bs.shape[1], : bs.shape[2]] = bs
+            out = cvlr_scores_from_blocks(
+                jnp.asarray(V), jnp.asarray(U), jnp.asarray(S),
+                n0, n1, lm, gm,
+            )
+            in_flight.append((out, np.asarray(idxs[c0:hi])))
+            c0 = hi
+    for out, target in in_flight:
+        scores[target] = np.asarray(out)[: target.shape[0]]
+    return scores
+
 
 
 class CVLRScorer(ScorerBase):
@@ -126,15 +459,21 @@ class CVLRScorer(ScorerBase):
         dims=None,
         discrete=None,
         config: ScoreConfig | None = None,
+        batched: bool = True,
     ):
         config = config or ScoreConfig()
         super().__init__(VariableView(data, dims, discrete), config)
         self._feat_cache: dict = {}
         self.m_eff_log: dict = {}  # vars_key -> effective rank (diagnostics)
+        self.batched = batched  # False => ges() falls back to lazy local_score
+        self.gram_cache = GramBlockCache()
 
     def features(self, vars_key: tuple) -> jnp.ndarray:
-        """Centered (n_eff, m_max) factor for a variable set (cached)."""
-        vars_key = tuple(sorted(int(v) for v in vars_key))
+        """Centered (n_eff, m_max) factor for a variable set (cached).
+
+        The per-set factors double as the device-resident feature bank of
+        the batched frontier engine (`prefetch`)."""
+        vars_key = set_key(vars_key)
         if vars_key not in self._feat_cache:
             cols = self.view.columns(vars_key)[self.perm]
             lam, m_eff, _ = lowrank_features(
@@ -149,6 +488,8 @@ class CVLRScorer(ScorerBase):
         return self._feat_cache[vars_key]
 
     def _compute(self, i: int, parents: tuple) -> float:
+        """Sequential single-config score — the oracle the batched engine is
+        tested against (tests/test_frontier_batch.py)."""
         lam_x = self.features((i,))
         if parents:
             lam_z = self.features(tuple(parents))
@@ -163,3 +504,45 @@ class CVLRScorer(ScorerBase):
                 jnp.asarray(self.config.gamma, lam_x.dtype),
             )
         )
+
+    def prefetch(self, configs) -> int:
+        """Batched frontier engine: evaluate every uncached (node, parents)
+        configuration through `cvlr_scores_batched`, sharing Gram blocks via
+        `self.gram_cache`.  Called by ges() once per sweep iteration."""
+        if not self.batched:
+            return 0
+        todo = []
+        seen = set()
+        for node, parents in configs:
+            key = config_key(node, parents)
+            if key not in self._score_cache and key not in seen:
+                seen.add(key)
+                todo.append(key)
+        if not todo:
+            return 0
+        x_sets = sorted({(i,) for i, _ in todo})
+        z_sets = sorted({ps for _, ps in todo})
+        x_index = {k: j for j, k in enumerate(x_sets)}
+        z_index = {k: j for j, k in enumerate(z_sets)}
+        lam_x_bank = [self.features(k) for k in x_sets]
+        zero = jnp.zeros_like(lam_x_bank[0])
+        lam_z_bank = [self.features(k) if k else zero for k in z_sets]
+        m_eff_x = [self.m_eff_log[k] for k in x_sets]
+        m_eff_z = [self.m_eff_log[k] if k else 0 for k in z_sets]
+        pairs = np.array([[x_index[(i,)], z_index[ps]] for i, ps in todo])
+        scores = cvlr_scores_batched(
+            lam_x_bank,
+            lam_z_bank,
+            pairs,
+            self.config.q_folds,
+            self.config.lmbda,
+            self.config.gamma,
+            m_eff_x=m_eff_x,
+            m_eff_z=m_eff_z,
+            x_keys=x_sets,
+            z_keys=z_sets,
+            gram_cache=self.gram_cache,
+        )
+        for key, s in zip(todo, scores):
+            self._score_cache[key] = float(s)
+        return len(todo)

@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.core.distributed_score import (
     block_folds,
-    cvlr_scores_batched,
+    cvlr_scores_stacked,
     ges_batch_hook,
 )
 from repro.core.ges import ges
@@ -44,7 +44,7 @@ def test_batched_matches_sequential():
                 )
             )
         )
-    got = cvlr_scores_batched(jnp.stack(lxs), jnp.stack(lzs))
+    got = cvlr_scores_stacked(jnp.stack(lxs), jnp.stack(lzs))
     np.testing.assert_allclose(np.asarray(got), expect, rtol=1e-9)
 
 
@@ -68,15 +68,20 @@ def test_ges_with_batch_hook_matches_plain():
 def test_shardmap_multidevice_subprocess():
     code = textwrap.dedent(
         """
-        import os
+        import contextlib, os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
         import repro.core  # enables x64
         from repro.core.distributed_score import (
-            block_folds, cvlr_scores_batched, make_sharded_scorer)
-        mesh = jax.make_mesh((2, 4), ("model", "data"),
-                             axis_types=(AxisType.Auto,) * 2)
+            block_folds, cvlr_scores_stacked, make_sharded_scorer)
+        try:  # jax >= 0.5 spells the mesh axis types explicitly
+            from jax.sharding import AxisType
+            mesh = jax.make_mesh((2, 4), ("model", "data"),
+                                 axis_types=(AxisType.Auto,) * 2)
+        except ImportError:
+            from jax.sharding import Mesh
+            mesh = Mesh(np.array(jax.devices()).reshape(2, 4),
+                        ("model", "data"))
         rng = np.random.default_rng(0)
         B, n, q, m = 4, 160, 4, 8
         lx = []
@@ -87,9 +92,11 @@ def test_shardmap_multidevice_subprocess():
             lx.append(block_folds(jnp.asarray(a), q))
             lz.append(block_folds(jnp.asarray(b), q))
         lx = jnp.stack(lx); lz = jnp.stack(lz)
-        ref = cvlr_scores_batched(lx, lz)
+        ref = cvlr_scores_stacked(lx, lz)
         fn = make_sharded_scorer(mesh)
-        with jax.set_mesh(mesh):
+        ctx = (jax.set_mesh(mesh) if hasattr(jax, "set_mesh")
+               else contextlib.nullcontext())
+        with ctx:
             got = fn(lx, lz)
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-9)
         print("SHARDED_OK")
@@ -100,7 +107,12 @@ def test_shardmap_multidevice_subprocess():
         capture_output=True,
         text=True,
         timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        env={
+            "PYTHONPATH": "src",
+            "PATH": "/usr/bin:/bin",
+            # forced-host-device test: never probe for accelerators
+            "JAX_PLATFORMS": "cpu",
+        },
         cwd="/root/repo",
     )
     assert "SHARDED_OK" in proc.stdout, proc.stderr[-3000:]

@@ -7,6 +7,7 @@ in interpret mode — identical math, same BlockSpec tiling/padding paths.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.ops import centered_gram, rbf_gram
