@@ -10,6 +10,8 @@ at the repo root so future PRs track the trajectory.
 
 ``python -m benchmarks.frontier_scoring``            — full grid
 ``python -m benchmarks.frontier_scoring --quick``    — small cells only
+``--check-speedup X``  — exit nonzero unless every cell's batched/seq
+ratio is >= X (the CI perf-smoke gate: engine regressions fail loudly).
 """
 
 from __future__ import annotations
@@ -113,6 +115,7 @@ def run(quick: bool = False, out_path: str = OUT_PATH) -> dict:
     result = {
         "benchmark": "frontier_scoring",
         "unit": "candidate-scores/sec",
+        "engine": "fold-gram-strip + z-shared fold cores (PR 2)",
         "quick": quick,
         "cells": cells,
     }
@@ -127,5 +130,25 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default=OUT_PATH)
+    ap.add_argument(
+        "--check-speedup",
+        type=float,
+        default=None,
+        metavar="X",
+        help="fail (exit 1) unless every cell's batched/sequential speedup"
+        " is >= X — the CI smoke gate against engine perf regressions",
+    )
     args = ap.parse_args()
-    run(quick=args.quick, out_path=args.out)
+    result = run(quick=args.quick, out_path=args.out)
+    if args.check_speedup is not None:
+        slow = [
+            (c["d"], c["n"], c["speedup"])
+            for c in result["cells"]
+            if c["speedup"] < args.check_speedup
+        ]
+        if slow:
+            print(
+                f"PERF REGRESSION: cells below {args.check_speedup}x: {slow}"
+            )
+            raise SystemExit(1)
+        print(f"perf gate ok: all cells >= {args.check_speedup}x")

@@ -17,16 +17,24 @@ def make_scorer(
     discrete=None,
     config: ScoreConfig | None = None,
     batched: bool = True,
+    gram_cache_entries: int | None = CVLRScorer.DEFAULT_GRAM_CACHE_ENTRIES,
 ):
     """method: 'cvlr' (the paper) or 'cv' (exact O(n^3) baseline).
 
     batched: let the CV-LR scorer evaluate GES frontiers through the
     batched engine (default); False forces the sequential per-candidate
     oracle path.  Ignored by the exact scorer, which is always lazy.
+
+    gram_cache_entries: LRU bound on the CV-LR Gram-block cache (None =
+    unbounded).  The default is sized to a sweep's working set — see
+    CVLRScorer.DEFAULT_GRAM_CACHE_ENTRIES; shrink it on memory-tight
+    hosts, grow it for very large frontiers.  Ignored by the exact
+    scorer.
     """
     if method == "cvlr":
         return CVLRScorer(
-            data, dims=dims, discrete=discrete, config=config, batched=batched
+            data, dims=dims, discrete=discrete, config=config, batched=batched,
+            gram_cache_entries=gram_cache_entries,
         )
     if method == "cv":
         return CVScorer(data, dims=dims, discrete=discrete, config=config)
@@ -43,18 +51,25 @@ def causal_discover(
     batch_hook=None,
     verbose: bool = False,
     batched: bool = True,
+    gram_cache_entries: int | None = CVLRScorer.DEFAULT_GRAM_CACHE_ENTRIES,
 ) -> GESResult:
     """GES + (CV-LR | CV) generalized score on an (n, cols) data matrix.
 
     dims: per-variable column widths (multi-dim variables); default all 1.
     discrete: per-variable discreteness flags (routes Alg. 2).
     batched: evaluate each GES frontier through the batched scoring engine
-    (CV-LR only; the default).  Results are identical to the sequential
-    path up to machine-precision reassociation.
+    (CV-LR only; the default).  On CPU (and under interpret mode) results
+    are identical to the sequential path up to machine-precision
+    reassociation; on TPU the fused fold-Gram kernel contracts at f32
+    (Mosaic has no f64 MXU path — see repro/kernels/fold_gram.py), so
+    batched scores there agree with the oracle only to f32 Gram accuracy
+    (~1e-7 relative), like every other compiled kernel in repro.kernels.
+    gram_cache_entries: LRU bound on the Gram-block cache (see
+    `make_scorer`).
     Returns a GESResult whose `cpdag` is the estimated equivalence class.
     """
     scorer = make_scorer(
         data, method=method, dims=dims, discrete=discrete, config=config,
-        batched=batched,
+        batched=batched, gram_cache_entries=gram_cache_entries,
     )
     return ges(scorer, max_subset=max_subset, batch_hook=batch_hook, verbose=verbose)

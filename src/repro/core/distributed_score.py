@@ -33,6 +33,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.score_common import config_key
 from repro.core.score_lowrank import scores_from_fold_blocks
+from repro.kernels import fold_gram_blocks
 
 try:  # jax >= 0.5 exports shard_map at top level
     _shard_map = jax.shard_map
@@ -44,6 +45,10 @@ def _block_grams(lam_x_b, lam_z_b, data_axes=None):
     """Per-fold test Gram blocks (V, U, S) from fold-blocked factors.
 
     lam_x_b, lam_z_b: (..., Q, n0_local, m) with any leading batch dims.
+    The contraction routes through `repro.kernels.fold_gram_blocks` — the
+    same fused fold-Gram strip kernel as the local batched frontier
+    engine (tiled Pallas on TPU, einsum elsewhere), so the local and
+    sharded scorers share both the fold algebra AND the Gram kernel.
     When `data_axes` is given, the n0 axis is a shard and the blocks are
     summed across it with one fused psum (3 tensors per *batch*, not per
     candidate: batching the all-reduce amortizes collective latency across
@@ -52,9 +57,9 @@ def _block_grams(lam_x_b, lam_z_b, data_axes=None):
     REFUTED: the materialized concat costs an extra write+read that
     exceeds the duplicate-stream saving — EXPERIMENTS.md §Perf.)
     """
-    V = jnp.einsum("...qni,...qnj->...qij", lam_x_b, lam_x_b)
-    U = jnp.einsum("...qni,...qnj->...qij", lam_z_b, lam_x_b)
-    S = jnp.einsum("...qni,...qnj->...qij", lam_z_b, lam_z_b)
+    V = fold_gram_blocks(lam_x_b, lam_x_b)
+    U = fold_gram_blocks(lam_z_b, lam_x_b)
+    S = fold_gram_blocks(lam_z_b, lam_z_b)
     if data_axes is not None:
         V, U, S = jax.lax.psum((V, U, S), data_axes)
     return V, U, S

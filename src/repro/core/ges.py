@@ -147,7 +147,11 @@ def ges(
             for _, _, y, _, with_set, without_set in cands:
                 configs.add(config_key(y, with_set))
                 configs.add(config_key(y, without_set))
-            configs = sorted(configs)
+            # Group the frontier by parent set (then node): the batched
+            # engine computes its z-side fold cores once per parent set,
+            # and handing it each parent set's children contiguously keeps
+            # a sweep's shared-core chunks dense instead of interleaved.
+            configs = sorted(configs, key=lambda c: (c[1], c[0]))
             if batch_hook is not None:
                 batch_hook(scorer, configs)
             else:

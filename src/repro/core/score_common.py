@@ -11,6 +11,7 @@ naive per-fold recomputation (recorded in EXPERIMENTS.md §Perf).
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 
 import numpy as np
@@ -35,22 +36,33 @@ def config_key(i, parents=()) -> tuple:
 
 
 class GramBlockCache:
-    """Host-side cache of per-fold Gram blocks keyed on ``(key_a, key_b)``
-    canonical variable-set keys (``set_key`` tuples).
+    """Host-side LRU cache of per-fold Gram blocks keyed on ``(key_a,
+    key_b)`` canonical variable-set keys (``set_key`` tuples).
 
     The batched frontier engine stores each diagonal block V = X_q^T X_q
     under ``(kx, kx)``, each S = Z_q^T Z_q under ``(kz, kz)`` and each cross
     block U = Z_q^T X_q under ``(kz, kx)`` — so a child's Grams are computed
     once per sweep no matter how many candidate parent sets reference it,
-    and persist across sweeps.  Hit/miss counters expose the sharing
-    structure to tests and perf tooling.  The exact-CV scorer reuses the
-    same interface for its centered kernel matrices.
+    and persist across sweeps.  Hit/miss/eviction counters expose the
+    sharing structure to tests and perf tooling.  The exact-CV scorer
+    reuses the same interface for its centered kernel matrices.
+
+    ``max_entries`` bounds the store with least-recently-used eviction
+    (both get and put refresh recency): a long GES search would otherwise
+    grow the cache monotonically — one U block per (parent set, child)
+    pair ever scored.  None (the default here) means unbounded; the
+    CV-LR scorer sizes it to the sweep working set (see
+    ``CVLRScorer.DEFAULT_GRAM_CACHE_ENTRIES``).
     """
 
-    def __init__(self):
-        self._store: dict = {}
+    def __init__(self, max_entries: int | None = None):
+        if max_entries is not None and max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1 or None, got {max_entries}")
+        self._store: collections.OrderedDict = collections.OrderedDict()
+        self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def __contains__(self, key) -> bool:
         return key in self._store
@@ -60,23 +72,38 @@ class GramBlockCache:
 
     def get(self, key):
         """Counted lookup: returns the block or None (and tallies hit/miss)."""
-        if key in self._store:
-            self.hits += 1
-            return self._store[key]
-        self.misses += 1
-        return None
+        try:
+            value = self._store[key]
+        except KeyError:
+            self.misses += 1
+            return None
+        self._store.move_to_end(key)
+        self.hits += 1
+        return value
 
     def put(self, key, value) -> None:
         self._store[key] = value
+        self._store.move_to_end(key)
+        if self.max_entries is not None:
+            while len(self._store) > self.max_entries:
+                self._store.popitem(last=False)
+                self.evictions += 1
 
     def clear(self) -> None:
         self._store.clear()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     @property
     def stats(self) -> dict:
-        return {"hits": self.hits, "misses": self.misses, "entries": len(self._store)}
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "entries": len(self._store),
+            "max_entries": self.max_entries,
+        }
 
 
 @dataclasses.dataclass(frozen=True)

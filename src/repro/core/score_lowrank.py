@@ -34,19 +34,25 @@ Grams G_xx = X^T X etc. fall out of the per-fold test Grams by summing the
 fold axis, and each fold's train blocks are P_q = G_xx - V_q — O(n m^2)
 total for ALL Q folds instead of O(Q n m^2).
 
-The module has one copy of the fold algebra (`scores_from_fold_blocks`),
-consumed three ways:
+The module has one copy of the per-fold algebra (`_fold_score_lr_core`,
+reached via `scores_from_fold_blocks` when the z-core is computed inline
+and via `_scores_zshared_idx` when it is shared), consumed three ways:
 
 * `cvlr_score_from_features` — single-config sequential score (the oracle);
 * `cvlr_scores_batched` — the GES frontier engine: a device-resident
-  feature bank, a Gram-block cache keyed on (set_a, set_b) so V/U/S blocks
-  are computed once per feature *pair* instead of once per candidate, live-
-  rank bucketed trimming (zero padding is score-neutral, so slicing to the
-  batch's max m_eff is exact), and chunked batched fold algebra — one
-  device dispatch per ~64 candidates instead of one (plus a host sync) per
-  candidate;
-* `repro.core.distributed_score` — the same kernel under shard_map, with
-  Gram blocks psum'd over the data axis.
+  feature bank, an LRU Gram-block cache keyed on (set_a, set_b) so V/U/S
+  blocks are computed once per feature *pair* instead of once per
+  candidate, live-rank bucketed trimming (zero padding is score-neutral,
+  so slicing to the batch's max m_eff is exact), the fused fold-Gram
+  strip kernel (`repro.kernels.fold_gram_strip`) for every Gram-block
+  stage, a *z-shared fold-core* stage (`_z_fold_cores`: F and the
+  Cholesky of (F + n1 l I) depend only on (parent set, fold), so they
+  are computed once per parent set and reused across all of its
+  children), and chunked batched fold algebra — one device dispatch per
+  ~64 candidates instead of one (plus a host sync) per candidate;
+* `repro.core.distributed_score` — the same fold algebra and fused
+  Gram kernel under shard_map, with Gram blocks psum'd over the data
+  axis.
 """
 
 from __future__ import annotations
@@ -58,6 +64,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lowrank import lowrank_features
+from repro.kernels import fold_gram_strip
 from repro.core.score_common import (
     GramBlockCache,
     ScoreConfig,
@@ -75,14 +82,27 @@ def _fold_score_lr(P, E, F, V, U, S, n0, n1, lmbda, gamma):
     of the regularized matrix serves every F-solve, and the identities
     only ever need D E (an mz x mx solve, usually mx << mz) and F D E —
     O(mz^2 mx) instead of the O(mz^3) explicit inverse."""
-    mx, mz = P.shape[0], F.shape[0]
+    n1l = n1 * lmbda
+    eye_z = jnp.eye(F.shape[0], dtype=P.dtype)
+    chol_f = jnp.linalg.cholesky(F + n1l * eye_z)
+    return _fold_score_lr_core(P, E, F, chol_f, V, U, S, n0, n1, lmbda, gamma)
+
+
+def _fold_score_lr_core(P, E, F, chol_f, V, U, S, n0, n1, lmbda, gamma):
+    """The single copy of the per-fold dumbbell algebra, with the z-side
+    Cholesky factor of (F + n1 l I) supplied by the caller.
+
+    F and chol_f depend only on the *parent set* and the fold — never on
+    the child — so the batched frontier engine computes them once per
+    (parent set, fold) in its shared-core stage and reuses them across
+    every child of that parent set; `_fold_score_lr` recomputes them
+    inline for the single-config / distributed paths."""
+    mx = P.shape[0]
     dtype = P.dtype
     beta = lmbda * lmbda / gamma
     n1l = n1 * lmbda
     eye_x = jnp.eye(mx, dtype=dtype)
-    eye_z = jnp.eye(mz, dtype=dtype)
 
-    chol_f = jnp.linalg.cholesky(F + n1l * eye_z)
     DE = jax.scipy.linalg.cho_solve((chol_f, True), E)  # D E
     FDE = F @ DE
     Jt = (E - FDE) / n1l  # (I - F D) E / (n1 l) = Z1^T A X1
@@ -163,35 +183,50 @@ def scores_from_fold_blocks(V, U, S, n0, n1, lmbda, gamma):
     return jax.vmap(one)(V, U, S)
 
 
-cvlr_scores_from_blocks = partial(jax.jit, static_argnames=("n0", "n1"))(
-    scores_from_fold_blocks
-)
+@jax.jit
+def _z_fold_cores(S, n1l):
+    """Shared z-side fold cores, once per (parent set, fold).
 
-
-@partial(jax.jit, static_argnames=("q",))
-def _fold_block_grams(fa, fb, q: int):
-    """Per-fold test Gram blocks for a stack of factor pairs.
-
-    fa: (B, n_eff, ma), fb: (B, n_eff, mb)  ->  (B, q, ma, mb) with
-    out[b, i] = fa[b, fold_i]^T fb[b, fold_i].  One einsum for the whole
-    stack: O(B n ma mb) and a single device dispatch.
+    S: (Nz, q, mz, mz) stacked per-fold test Grams Z_q^T Z_q of the
+    distinct parent sets of a sweep.  Returns (F, chol_f), each
+    (Nz, q, mz, mz): the train Gram F_q = G_zz - S_q (cross-fold trick)
+    and the Cholesky factor of (F_q + n1 l I) — the O(mz^3) piece of the
+    fold algebra that does NOT depend on the child, hoisted out of the
+    per-candidate score so a parent set pays for it once no matter how
+    many of its children the frontier scores.  An all-zero S row (the
+    |Z|=0 specialization) yields chol_f = sqrt(n1 l) I exactly.
     """
-    b, n_eff, ma = fa.shape
-    n0 = n_eff // q
-    fa_b = fa.reshape(b, q, n0, ma)
-    fb_b = fb.reshape(b, q, n0, fb.shape[-1])
-    return jnp.einsum("bqni,bqnj->bqij", fa_b, fb_b)
+    gzz = jnp.sum(S, axis=1, keepdims=True)
+    F = gzz - S
+    eye_z = jnp.eye(S.shape[-1], dtype=S.dtype)
+    chol_f = jnp.linalg.cholesky(F + n1l * eye_z)
+    return F, chol_f
 
 
-@partial(jax.jit, static_argnames=("q",))
-def _fold_block_grams_idx(bank_a, bank_b, ia, ib, q: int):
-    """Gather-then-Gram, fused in one dispatch: bank_a (Sa, n_eff, ma) and
-    bank_b (Sb, n_eff, mb) are stacked trimmed feature banks, ia/ib (C,)
-    index the pairs of a chunk.  Gathering *inside* the jit keeps the
-    per-chunk host work to a single call — per-pair jnp.stack of bank
-    slices was measured at ~0.2 s/chunk of pure dispatch overhead, 15x the
-    einsum itself."""
-    return _fold_block_grams(bank_a[ia], bank_b[ib], q)
+@partial(jax.jit, static_argnames=("n0", "n1"))
+def _scores_zshared_idx(V, U, s_bank, f_bank, chol_bank, iz, n0, n1, lmbda, gamma):
+    """Batched CV-LR scores from per-candidate V/U blocks + shared z-cores.
+
+    V: (B, q, mx, mx), U: (B, q, mz, mx) per candidate;
+    s_bank/f_bank/chol_bank: (Nz, q, mz, mz) per *parent set* (from
+    `_z_fold_cores`); iz: (B,) parent-set bank index per candidate.
+    Gathering the cores inside the jit keeps the chunk to one dispatch and
+    never re-materializes S per candidate on the host.
+    """
+
+    def one(v, u, s, f, ch):
+        gxx = jnp.sum(v, axis=0)
+        gzx = jnp.sum(u, axis=0)
+        fold = jax.vmap(
+            lambda p, e, ff, chh, vv, uu, ss: _fold_score_lr_core(
+                p, e, ff, chh, vv, uu, ss, n0, n1, lmbda, gamma
+            )
+        )
+        return jnp.mean(
+            fold(gxx[None] - v, gzx[None] - u, f, ch, v, u, s)
+        )
+
+    return jax.vmap(one)(V, U, s_bank[iz], f_bank[iz], chol_bank[iz])
 
 
 def _bucket(m: int, cap: int) -> int:
@@ -204,6 +239,10 @@ def _bucket(m: int, cap: int) -> int:
     return cap
 
 
+# An extra 80 step between 64 and 96 was tried and REFUTED: the trim
+# saving is outweighed by group fragmentation (more bank restacks, more
+# pow2-padded short chunks) — measured 32/s vs 75/s on the d=32/n=10k
+# frontier cell.
 _BUCKET_LADDER = (8, 16, 32, 48, 64, 96)
 
 
@@ -240,11 +279,20 @@ def cvlr_scores_batched(
     pairs: (B, 2) ints, pairs[b] = (x_bank_idx, z_bank_idx) — one row per
     frontier configuration.  Returns (B,) float64 scores.
 
-    Work is shared at the Gram-block level: V = X_q^T X_q once per child,
-    S = Z_q^T Z_q once per parent set, U = Z_q^T X_q once per (parent-set,
-    child) pair — never once per candidate — with blocks stored in
-    `gram_cache` (keyed on (set_key_a, set_key_b)) so they persist across
-    sweeps.  Every factor takes part only at its *bucketed live rank*:
+    Work is shared at two levels.  Gram blocks: V = X_q^T X_q once per
+    child, S = Z_q^T Z_q once per parent set, U = Z_q^T X_q once per
+    *unordered* (parent-set, child) factor pair (U(a, b) = U(b, a)^T, so
+    the X -> Y and Y -> X candidates of a symmetric frontier share one
+    block) — never once per candidate — all produced by
+    the fused fold-Gram strip kernel (`repro.kernels.fold_gram_strip`:
+    bank-gather + fold-blocked contraction in one dispatch, a tiled
+    Pallas kernel on TPU) and stored in `gram_cache` (LRU, keyed on
+    (set_key_a, set_key_b)) so they persist across sweeps.  Fold cores:
+    the z-side train Gram F_q and its Cholesky factor depend only on
+    (parent set, fold), so `_z_fold_cores` computes them once per parent
+    set and every child of that set reuses them (the candidates are
+    grouped by parent set; see `_scores_zshared_idx`).  Every factor
+    takes part only at its *bucketed live rank*:
     zero-padded columns are provably score-neutral
     (tests/test_score_lowrank.py::test_zero_padding_is_exact), so slicing
     to a per-set bucket is exact while cutting the m^2/m^3 terms by the
@@ -318,64 +366,100 @@ def cvlr_scores_batched(
                 ea, eb = trim(spec)
                 _store(key, out[j], ea, eb)
 
-    def _diag_blocks(missing, bank, m_eff, buckets):
-        """Diagonal per-fold Grams, grouped by bucket width, chunked with
-        pow2-padded stack heights (shape-stable, cheap einsum variants)."""
+    banks = {"x": lam_x_bank, "z": lam_z_bank}
+    m_effs = {"x": m_eff_x, "z": m_eff_z}
+    bucks = {"x": bx, "z": bz}
+
+    def _stack_refs(refs, w, cap):
+        """One stacked, trimmed device bank for the fused strip kernel:
+        refs are (side, bank_idx) pairs; height is pow2-padded (capped at
+        `cap`) with zero factors so chunk shapes stay jit-stable."""
+        dt = banks[refs[0][0]][0].dtype
+        return jnp.stack(
+            [_take(banks[s][i], w) for s, i in refs]
+            + [jnp.zeros((n_eff, w), dt)]
+            * (_pow2_pad(len(refs), cap) - len(refs))
+        )
+
+    def _diag_blocks(missing, side):
+        """Diagonal per-fold Grams, grouped by bucket width.  Each group
+        stacks its unique trimmed factors once (pow2-padded height) and
+        runs fused strip-kernel chunks with ia == ib — one dispatch per
+        `pair_chunk` sets, no per-chunk restacking."""
+        buckets, m_eff = bucks[side], m_effs[side]
         groups: dict = {}
         for key, i in missing:
             groups.setdefault(buckets[i], []).append((key, i))
         pending = []
         for w, items in sorted(groups.items()):
+            ids = sorted({i for _, i in items})
+            loc = {i: k for k, i in enumerate(ids)}
+            st = _stack_refs([(side, i) for i in ids], w, len(banks[side]))
             for c0 in range(0, len(items), pair_chunk):
                 chunk = items[c0 : c0 + pair_chunk]
                 cpad = _pow2_pad(len(chunk), pair_chunk)
-                ids = [i for _, i in chunk]
-                ids += [ids[0]] * (cpad - len(ids))
-                st = jnp.stack([_take(bank[i], w) for i in ids])
-                pending.append((_fold_block_grams(st, st, q), chunk))
+                ii = [loc[i] for _, i in chunk]
+                ii += [ii[0]] * (cpad - len(ii))
+                idx = np.asarray(ii, np.int32)
+                pending.append((fold_gram_strip(st, st, idx, idx, q), chunk))
         _drain(pending, lambda i: (m_eff[i], m_eff[i]))
 
+    def _cross_key(zi, xi):
+        """Canonical cache identity of the cross block U = Z_q^T X_q.
+
+        U(a, b) and U(b, a) are fold-wise transposes, so the block is
+        keyed on the *unordered* factor pair (ordered by a total,
+        type-safe repr order): a frontier that scores both X -> Y and
+        Y -> X — every symmetric sweep — computes one block, not two.
+        Returns (cache_key, transposed, ((side, idx) canonical a, b)):
+        `transposed` tells the consumer the stored block is X_q^T Z_q.
+        """
+        zk, xk = z_keys[zi], x_keys[xi]
+        if repr(zk) <= repr(xk):
+            return (zk, xk), False, (("z", zi), ("x", xi))
+        return (xk, zk), True, (("x", xi), ("z", zi))
+
     def _cross_blocks(missing):
-        """Cross per-fold Grams U = Z_q^T X_q, grouped by (bucket_z,
-        bucket_x).  Each group stacks its unique z / x factors once
-        (pow2-padded heights) and runs fused gather+Gram chunks — one
-        dispatch per `pair_chunk` pairs."""
+        """Cross per-fold Grams A_q^T B_q for canonical factor pairs,
+        grouped by (bucket_a, bucket_b).  Each group stacks its unique
+        factors once per side (pow2-padded heights) and runs fused
+        strip-kernel chunks — one dispatch per `pair_chunk` pairs; on TPU
+        the factor rows stream HBM->VMEM once with no gathered
+        (B, q, n0, m) intermediate."""
         groups: dict = {}
-        for key, (zi, xi) in missing:
-            groups.setdefault((bz[zi], bx[xi]), []).append((key, (zi, xi)))
+        for key, (ra, rb) in missing:
+            wa = bucks[ra[0]][ra[1]]
+            wb = bucks[rb[0]][rb[1]]
+            groups.setdefault((wa, wb), []).append((key, (ra, rb)))
         pending = []
-        for (wz, wx), items in sorted(groups.items()):
-            z_ids = sorted({zi for _, (zi, _) in items})
-            x_ids = sorted({xi for _, (_, xi) in items})
-            z_pad = _pow2_pad(len(z_ids), len(lam_z_bank))
-            x_pad = _pow2_pad(len(x_ids), len(lam_x_bank))
-            z_loc = {i: k for k, i in enumerate(z_ids)}
-            x_loc = {i: k for k, i in enumerate(x_ids)}
-            dt = lam_z_bank[0].dtype
-            za = jnp.stack(
-                [_take(lam_z_bank[i], wz) for i in z_ids]
-                + [jnp.zeros((n_eff, wz), dt)] * (z_pad - len(z_ids))
-            )
-            xa = jnp.stack(
-                [_take(lam_x_bank[i], wx) for i in x_ids]
-                + [jnp.zeros((n_eff, wx), dt)] * (x_pad - len(x_ids))
-            )
+        cap = len(lam_x_bank) + len(lam_z_bank)
+        for (wa, wb), items in sorted(groups.items()):
+            a_refs = sorted({ra for _, (ra, _) in items})
+            b_refs = sorted({rb for _, (_, rb) in items})
+            a_loc = {r: k for k, r in enumerate(a_refs)}
+            b_loc = {r: k for k, r in enumerate(b_refs)}
+            aa = _stack_refs(a_refs, wa, cap)
+            bb = _stack_refs(b_refs, wb, cap)
             for c0 in range(0, len(items), pair_chunk):
                 chunk = items[c0 : c0 + pair_chunk]
                 cpad = _pow2_pad(len(chunk), pair_chunk)
-                ia = [z_loc[zi] for _, (zi, _) in chunk]
-                ib = [x_loc[xi] for _, (_, xi) in chunk]
+                ia = [a_loc[ra] for _, (ra, _) in chunk]
+                ib = [b_loc[rb] for _, (_, rb) in chunk]
                 ia += [ia[0]] * (cpad - len(ia))
                 ib += [ib[0]] * (cpad - len(ib))
                 pending.append(
                     (
-                        _fold_block_grams_idx(
-                            za, xa, jnp.asarray(ia), jnp.asarray(ib), q
+                        fold_gram_strip(
+                            aa, bb, np.asarray(ia, np.int32),
+                            np.asarray(ib, np.int32), q,
                         ),
                         chunk,
                     )
                 )
-        _drain(pending, lambda zx: (m_eff_z[zx[0]], m_eff_x[zx[1]]))
+        _drain(
+            pending,
+            lambda ab: (m_effs[ab[0][0]][ab[0][1]], m_effs[ab[1][0]][ab[1][1]]),
+        )
 
     # -- diagonal blocks: V once per child set, S once per parent set ----
     need_v = {}
@@ -384,33 +468,58 @@ def cvlr_scores_batched(
             need_v[(x_keys[i], x_keys[i])] = i
         else:
             blocks[(x_keys[i], x_keys[i])] = np.zeros((q, 0, 0))
-    _diag_blocks(_gather_missing(need_v), lam_x_bank, m_eff_x, bx)
+    _diag_blocks(_gather_missing(need_v), "x")
     need_s = {}
     for i in zs_used:
         if m_eff_z[i] > 0:
             need_s[(z_keys[i], z_keys[i])] = i
         else:
             blocks[(z_keys[i], z_keys[i])] = np.zeros((q, 0, 0))
-    _diag_blocks(_gather_missing(need_s), lam_z_bank, m_eff_z, bz)
-    # -- cross blocks: U once per (parent-set, child) pair ---------------
+    _diag_blocks(_gather_missing(need_s), "z")
+    # -- cross blocks: one per unordered (parent-set, child) factor pair -
     need_u = {}
     for xi, zi in {(int(a), int(b)) for a, b in pairs}:
+        key, transposed, refs = _cross_key(zi, xi)
         if m_eff_z[zi] == 0:
-            blocks[(z_keys[zi], x_keys[xi])] = np.zeros((q, 0, m_eff_x[xi]))
+            mx = m_eff_x[xi]
+            blocks[key] = np.zeros((q, mx, 0) if transposed else (q, 0, mx))
         else:
-            need_u[(z_keys[zi], x_keys[xi])] = (zi, xi)
+            need_u[key] = refs
     _cross_blocks(_gather_missing(need_u))
 
-    # -- fold algebra: grouped by (bucket_z, bucket_x), fixed-size chunks -
+    # -- z-shared fold cores: Cholesky once per (parent set, fold) --------
     lm = jnp.asarray(lmbda, jnp.float64)
     gm = jnp.asarray(gamma, jnp.float64)
+    n1l = jnp.asarray(n1 * lmbda, jnp.float64)
+    wz_of = {zi: bz.get(zi, _BUCKET_LADDER[0]) for zi in zs_used}
     score_groups: dict = {}
     for b, (xi, zi) in enumerate(pairs):
-        wkey = (bz.get(zi, _BUCKET_LADDER[0]), bx[xi])
-        score_groups.setdefault(wkey, []).append(b)
+        score_groups.setdefault((wz_of[zi], bx[xi]), []).append(b)
+    # Group the sweep's distinct parent sets by bucket width and build the
+    # per-width core banks: stacked S blocks -> (F, chol_f) once per
+    # parent set, device-resident, reused by every child of that set.  A
+    # |Z|=0 set contributes an all-zero S row (the exact specialization).
+    z_by_w: dict = {}
+    for zi in zs_used:
+        z_by_w.setdefault(wz_of[zi], []).append(zi)
+    z_cores: dict = {}  # wz -> (s_bank, f_bank, chol_bank) device tensors
+    z_loc: dict = {}  # zi -> row in its width's core bank
+    for w, zids in sorted(z_by_w.items()):
+        npad = _pow2_pad(len(zids), len(lam_z_bank))
+        s_host = np.zeros((npad, q, w, w))
+        for k, zi in enumerate(sorted(zids)):
+            z_loc[zi] = k
+            bs = blocks[(z_keys[zi], z_keys[zi])]
+            s_host[k, :, : bs.shape[1], : bs.shape[2]] = bs
+        s_bank = jnp.asarray(s_host)
+        f_bank, chol_bank = _z_fold_cores(s_bank, n1l)
+        z_cores[w] = (s_bank, f_bank, chol_bank)
+
+    # -- fold algebra: grouped by (bucket_z, bucket_x), fixed-size chunks -
     scores = np.empty((n_pairs,), dtype=np.float64)
     in_flight = []  # (device scores, target pair indices) — drained at the end
     for (wz, wx), idxs in sorted(score_groups.items()):
+        s_bank, f_bank, chol_bank = z_cores[wz]
         g = len(idxs)
         c0 = 0
         while c0 < g:
@@ -424,22 +533,27 @@ def cvlr_scores_batched(
                 else max(score_chunk // 4, _pow2_pad(rem, score_chunk))
             )
             hi = min(c0 + size, g)
-            # assemble ONLY this chunk's padded blocks: peak host memory
-            # stays O(score_chunk), not O(frontier); pad rows repeat row 0
+            # assemble ONLY this chunk's padded V/U blocks: peak host
+            # memory stays O(score_chunk), not O(frontier), and the mz x mz
+            # S/F/chol tensors are never re-stacked per candidate — the
+            # chunk indexes the shared core banks; pad rows repeat row 0
             V = np.zeros((size, q, wx, wx))
             U = np.zeros((size, q, wz, wx))
-            S = np.zeros((size, q, wz, wz))
+            iz = np.zeros((size,), np.int32)
             chunk_idxs = idxs[c0:hi] + [idxs[c0]] * (size - (hi - c0))
             for row, b in enumerate(chunk_idxs):
                 xi, zi = int(pairs[b, 0]), int(pairs[b, 1])
                 bv = blocks[(x_keys[xi], x_keys[xi])]
-                bu = blocks[(z_keys[zi], x_keys[xi])]
-                bs = blocks[(z_keys[zi], z_keys[zi])]
+                ck, transposed, _ = _cross_key(zi, xi)
+                bu = blocks[ck]
+                if transposed:  # stored as X_q^T Z_q; assignment copies
+                    bu = bu.transpose(0, 2, 1)
                 V[row, :, : bv.shape[1], : bv.shape[2]] = bv
                 U[row, :, : bu.shape[1], : bu.shape[2]] = bu
-                S[row, :, : bs.shape[1], : bs.shape[2]] = bs
-            out = cvlr_scores_from_blocks(
-                jnp.asarray(V), jnp.asarray(U), jnp.asarray(S),
+                iz[row] = z_loc[zi]
+            out = _scores_zshared_idx(
+                jnp.asarray(V), jnp.asarray(U),
+                s_bank, f_bank, chol_bank, jnp.asarray(iz),
                 n0, n1, lm, gm,
             )
             in_flight.append((out, np.asarray(idxs[c0:hi])))
@@ -453,6 +567,14 @@ def cvlr_scores_batched(
 class CVLRScorer(ScorerBase):
     """The paper's method: CV-LR local score with Alg. 1/Alg. 2 features."""
 
+    # LRU bound on the Gram-block cache, sized to the sweep working set: a
+    # sweep touches d diagonal V blocks, O(d) S blocks and one U block per
+    # (parent set, child) pair — ~d + d^2 entries on a sweep-1 frontier —
+    # so 4096 holds every block of a d <= 60 sweep with room for the
+    # previous sweep's overlap, while bounding a long search's footprint
+    # (blocks are (q, m, m) float64, worst case ~0.7 MB each at m = 96).
+    DEFAULT_GRAM_CACHE_ENTRIES = 4096
+
     def __init__(
         self,
         data,
@@ -460,13 +582,14 @@ class CVLRScorer(ScorerBase):
         discrete=None,
         config: ScoreConfig | None = None,
         batched: bool = True,
+        gram_cache_entries: int | None = DEFAULT_GRAM_CACHE_ENTRIES,
     ):
         config = config or ScoreConfig()
         super().__init__(VariableView(data, dims, discrete), config)
         self._feat_cache: dict = {}
         self.m_eff_log: dict = {}  # vars_key -> effective rank (diagnostics)
         self.batched = batched  # False => ges() falls back to lazy local_score
-        self.gram_cache = GramBlockCache()
+        self.gram_cache = GramBlockCache(max_entries=gram_cache_entries)
 
     def features(self, vars_key: tuple) -> jnp.ndarray:
         """Centered (n_eff, m_max) factor for a variable set (cached).

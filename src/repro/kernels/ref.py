@@ -17,3 +17,20 @@ def centered_gram_ref(lam: jnp.ndarray) -> jnp.ndarray:
     """C = (Lam - mean)^T (Lam - mean) over rows; lam (n, m) -> (m, m)."""
     lc = lam - jnp.mean(lam, axis=0, keepdims=True)
     return lc.T @ lc
+
+
+def fold_gram_strip_ref(bank_a, bank_b, ia, ib, q: int) -> jnp.ndarray:
+    """Gather-then-Gram oracle for the fused fold-Gram strip kernel.
+
+    bank_a (Sa, n_eff, ma), bank_b (Sb, n_eff, mb), ia/ib (B,) ints with
+    n_eff = q * n0 -> (B, q, ma, mb):
+    out[c, f] = bank_a[ia[c], fold_f]^T bank_b[ib[c], fold_f].
+
+    Materializes the gathered (B, q, n0, m) intermediates the fused kernel
+    exists to avoid — the correctness reference, not the fast path.
+    """
+    n_eff = bank_a.shape[1]
+    n0 = n_eff // q
+    fa = bank_a[jnp.asarray(ia)].reshape(len(ia), q, n0, bank_a.shape[-1])
+    fb = bank_b[jnp.asarray(ib)].reshape(len(ib), q, n0, bank_b.shape[-1])
+    return jnp.einsum("cqni,cqnj->cqij", fa, fb)

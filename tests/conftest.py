@@ -9,3 +9,35 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 for p in (os.path.join(_ROOT, "src"), _ROOT):
     if p not in sys.path:
         sys.path.insert(0, p)
+
+
+def _purge_stale_bytecode(root: str) -> None:
+    """Tier-1 collection guard against the stale-bytecode hazard.
+
+    A `__pycache__/*.pyc` whose source was edited (or deleted) can shadow
+    the edit when filesystem mtime granularity or a checkout tool defeats
+    CPython's mtime-based invalidation — tests then silently exercise old
+    code.  Before anything under src/ is imported, drop every cached file
+    that is orphaned or not strictly newer than its source."""
+    for dirpath, dirnames, filenames in os.walk(root):
+        if os.path.basename(dirpath) != "__pycache__":
+            continue
+        src_dir = os.path.dirname(dirpath)
+        for fname in filenames:
+            if not fname.endswith(".pyc"):
+                continue
+            src = os.path.join(src_dir, fname.split(".")[0] + ".py")
+            pyc = os.path.join(dirpath, fname)
+            try:
+                if not os.path.exists(src) or os.path.getmtime(
+                    src
+                ) >= os.path.getmtime(pyc):
+                    os.unlink(pyc)
+            except OSError:  # concurrent cleanup / read-only checkout
+                pass
+
+
+# Everything importable in-process is guarded: the library (src/), the
+# test modules themselves, and the benchmarks package (also on sys.path).
+for _d in ("src", "tests", "benchmarks"):
+    _purge_stale_bytecode(os.path.join(_ROOT, _d))

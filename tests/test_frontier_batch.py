@@ -12,10 +12,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.api import causal_discover
+from repro.core.api import causal_discover, make_scorer
 from repro.core.ges import ges
 from repro.core.lowrank import lowrank_features
-from repro.core.score_common import ScoreConfig, config_key
+from repro.core.score_common import GramBlockCache, ScoreConfig, config_key
 from repro.core.score_lowrank import (
     CVLRScorer,
     cvlr_score_from_features,
@@ -107,26 +107,100 @@ def test_cvlr_scores_batched_direct_banks():
 def test_gram_cache_hit_counts_match_predicted_sharing():
     """Sweep-1 frontier with d children: each child's diagonal Gram blocks
     are computed exactly once (d misses), the single-variable parent sets
-    reuse them (d hits), cross blocks are one miss per (parent, child)
-    pair — and a re-scored identical frontier is 100% hits."""
+    reuse them (d hits), cross blocks are one miss per *unordered*
+    (parent, child) factor pair — U(a, b) = U(b, a)^T, so the X -> Y and
+    Y -> X candidates share one block and the cross-Gram work halves —
+    and a re-scored identical frontier is 100% hits."""
     rng = np.random.default_rng(7)
     d, n = 4, 200
     data = rng.standard_normal((n, d))
     s = CVLRScorer(data, config=ScoreConfig(seed=0))
     configs = _frontier_configs(d)
     s.prefetch(configs)
-    n_pairs = d * (d - 1)
+    n_cross = d * (d - 1) // 2  # unordered pairs
     # diag V: d misses; diag S (single-var z == child sets): d hits;
-    # cross U: one miss per pair; |Z|=0 blocks never touch the cache.
-    assert s.gram_cache.misses == d + n_pairs, s.gram_cache.stats
+    # cross U: one miss per unordered pair (both orientations collapse
+    # onto the canonical key); |Z|=0 blocks never touch the cache.
+    assert s.gram_cache.misses == d + n_cross, s.gram_cache.stats
     assert s.gram_cache.hits == d, s.gram_cache.stats
-    assert len(s.gram_cache) == d + n_pairs
+    assert len(s.gram_cache) == d + n_cross
+    assert s.gram_cache.evictions == 0, s.gram_cache.stats
 
     # same frontier again, scores wiped: every Gram lookup is a hit.
     s._score_cache.clear()
     s.prefetch(configs)
-    assert s.gram_cache.misses == d + n_pairs, s.gram_cache.stats
-    assert s.gram_cache.hits == d + 2 * d + n_pairs, s.gram_cache.stats
+    assert s.gram_cache.misses == d + n_cross, s.gram_cache.stats
+    assert s.gram_cache.hits == d + 2 * d + n_cross, s.gram_cache.stats
+
+
+def test_zshared_cores_match_sequential_oracle():
+    """The z-shared fold-core path (one Cholesky per parent set, reused
+    across all of its children) == sequential oracle to <= 1e-8: frontiers
+    where one parent set has MANY children, mixing |Z| in {0, 1, 2, 3}
+    and bucket widths, so every score flows through a shared core."""
+    ds = generate_scm_data(d=7, n=280, density=0.5, kind="continuous", seed=13)
+    mk = lambda batched: CVLRScorer(
+        ds.data,
+        dims=ds.dims,
+        discrete=ds.discrete,
+        config=ScoreConfig(seed=3),
+        batched=batched,
+    )
+    s_bat, s_seq = mk(True), mk(False)
+    parent_sets = [(), (0,), (1, 2), (0, 3, 5)]
+    configs = [
+        (y, ps) for ps in parent_sets for y in range(7) if y not in ps
+    ]
+    n_done = s_bat.prefetch(configs)
+    assert n_done == len(configs)
+    for i, ps in configs:
+        got = s_bat._score_cache[config_key(i, ps)]
+        want = s_seq.local_score(i, ps)
+        assert _rel_err(got, want) <= 1e-8, (i, ps, got, want)
+
+
+def test_gram_cache_lru_eviction():
+    """LRU bound: least-recently-used entries evict first, get/put refresh
+    recency, and the eviction counter is exposed in stats."""
+    c = GramBlockCache(max_entries=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1  # refreshes "a" -> "b" is now LRU
+    c.put("x", 3)  # evicts "b"
+    assert c.get("b") is None
+    assert c.get("a") == 1 and c.get("x") == 3
+    assert c.evictions == 1 and len(c) == 2
+    st = c.stats
+    assert st["evictions"] == 1 and st["max_entries"] == 2
+    assert st["hits"] == 3 and st["misses"] == 1
+
+    unbounded = GramBlockCache()
+    assert unbounded.stats["max_entries"] is None
+    with pytest.raises(ValueError):
+        GramBlockCache(max_entries=0)
+
+
+def test_gram_cache_bound_is_configurable_and_exact_under_pressure():
+    """An engine squeezed to a tiny Gram cache (via api.make_scorer) must
+    recompute evicted blocks, never mis-score: results stay identical to
+    an unbounded-cache scorer, with evictions actually occurring."""
+    rng = np.random.default_rng(11)
+    d, n = 4, 200
+    data = rng.standard_normal((n, d))
+    configs = _frontier_configs(d)
+    tight = make_scorer(data, config=ScoreConfig(seed=0), gram_cache_entries=2)
+    loose = make_scorer(data, config=ScoreConfig(seed=0))
+    assert tight.gram_cache.max_entries == 2
+    tight.prefetch(configs)
+    loose.prefetch(configs)
+    # two sweeps to force re-derivation from an evicted state
+    tight._score_cache.clear()
+    tight.prefetch(configs)
+    assert tight.gram_cache.evictions > 0, tight.gram_cache.stats
+    for i, ps in configs:
+        a = tight._score_cache[config_key(i, ps)]
+        b = loose._score_cache[config_key(i, ps)]
+        assert _rel_err(a, b) <= 1e-12, (i, ps, a, b)
 
 
 def test_ges_batched_default_equals_sequential_search():

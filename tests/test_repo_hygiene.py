@@ -1,0 +1,75 @@
+"""Repo hygiene: compiled caches must never ship or shadow source.
+
+Companion to the conftest.py collection guard (`_purge_stale_bytecode`):
+these assert the *tracked* tree stays clean and the guard actually drops
+stale cache files.
+"""
+
+import os
+import subprocess
+import sys
+import time
+
+import pytest
+
+from conftest import _ROOT, _purge_stale_bytecode
+
+
+def _git(*args):
+    return subprocess.run(
+        ["git", *args], cwd=_ROOT, capture_output=True, text=True, timeout=60
+    )
+
+
+def test_no_bytecode_tracked_in_git():
+    """`__pycache__` / `.pyc` must never be committed: a tracked cache file
+    reappears on checkout and can shadow source edits forever."""
+    res = _git("ls-files")
+    if res.returncode != 0:
+        pytest.skip("not a git checkout")
+    bad = [
+        f
+        for f in res.stdout.splitlines()
+        if "__pycache__" in f or f.endswith((".pyc", ".pyo"))
+    ]
+    assert bad == [], f"compiled caches tracked in git: {bad}"
+
+
+def test_gitignore_covers_bytecode():
+    with open(os.path.join(_ROOT, ".gitignore")) as f:
+        lines = {ln.strip() for ln in f}
+    assert "__pycache__/" in lines
+    assert "*.pyc" in lines
+
+
+def test_collection_guard_purges_stale_and_orphaned_pyc(tmp_path):
+    """The conftest guard must drop (a) orphaned .pyc whose source is gone
+    and (b) .pyc not strictly newer than their source, while keeping a
+    fresh cache."""
+    pkg = tmp_path / "pkg"
+    cache = pkg / "__pycache__"
+    cache.mkdir(parents=True)
+    tag = sys.implementation.cache_tag or "cpython-310"
+
+    fresh_src = pkg / "fresh.py"
+    fresh_src.write_text("x = 1\n")
+    fresh_pyc = cache / f"fresh.{tag}.pyc"
+    fresh_pyc.write_bytes(b"\x00")
+    now = time.time()
+    os.utime(fresh_src, (now - 100, now - 100))
+    os.utime(fresh_pyc, (now, now))
+
+    stale_src = pkg / "stale.py"
+    stale_src.write_text("x = 2\n")
+    stale_pyc = cache / f"stale.{tag}.pyc"
+    stale_pyc.write_bytes(b"\x00")
+    os.utime(stale_src, (now, now))
+    os.utime(stale_pyc, (now - 100, now - 100))
+
+    orphan_pyc = cache / f"deleted_module.{tag}.pyc"
+    orphan_pyc.write_bytes(b"\x00")
+
+    _purge_stale_bytecode(str(tmp_path))
+    assert fresh_pyc.exists(), "fresh cache must be kept"
+    assert not stale_pyc.exists(), "stale cache must be purged"
+    assert not orphan_pyc.exists(), "orphaned cache must be purged"
