@@ -5,8 +5,13 @@ For each (d, n) cell the benchmark builds the sweep-1 GES frontier on
 synthetic SCM data — every Insert(X, Y, {}) needs (y, {x}) and (y, {})
 local scores, d^2 configurations total — and measures candidate-scores/sec
 through both paths of the SAME scorer state (features prebuilt, jit warm,
-so the comparison isolates the scoring engine).  Emits BENCH_frontier.json
-at the repo root so future PRs track the trajectory.
+so the comparison isolates the scoring engine).  Since PR 3 each cell also
+times the batched engine with the device-bank tier disabled
+(``device_bank_mb=0`` — the PR-2 host-assembly path) and records a
+per-stage wall split (Gram / z-cores / fold) for both engine paths via the
+engine's opt-in profiler, so the fold-stage host-assembly cost the
+device-resident pipeline removes stays visible in the json.  Emits
+BENCH_frontier.json at the repo root so future PRs track the trajectory.
 
 ``python -m benchmarks.frontier_scoring``            — full grid
 ``python -m benchmarks.frontier_scoring --quick``    — small cells only
@@ -60,20 +65,55 @@ def _bench_cell(d: int, n: int, seq_cap: int, seed: int = 0) -> dict:
     t_seq = time.perf_counter() - t0
     rate_seq = len(seq_configs) / t_seq
 
-    # -- batched engine, cold Gram cache (jit warmed on a half-size probe) --
-    warm = CVLRScorer(ds.data, config=ScoreConfig(seed=seed))
-    warm._feat_cache = scorer._feat_cache
-    warm.m_eff_log = scorer.m_eff_log
-    warm.prefetch(configs)  # compiles every chunk shape (not timed)
+    def _mk(**kw):
+        s = CVLRScorer(ds.data, config=ScoreConfig(seed=seed), **kw)
+        s._feat_cache = scorer._feat_cache  # shared prebuilt feature bank
+        s.m_eff_log = scorer.m_eff_log
+        return s
 
-    cold = CVLRScorer(ds.data, config=ScoreConfig(seed=seed))
-    cold._feat_cache = scorer._feat_cache
-    cold.m_eff_log = scorer.m_eff_log
-    t0 = time.perf_counter()
-    n_done = cold.prefetch(configs)
-    t_bat = time.perf_counter() - t0
-    assert n_done == len(configs)
-    rate_bat = len(configs) / t_bat
+    def _timed_cold(**kw):
+        """Warm the jit cache on one scorer, then time cold-cache runs
+        (best of 3: the 2-vCPU box throws scheduler stragglers that would
+        otherwise masquerade as engine regressions)."""
+        _mk(**kw).prefetch(configs)  # compiles every chunk shape (not timed)
+        best = None
+        for _ in range(3):
+            cold = _mk(**kw)
+            t0 = time.perf_counter()
+            n_done = cold.prefetch(configs)
+            dt = time.perf_counter() - t0
+            assert n_done == len(configs)
+            best = dt if best is None else min(best, dt)
+        return cold, len(configs) / best
+
+    def _timed_warm(scorer):
+        """Steady-state sweep: Gram cache fully hit (device-resident blocks
+        on the bank path), only the fold stage runs.  Best of 2."""
+        best = None
+        for _ in range(2):
+            scorer._score_cache.clear()
+            t0 = time.perf_counter()
+            scorer.prefetch(configs)
+            best = min(best or 1e9, time.perf_counter() - t0)
+        return len(configs) / best
+
+    # -- batched engine, device-resident fold pipeline (the default) ------
+    cold, rate_bat = _timed_cold()
+    # snapshot BEFORE the warm sweeps below inflate the hit counters: the
+    # recorded stats must keep describing the cold run, as in PR 1/2
+    gram_stats = dict(cold.gram_cache.stats)
+    rate_warm = _timed_warm(cold)
+    # -- batched engine, host-assembly path (device banks off: PR-2) ------
+    host_cold, rate_host = _timed_cold(device_bank_mb=0)
+    rate_warm_host = _timed_warm(host_cold)
+    # -- per-stage wall split, both paths (profiled passes sync at stage
+    # boundaries, so they are NOT the headline rates) ---------------------
+    stage_split = {}
+    for name, kw in (("device", {}), ("host", {"device_bank_mb": 0})):
+        t: dict = {}
+        _mk(**kw).prefetch(configs, timings=t)
+        assert t.pop("path") == name
+        stage_split[name] = {k: round(v, 4) for k, v in t.items()}
 
     # numerical agreement spot-check (engine == oracle)
     worst = 0.0
@@ -90,9 +130,14 @@ def _bench_cell(d: int, n: int, seq_cap: int, seed: int = 0) -> dict:
         "feature_build_s": round(t_features, 4),
         "seq_scores_per_sec": round(rate_seq, 3),
         "batched_scores_per_sec": round(rate_bat, 3),
+        "batched_hostpath_scores_per_sec": round(rate_host, 3),
+        "warm_sweep_scores_per_sec": round(rate_warm, 3),
+        "warm_sweep_hostpath_scores_per_sec": round(rate_warm_host, 3),
         "speedup": round(rate_bat / rate_seq, 3),
+        "device_vs_hostpath": round(rate_bat / rate_host, 3),
+        "stage_split_s": stage_split,
         "max_rel_err": worst,
-        "gram_cache": cold.gram_cache.stats,
+        "gram_cache": gram_stats,
     }
 
 
@@ -103,19 +148,21 @@ def run(quick: bool = False, out_path: str = OUT_PATH) -> dict:
         else [(d, n) for n in (1000, 10000) for d in (8, 16, 32)]
     )
     cells = []
-    print("d,n,n_configs,seq/s,batched/s,speedup,max_rel_err")
+    print("d,n,n_configs,seq/s,batched/s,hostpath/s,speedup,max_rel_err")
     for d, n in grid:
         cell = _bench_cell(d, n, seq_cap=24 if n >= 10000 else 48)
         cells.append(cell)
         print(
             f"{d},{n},{cell['n_configs']},{cell['seq_scores_per_sec']},"
-            f"{cell['batched_scores_per_sec']},{cell['speedup']},"
+            f"{cell['batched_scores_per_sec']},"
+            f"{cell['batched_hostpath_scores_per_sec']},{cell['speedup']},"
             f"{cell['max_rel_err']:.2e}"
         )
     result = {
         "benchmark": "frontier_scoring",
         "unit": "candidate-scores/sec",
-        "engine": "fold-gram-strip + z-shared fold cores (PR 2)",
+        "engine": "device-resident fold pipeline (Gram banks + gather-fold)"
+        " over fold-gram strips + z-shared cores (PR 3)",
         "quick": quick,
         "cells": cells,
     }

@@ -1,4 +1,16 @@
-"""Public API: build scorers, run causal discovery end-to-end."""
+"""Public API: build scorers, run causal discovery end-to-end.
+
+Two entry points:
+
+* `make_scorer` — construct a decomposable local scorer (`CVLRScorer`,
+  the paper's O(n) method, or `CVScorer`, the exact O(n^3) baseline) with
+  the engine knobs documented below.
+* `causal_discover` — `make_scorer` + GES in one call; returns the
+  estimated CPDAG.
+
+See README.md for a quickstart and docs/ARCHITECTURE.md for how the
+batched scoring engine behind these knobs is put together.
+"""
 
 from __future__ import annotations
 
@@ -18,23 +30,43 @@ def make_scorer(
     config: ScoreConfig | None = None,
     batched: bool = True,
     gram_cache_entries: int | None = CVLRScorer.DEFAULT_GRAM_CACHE_ENTRIES,
+    device_bank_mb: float | None = CVLRScorer.DEFAULT_DEVICE_BANK_MB,
 ):
-    """method: 'cvlr' (the paper) or 'cv' (exact O(n^3) baseline).
+    """Build a local scorer over an (n, cols) data matrix.
+
+    method: 'cvlr' (the paper's low-rank CV score) or 'cv' (exact O(n^3)
+    baseline).  dims / discrete: per-variable column widths and
+    discreteness flags (see `causal_discover`).  config: hyperparameters
+    (`ScoreConfig`; paper defaults).
 
     batched: let the CV-LR scorer evaluate GES frontiers through the
     batched engine (default); False forces the sequential per-candidate
     oracle path.  Ignored by the exact scorer, which is always lazy.
 
-    gram_cache_entries: LRU bound on the CV-LR Gram-block cache (None =
-    unbounded).  The default is sized to a sweep's working set — see
-    CVLRScorer.DEFAULT_GRAM_CACHE_ENTRIES; shrink it on memory-tight
-    hosts, grow it for very large frontiers.  Ignored by the exact
+    gram_cache_entries: LRU bound on the CV-LR Gram-block cache — the
+    total entry count across its host and device tiers (None = unbounded).
+    The default is sized to a sweep's working set — see
+    `CVLRScorer.DEFAULT_GRAM_CACHE_ENTRIES`; shrink it on memory-tight
+    hosts, grow it for very large frontiers.  Ignored by the exact scorer.
+
+    device_bank_mb: byte budget (in MB) for the Gram-block cache's
+    *device tier* — the device-resident fold pipeline, where the fused
+    Gram kernels scatter blocks straight into padded per-width device bank
+    tensors and the fold stage index-gathers them, with no host round-trip
+    between the stages (see `repro.core.score_lowrank.cvlr_scores_batched`
+    and docs/ARCHITECTURE.md).  Cached blocks persist on device across
+    sweeps and spill to the host tier only on LRU eviction.  0 or None
+    disables the tier: the engine then runs the host-assembly path (same
+    scores, bit-identical on CPU); a sweep whose working set exceeds the
+    budget falls back to that path automatically for just that sweep.
+    Default `CVLRScorer.DEFAULT_DEVICE_BANK_MB`.  Ignored by the exact
     scorer.
     """
     if method == "cvlr":
         return CVLRScorer(
             data, dims=dims, discrete=discrete, config=config, batched=batched,
             gram_cache_entries=gram_cache_entries,
+            device_bank_mb=device_bank_mb,
         )
     if method == "cv":
         return CVScorer(data, dims=dims, discrete=discrete, config=config)
@@ -52,6 +84,7 @@ def causal_discover(
     verbose: bool = False,
     batched: bool = True,
     gram_cache_entries: int | None = CVLRScorer.DEFAULT_GRAM_CACHE_ENTRIES,
+    device_bank_mb: float | None = CVLRScorer.DEFAULT_DEVICE_BANK_MB,
 ) -> GESResult:
     """GES + (CV-LR | CV) generalized score on an (n, cols) data matrix.
 
@@ -60,16 +93,18 @@ def causal_discover(
     batched: evaluate each GES frontier through the batched scoring engine
     (CV-LR only; the default).  On CPU (and under interpret mode) results
     are identical to the sequential path up to machine-precision
-    reassociation; on TPU the fused fold-Gram kernel contracts at f32
+    reassociation — this holds for both the device-bank and host-assembly
+    engine paths; on TPU the fused fold-Gram kernels contract at f32
     (Mosaic has no f64 MXU path — see repro/kernels/fold_gram.py), so
     batched scores there agree with the oracle only to f32 Gram accuracy
     (~1e-7 relative), like every other compiled kernel in repro.kernels.
-    gram_cache_entries: LRU bound on the Gram-block cache (see
-    `make_scorer`).
+    gram_cache_entries / device_bank_mb: Gram-block cache bounds — entry
+    count and device-tier byte budget (see `make_scorer`).
     Returns a GESResult whose `cpdag` is the estimated equivalence class.
     """
     scorer = make_scorer(
         data, method=method, dims=dims, discrete=discrete, config=config,
         batched=batched, gram_cache_entries=gram_cache_entries,
+        device_bank_mb=device_bank_mb,
     )
     return ges(scorer, max_subset=max_subset, batch_hook=batch_hook, verbose=verbose)

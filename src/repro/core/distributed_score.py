@@ -18,10 +18,15 @@ n0 over `data`.  Under `shard_map` the collective schedule is explicit and
 inspectable — the dry-run (launch/dryrun.py --arch cvlr_paper) lowers this
 exact function on the production mesh.
 
-All fold math lives in `score_lowrank.scores_from_fold_blocks` — this
-module only adds the einsum-to-blocks step and the collective schedule, so
-the local batched frontier engine and the sharded scorer can never drift
-apart numerically.
+All fold math lives in `score_lowrank.scores_from_fold_blocks`, which is
+itself a thin wrapper over the single fold-algebra copy
+(`score_lowrank._candidate_fold_scores` — the same core the local engine's
+device-bank fold jit gathers into, z-cores + batched Qm Cholesky included)
+— this module only adds the einsum-to-blocks step and the collective
+schedule, so the local batched frontier engine and the sharded scorer can
+never drift apart numerically.  (The local engine's device *bank* tier is
+deliberately not used here: under shard_map every candidate's factors are
+already device-resident shards with no cross-candidate sharing to cache.)
 """
 
 from __future__ import annotations

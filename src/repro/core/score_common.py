@@ -13,8 +13,23 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 
 import numpy as np
+
+try:  # the device tier stores jax arrays; the host tier is numpy-only
+    import jax
+    import jax.numpy as jnp
+except ImportError:  # pragma: no cover - jax is a hard dep of the scorers
+    jax = jnp = None
+
+if jax is not None:
+    # Promotion write: donated so re-promoting a spilled block updates the
+    # bank buffer in place instead of copying the whole bank per block
+    # (same policy as the fused compute-scatter in repro.kernels.ops).
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def _bank_set_row(bank, slot, row):
+        return bank.at[slot].set(row)
 
 
 def set_key(vars_idx) -> tuple:
@@ -35,8 +50,60 @@ def config_key(i, parents=()) -> tuple:
     return int(i), set_key(parents)
 
 
+class DeviceGramBank:
+    """One padded device tensor of per-fold Gram-block *slots* at a fixed
+    ``(wa, wb)`` bucket width: ``data`` has shape ``(n_slots, q, wa, wb)``.
+
+    Slot 0 is a permanent all-zero block (the exact |Z|=0 / rank-0 row any
+    gather may point at) and slot 1 is write-only scratch (chunk padding
+    rows scatter there so chunk shapes stay jit-stable without slicing);
+    neither is ever allocated to a key.  ``data`` updates are IN PLACE —
+    buffer donation on the jnp scatter paths, input/output aliasing in the
+    banked Pallas kernel — so the array object held in ``data`` before an
+    update is *consumed* (using it afterwards raises jax's deleted-array
+    error, loudly).  Never keep a reference to ``data`` across a scatter /
+    promotion; re-read it at use time.  In-flight reads are still safe:
+    on a single device stream every dispatched gather completes before a
+    later donated write executes.
+    """
+
+    ZERO_SLOT = 0  # permanent all-zero block; gather target for |Z|=0 rows
+    SCRATCH_SLOT = 1  # write-only; chunk padding rows scatter here
+    RESERVED_SLOTS = 2
+
+    def __init__(self, widths: tuple, q: int, dtype, n_slots: int):
+        self.widths = (int(widths[0]), int(widths[1]))
+        self.q = int(q)
+        self.dtype = np.dtype(dtype)
+        n_slots = max(int(n_slots), self.RESERVED_SLOTS + 1)
+        self.data = jnp.zeros(
+            (n_slots, self.q) + self.widths, dtype=self.dtype
+        )
+        self.free = list(range(n_slots - 1, self.RESERVED_SLOTS - 1, -1))
+
+    @property
+    def n_slots(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def slot_nbytes(self) -> int:
+        return self.q * self.widths[0] * self.widths[1] * self.dtype.itemsize
+
+    @property
+    def nbytes(self) -> int:
+        return self.n_slots * self.slot_nbytes
+
+    def grow_to(self, n_slots: int) -> None:
+        old = self.n_slots
+        if n_slots <= old:
+            return
+        new = jnp.zeros((n_slots, self.q) + self.widths, dtype=self.dtype)
+        self.data = new.at[:old].set(self.data)
+        self.free.extend(range(n_slots - 1, old - 1, -1))
+
+
 class GramBlockCache:
-    """Host-side LRU cache of per-fold Gram blocks keyed on ``(key_a,
+    """Two-tier LRU cache of per-fold Gram blocks keyed on ``(key_a,
     key_b)`` canonical variable-set keys (``set_key`` tuples).
 
     The batched frontier engine stores each diagonal block V = X_q^T X_q
@@ -45,55 +112,335 @@ class GramBlockCache:
     once per sweep no matter how many candidate parent sets reference it,
     and persist across sweeps.  Hit/miss/eviction counters expose the
     sharing structure to tests and perf tooling.  The exact-CV scorer
-    reuses the same interface for its centered kernel matrices.
+    reuses the same (host-tier) interface for its centered kernel matrices.
 
-    ``max_entries`` bounds the store with least-recently-used eviction
-    (both get and put refresh recency): a long GES search would otherwise
-    grow the cache monotonically — one U block per (parent set, child)
-    pair ever scored.  None (the default here) means unbounded; the
-    CV-LR scorer sizes it to the sweep working set (see
-    ``CVLRScorer.DEFAULT_GRAM_CACHE_ENTRIES``).
+    **Host tier** (always on): trimmed ``(q, m_eff_a, m_eff_b)`` numpy
+    blocks in an OrderedDict, exactly the PR-2 behavior.
+
+    **Device tier** (``device_bank_mb > 0``): blocks live *on device*, as
+    slots of padded per-width :class:`DeviceGramBank` tensors, so the
+    batched engine's fused Gram kernels scatter straight into them and the
+    fold stage index-gathers out of them — no host round-trip.  The tier is
+    driven by the engine through a sweep protocol:
+
+    1. ``begin_device_sweep(specs, q, dtype)`` pins the sweep's working set
+       and pre-arranges slot capacity (growing banks within the byte budget,
+       else spilling LRU *unpinned* slots to the host tier).  Returns False
+       — and the engine falls back to the host path wholesale — when the
+       working set cannot be made device-resident (budget or ``max_entries``
+       too small, or width bookkeeping conflicts).
+    2. per block: ``device_lookup`` (counted hit/miss; host-tier hits are
+       *promoted* into a slot) then ``device_adopt`` for misses, whose slot
+       the engine scatters the freshly computed block into.
+    3. ``end_device_sweep()`` unpins.
+
+    Eviction policy: ``max_entries`` bounds the **total** entry count across
+    both tiers with global-LRU eviction (dropped outright, counted in
+    ``evictions``); the ``device_bank_mb`` byte budget bounds the device
+    tier, whose slot reuse *spills* the displaced block to the host tier
+    (counted in ``spills``) — a later sweep re-promotes it instead of
+    recomputing.  None (the default) means unbounded entries / no device
+    tier; the CV-LR scorer sizes both to the sweep working set (see
+    ``CVLRScorer.DEFAULT_GRAM_CACHE_ENTRIES`` and
+    ``CVLRScorer.DEFAULT_DEVICE_BANK_MB``).
     """
 
-    def __init__(self, max_entries: int | None = None):
+    def __init__(
+        self,
+        max_entries: int | None = None,
+        device_bank_mb: float | None = None,
+    ):
         if max_entries is not None and max_entries < 1:
             raise ValueError(f"max_entries must be >= 1 or None, got {max_entries}")
+        if device_bank_mb is not None and device_bank_mb < 0:
+            raise ValueError(f"device_bank_mb must be >= 0 or None, got {device_bank_mb}")
         self._store: collections.OrderedDict = collections.OrderedDict()
         self.max_entries = max_entries
+        self.device_bank_mb = device_bank_mb
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # device tier state
+        self._banks: dict = {}  # (wa, wb) -> DeviceGramBank
+        self._dev: collections.OrderedDict = collections.OrderedDict()
+        # key -> (widths, slot, ea, eb); order is recency
+        self._touch: dict = {}  # key -> monotonic tick (cross-tier LRU)
+        self._misplaced: set = set()  # spilled keys out of dict-recency order
+        self._tick = 0
+        self._pinned: frozenset = frozenset()
+        self._sweep_specs: dict = {}  # key -> (wa, wb, ea, eb) during a sweep
+        self.promotions = 0
+        self.spills = 0
+        self.bank_fallbacks = 0
 
+    # -- shared bookkeeping ----------------------------------------------
     def __contains__(self, key) -> bool:
-        return key in self._store
+        return key in self._store or key in self._dev
 
     def __len__(self) -> int:
-        return len(self._store)
+        return len(self._store) + len(self._dev)
 
+    def _touched(self, key) -> None:
+        self._tick += 1
+        self._touch[key] = self._tick
+        # a touch always moves the key to its dict's MRU end, so it is
+        # back in recency order even if a spill had misplaced it
+        self._misplaced.discard(key)
+
+    def _evict_one(self) -> bool:
+        """Drop the globally least-recently-used *unpinned* entry (either
+        tier).  Returns False when nothing is evictable.  The touch tick
+        is the source of truth for recency: normally both dicts are
+        recency-ordered and comparing their heads is O(1), but a spill
+        re-inserts a key into the host dict at the tail while keeping its
+        old tick — while any such misplaced key exists, fall back to a
+        full tick scan so the globally oldest entry still goes first."""
+        if self._misplaced:
+            best = None  # (tick, tier, key)
+            for tier, store in (("host", self._store), ("dev", self._dev)):
+                for k in store:
+                    if k in self._pinned:
+                        continue
+                    t = self._touch.get(k, 0)
+                    if best is None or t < best[0]:
+                        best = (t, tier, k)
+            if best is None:
+                return False
+            _, tier, key = best
+            host = tier == "host"
+        else:
+            hk = next((k for k in self._store if k not in self._pinned), None)
+            dk = next((k for k in self._dev if k not in self._pinned), None)
+            if hk is not None and dk is not None:
+                host = self._touch.get(hk, 0) <= self._touch.get(dk, 0)
+            elif hk is None and dk is None:
+                return False
+            else:
+                host = dk is None
+            key = hk if host else dk
+        if host:
+            del self._store[key]
+        else:
+            widths, slot, _, _ = self._dev.pop(key)
+            self._banks[widths].free.append(slot)
+        self._touch.pop(key, None)
+        self._misplaced.discard(key)
+        self.evictions += 1
+        return True
+
+    def _enforce_entry_bound(self) -> None:
+        if self.max_entries is None:
+            return
+        while len(self) > self.max_entries and self._evict_one():
+            pass
+
+    # -- host-tier interface (PR-2 behavior; device-transparent reads) ----
     def get(self, key):
-        """Counted lookup: returns the block or None (and tallies hit/miss)."""
-        try:
+        """Counted lookup: returns the (host numpy) block or None.
+
+        A device-resident block is materialized to a trimmed host array on
+        the fly (one small device->host copy) so host-path consumers — the
+        engine's fallback sweeps, the exact scorer — always see the same
+        numpy interface regardless of where the block lives.
+        """
+        if key in self._store:
             value = self._store[key]
-        except KeyError:
-            self.misses += 1
-            return None
-        self._store.move_to_end(key)
-        self.hits += 1
-        return value
+            self._store.move_to_end(key)
+            self._touched(key)
+            self.hits += 1
+            return value
+        if key in self._dev:
+            widths, slot, ea, eb = self._dev[key]
+            self._dev.move_to_end(key)
+            self._touched(key)
+            self.hits += 1
+            blk = self._banks[widths].data[slot]
+            return np.ascontiguousarray(np.asarray(blk)[:, :ea, :eb])
+        self.misses += 1
+        return None
 
     def put(self, key, value) -> None:
+        if key in self._dev:  # host put supersedes a device entry
+            widths, slot, _, _ = self._dev.pop(key)
+            self._banks[widths].free.append(slot)
         self._store[key] = value
         self._store.move_to_end(key)
-        if self.max_entries is not None:
-            while len(self._store) > self.max_entries:
-                self._store.popitem(last=False)
-                self.evictions += 1
+        self._touched(key)
+        self._enforce_entry_bound()
 
     def clear(self) -> None:
         self._store.clear()
+        self._banks.clear()
+        self._dev.clear()
+        self._touch.clear()
+        self._misplaced.clear()
+        self._pinned = frozenset()
+        self._sweep_specs = {}
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.promotions = 0
+        self.spills = 0
+        self.bank_fallbacks = 0
+
+    # -- device tier -------------------------------------------------------
+    @property
+    def device_enabled(self) -> bool:
+        return bool(self.device_bank_mb) and jnp is not None
+
+    @property
+    def device_nbytes(self) -> int:
+        return sum(b.nbytes for b in self._banks.values())
+
+    def bank_data(self, widths: tuple):
+        """The (n_slots, q, wa, wb) device tensor for a width pair, or None."""
+        bank = self._banks.get(tuple(widths))
+        return None if bank is None else bank.data
+
+    def set_bank_data(self, widths: tuple, data) -> None:
+        """Engine write-back after a fused compute+scatter into the bank."""
+        bank = self._banks[tuple(widths)]
+        assert data.shape == bank.data.shape, (data.shape, bank.data.shape)
+        bank.data = data
+
+    def _spill(self, key) -> None:
+        """Move a device entry's block to the host tier (frees its slot)."""
+        widths, slot, ea, eb = self._dev.pop(key)
+        bank = self._banks[widths]
+        self._store[key] = np.ascontiguousarray(
+            np.asarray(bank.data[slot])[:, :ea, :eb]
+        )
+        # recency (tick) is intentionally preserved: a spill is a demotion,
+        # not a use, so the block keeps its place in the LRU order — the
+        # key is marked misplaced because it now sits at the host dict's
+        # tail despite its old tick (see _evict_one).
+        self._misplaced.add(key)
+        bank.free.append(slot)
+        self.spills += 1
+
+    def begin_device_sweep(self, specs: dict, q: int, dtype) -> bool:
+        """Pin a sweep's working set and pre-arrange device capacity.
+
+        specs: ``{key: (wa, wb, ea, eb)}`` — bucket widths and live-rank
+        trims for every Gram block the sweep will touch.  On success every
+        key in ``specs`` is pinned (safe from eviction until
+        ``end_device_sweep``) and each width group is guaranteed enough free
+        slots for its not-yet-resident keys.  Returns False (counting a
+        ``bank_fallbacks``) when the working set cannot be device-resident:
+        the caller must then run its host path for this sweep.
+        """
+        if not self.device_enabled:
+            return False
+        if self.max_entries is not None and len(specs) > self.max_entries:
+            self.bank_fallbacks += 1
+            return False
+        pinned = frozenset(specs)
+        budget = int(float(self.device_bank_mb) * 2**20)
+        dtype = np.dtype(dtype)
+
+        by_width: dict = {}
+        for key, (wa, wb, _, _) in specs.items():
+            ent = self._dev.get(key)
+            if ent is not None and ent[0] != (wa, wb):
+                self.bank_fallbacks += 1  # width drifted for a live key
+                return False
+            by_width.setdefault((int(wa), int(wb)), []).append(key)
+
+        created: list = []  # banks built for THIS sweep — rolled back on fail
+
+        def _fail():
+            # a later width group failed: drop the (still-empty) banks this
+            # call created so a refused sweep leaves no zombie allocations
+            # counting against future budget checks
+            for w in created:
+                del self._banks[w]
+            self.bank_fallbacks += 1
+            return False
+
+        for widths, keys in sorted(by_width.items()):
+            bank = self._banks.get(widths)
+            newcomers = sum(1 for k in keys if k not in self._dev)
+            if bank is None:
+                want = _pow2_slots(newcomers + DeviceGramBank.RESERVED_SLOTS)
+                nbytes = want * q * widths[0] * widths[1] * dtype.itemsize
+                if self.device_nbytes + nbytes > budget:
+                    return _fail()
+                self._banks[widths] = DeviceGramBank(widths, q, dtype, want)
+                created.append(widths)
+                continue
+            if bank.q != q or bank.dtype != dtype:
+                return _fail()
+            if len(bank.free) >= newcomers:
+                continue
+            # grow within budget first (pow2 slot counts bound jit variants)
+            occupied = bank.n_slots - len(bank.free)
+            want = _pow2_slots(occupied + newcomers)
+            growth = (want - bank.n_slots) * bank.slot_nbytes
+            if growth > 0 and self.device_nbytes + growth <= budget:
+                bank.grow_to(want)
+            # then reuse LRU unpinned slots of this bank (spill to host)
+            while len(bank.free) < newcomers:
+                victim = next(
+                    (
+                        k
+                        for k, ent in self._dev.items()
+                        if ent[0] == widths and k not in pinned
+                    ),
+                    None,
+                )
+                if victim is None:
+                    return _fail()
+                self._spill(victim)
+        self._pinned = pinned
+        self._sweep_specs = dict(specs)
+        return True
+
+    def end_device_sweep(self) -> None:
+        self._pinned = frozenset()
+        self._sweep_specs = {}
+        self._enforce_entry_bound()
+
+    def device_lookup(self, key):
+        """Counted device lookup during a sweep: returns the key's slot (a
+        host-tier hit is promoted into a fresh slot first), or None on miss
+        — the caller computes the block and ``device_adopt``s it."""
+        ent = self._dev.get(key)
+        if ent is not None:
+            self._dev.move_to_end(key)
+            self._touched(key)
+            self.hits += 1
+            return ent[1]
+        if key in self._store:
+            self.hits += 1
+            blk = self._store.pop(key)
+            wa, wb, ea, eb = self._sweep_specs[key]
+            slot = self._adopt(key, wa, wb, ea, eb)
+            bank = self._banks[(wa, wb)]
+            row = np.zeros((bank.q, wa, wb), bank.dtype)
+            row[:, : blk.shape[1], : blk.shape[2]] = blk
+            bank.data = _bank_set_row(
+                bank.data, np.int32(slot), jnp.asarray(row)
+            )
+            self.promotions += 1
+            return slot
+        self.misses += 1
+        return None
+
+    def device_adopt(self, key) -> int:
+        """Assign a slot to a freshly computed block (capacity was arranged
+        by ``begin_device_sweep``); the engine scatters the block into the
+        bank tensor itself (fused with the Gram kernel when possible)."""
+        wa, wb, ea, eb = self._sweep_specs[key]
+        return self._adopt(key, wa, wb, ea, eb)
+
+    def _adopt(self, key, wa, wb, ea, eb) -> int:
+        bank = self._banks[(wa, wb)]
+        assert bank.free, (key, (wa, wb))  # begin_device_sweep guarantees
+        slot = bank.free.pop()
+        self._dev[key] = ((wa, wb), slot, int(ea), int(eb))
+        self._touched(key)
+        self._enforce_entry_bound()
+        return slot
 
     @property
     def stats(self) -> dict:
@@ -101,9 +448,24 @@ class GramBlockCache:
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
-            "entries": len(self._store),
+            "entries": len(self),
             "max_entries": self.max_entries,
+            "device_entries": len(self._dev),
+            "device_bytes": self.device_nbytes,
+            "device_bank_mb": self.device_bank_mb,
+            "promotions": self.promotions,
+            "spills": self.spills,
+            "bank_fallbacks": self.bank_fallbacks,
         }
+
+
+def _pow2_slots(k: int) -> int:
+    """Next power of two >= max(k, 4): slot counts stay shape-stable so
+    bank growth produces few distinct gather-jit variants."""
+    p = 4
+    while p < k:
+        p *= 2
+    return p
 
 
 @dataclasses.dataclass(frozen=True)

@@ -34,29 +34,30 @@ Grams G_xx = X^T X etc. fall out of the per-fold test Grams by summing the
 fold axis, and each fold's train blocks are P_q = G_xx - V_q — O(n m^2)
 total for ALL Q folds instead of O(Q n m^2).
 
-The module has one copy of the per-fold algebra (`_fold_score_lr_core`,
-reached via `scores_from_fold_blocks` when the z-core is computed inline
-and via `_scores_zshared_idx` when it is shared), consumed three ways:
+The module has ONE copy of the per-fold algebra, `_candidate_fold_scores`
+(all folds of one candidate; the z-side Cholesky is supplied per parent set
+and the x-side Qm Cholesky is one *batched* factorization across the folds
+— under the candidate vmap that makes it one LAPACK-batched call per score
+chunk), consumed three ways:
 
-* `cvlr_score_from_features` — single-config sequential score (the oracle);
+* `cvlr_score_from_features` — single-config sequential score (the oracle),
+  via `scores_from_fold_blocks`;
 * `cvlr_scores_batched` — the GES frontier engine: a device-resident
-  feature bank, an LRU Gram-block cache keyed on (set_a, set_b) so V/U/S
-  blocks are computed once per feature *pair* instead of once per
-  candidate, live-rank bucketed trimming (zero padding is score-neutral,
-  so slicing to the batch's max m_eff is exact), the fused fold-Gram
-  strip kernel (`repro.kernels.fold_gram_strip`) for every Gram-block
-  stage, a *z-shared fold-core* stage (`_z_fold_cores`: F and the
-  Cholesky of (F + n1 l I) depend only on (parent set, fold), so they
-  are computed once per parent set and reused across all of its
-  children), and chunked batched fold algebra — one device dispatch per
-  ~64 candidates instead of one (plus a host sync) per candidate;
-* `repro.core.distributed_score` — the same fold algebra and fused
-  Gram kernel under shard_map, with Gram blocks psum'd over the data
-  axis.
+  feature bank, a two-tier LRU Gram-block cache keyed on (set_a, set_b),
+  live-rank bucketed trimming, the fused fold-Gram strip kernels for every
+  Gram-block stage, z-shared fold cores (F + Cholesky once per parent
+  set), and — the device-resident fold pipeline — Gram blocks scattered at
+  compute time into padded per-width device bank tensors
+  (`score_common.DeviceGramBank`) that the fold stage index-gathers inside
+  one jit (`_scores_bankfold_idx`), so blocks never round-trip through
+  host `np.zeros` chunk assembly between the Gram and fold stages;
+* `repro.core.distributed_score` — the same candidate fold core under
+  shard_map, with Gram blocks psum'd over the data axis.
 """
 
 from __future__ import annotations
 
+import time
 from functools import partial
 
 import jax
@@ -64,8 +65,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lowrank import lowrank_features
-from repro.kernels import fold_gram_strip
+from repro.kernels import fold_gram_strip, fold_gram_strip_banked
 from repro.core.score_common import (
+    DeviceGramBank,
     GramBlockCache,
     ScoreConfig,
     ScorerBase,
@@ -75,59 +77,88 @@ from repro.core.score_common import (
 )
 
 
-def _fold_score_lr(P, E, F, V, U, S, n0, n1, lmbda, gamma):
-    """One fold from Gram blocks; all O(m^3) or cheaper.
+def _candidate_fold_scores(v, u, s, f, chol_f, n0, n1, lmbda, gamma):
+    """Mean CV-LR score over all folds of ONE candidate — the single copy
+    of the dumbbell-form fold algebra.
 
-    D = (F + n1 l I)^-1 is never materialized: F is PSD, so one Cholesky
-    of the regularized matrix serves every F-solve, and the identities
-    only ever need D E (an mz x mx solve, usually mx << mz) and F D E —
-    O(mz^2 mx) instead of the O(mz^3) explicit inverse."""
-    n1l = n1 * lmbda
-    eye_z = jnp.eye(F.shape[0], dtype=P.dtype)
-    chol_f = jnp.linalg.cholesky(F + n1l * eye_z)
-    return _fold_score_lr_core(P, E, F, chol_f, V, U, S, n0, n1, lmbda, gamma)
+    v (q, mx, mx), u (q, mz, mx), s (q, mz, mz): per-fold *test* Grams;
+    f / chol_f (q, mz, mz): the z-side train Gram F_q = G_zz - S_q and the
+    Cholesky factor of (F_q + n1 l I).  F and chol_f depend only on the
+    *parent set* and the fold — never on the child — so the batched
+    frontier engine computes them once per (parent set, fold) in its
+    shared-core stage (`_z_fold_cores`) and reuses them across every child
+    of that parent set; `scores_from_fold_blocks` recomputes them inline
+    for the single-config / distributed paths.
 
-
-def _fold_score_lr_core(P, E, F, chol_f, V, U, S, n0, n1, lmbda, gamma):
-    """The single copy of the per-fold dumbbell algebra, with the z-side
-    Cholesky factor of (F + n1 l I) supplied by the caller.
-
-    F and chol_f depend only on the *parent set* and the fold — never on
-    the child — so the batched frontier engine computes them once per
-    (parent set, fold) in its shared-core stage and reuses them across
-    every child of that parent set; `_fold_score_lr` recomputes them
-    inline for the single-config / distributed paths."""
-    mx = P.shape[0]
-    dtype = P.dtype
+    Train P/E blocks fall out of the test blocks by the cross-fold trick
+    (sum over folds, then subtract).  D = (F + n1 l I)^-1 is never
+    materialized: the supplied Cholesky serves every F-solve, and the
+    identities only need D E (an mz x mx solve, usually mx << mz) and
+    F D E — O(mz^2 mx) instead of the O(mz^3) explicit inverse.  The
+    x-side Qm = I + n1 b M Cholesky — the only remaining per-candidate
+    O(mx^3) piece — is factored for all q folds in ONE batched call
+    (between the two fold vmaps below), so a score chunk of B candidates
+    issues a single (B, q, mx, mx) batched factorization.
+    """
+    mx = v.shape[-1]
+    dtype = v.dtype
     beta = lmbda * lmbda / gamma
     n1l = n1 * lmbda
     eye_x = jnp.eye(mx, dtype=dtype)
 
-    DE = jax.scipy.linalg.cho_solve((chol_f, True), E)  # D E
-    FDE = F @ DE
-    Jt = (E - FDE) / n1l  # (I - F D) E / (n1 l) = Z1^T A X1
-    M = (P - 2.0 * (E.T @ DE) + DE.T @ FDE) / (n1l * n1l)
-    Qm = eye_x + (n1 * beta) * M
-    chol = jnp.linalg.cholesky(Qm)
-    logdet_q = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chol)))
-    G = jax.scipy.linalg.cho_solve((chol, True), eye_x)
-    W = M @ G
+    gxx = jnp.sum(v, axis=0)
+    gzx = jnp.sum(u, axis=0)
+    p = gxx[None] - v  # train P_q = G_xx - V_q (cross-fold trick)
+    e = gzx[None] - u
 
-    SJt = S @ Jt
-    t1 = jnp.trace(V)
-    t2 = jnp.sum(SJt * Jt)  # tr(S Jt Jt^T)
-    t3 = jnp.sum(U * Jt)  # tr(U Jt^T)
-    t4 = jnp.sum(V * W.T)  # tr(V W)
-    t5 = jnp.sum(SJt * (Jt @ W.T))  # tr(S Jt W Jt^T)
-    t6 = jnp.sum((U @ W.T) * Jt)  # tr(U W Jt^T)
-    trace_total = t1 + t2 - 2.0 * t3 - (n1 * beta) * (t4 + t5) + 2.0 * (n1 * beta) * t6
+    def pre(p_f, e_f, f_f, ch_f):
+        DE = jax.scipy.linalg.cho_solve((ch_f, True), e_f)  # D E
+        FDE = f_f @ DE
+        jt = (e_f - FDE) / n1l  # (I - F D) E / (n1 l) = Z1^T A X1
+        m = (p_f - 2.0 * (e_f.T @ DE) + DE.T @ FDE) / (n1l * n1l)
+        return jt, m
 
-    return (
-        -0.5 * n0 * n0 * jnp.log(2.0 * jnp.pi)
-        - 0.5 * n0 * logdet_q
-        - 0.5 * n0 * n1 * jnp.log(gamma)
-        - trace_total / (2.0 * gamma)
-    )
+    Jt, M = jax.vmap(pre)(p, e, f, chol_f)
+    Qm = eye_x + (n1 * beta) * M  # (q, mx, mx)
+    chol_q = jnp.linalg.cholesky(Qm)  # one batched factorization, all folds
+
+    def post(m, ch, jt, v_f, u_f, s_f):
+        logdet_q = 2.0 * jnp.sum(jnp.log(jnp.diagonal(ch)))
+        # Every trace below consumes W only as W^T = Q^-1 M (M and Q are
+        # symmetric), so solve for W^T directly — one triangular
+        # solve-pair against M instead of materializing G = Q^-1 and
+        # forming W = M G (saves ~2 mx^3 FLOPs per fold).
+        WT = jax.scipy.linalg.cho_solve((ch, True), m)
+        SJt = s_f @ jt
+        t1 = jnp.trace(v_f)
+        t2 = jnp.sum(SJt * jt)  # tr(S Jt Jt^T)
+        t3 = jnp.sum(u_f * jt)  # tr(U Jt^T)
+        t4 = jnp.sum(v_f * WT)  # tr(V W)
+        t5 = jnp.sum(SJt * (jt @ WT))  # tr(S Jt W Jt^T)
+        t6 = jnp.sum((u_f @ WT) * jt)  # tr(U W Jt^T)
+        trace_total = (
+            t1 + t2 - 2.0 * t3 - (n1 * beta) * (t4 + t5) + 2.0 * (n1 * beta) * t6
+        )
+        return (
+            -0.5 * n0 * n0 * jnp.log(2.0 * jnp.pi)
+            - 0.5 * n0 * logdet_q
+            - 0.5 * n0 * n1 * jnp.log(gamma)
+            - trace_total / (2.0 * gamma)
+        )
+
+    return jnp.mean(jax.vmap(post)(M, chol_q, Jt, v, u, s))
+
+
+def _z_cores_one(s, n1l):
+    """z-side fold cores of one parent set from its per-fold test Grams
+    s (q, mz, mz): the train Gram F_q = G_zz - S_q (cross-fold trick) and
+    the Cholesky factor of (F_q + n1 l I) — the O(mz^3) piece of the fold
+    algebra that does NOT depend on the child.  An all-zero s (the |Z|=0
+    specialization) yields chol_f = sqrt(n1 l) I exactly."""
+    gzz = jnp.sum(s, axis=0, keepdims=True)
+    f = gzz - s
+    eye_z = jnp.eye(s.shape[-1], dtype=s.dtype)
+    return f, jnp.linalg.cholesky(f + n1l * eye_z)
 
 
 @partial(jax.jit, static_argnames=("q",))
@@ -163,22 +194,18 @@ def scores_from_fold_blocks(V, U, S, n0, n1, lmbda, gamma):
     S: (B, q, mz, mz)  Z_q^T Z_q       ->  (B,) mean-over-folds scores.
 
     Full-data Grams are recovered by summing the fold axis and each fold's
-    train blocks by subtraction (the cross-fold trick, exact).  This is the
-    single copy of the fold algebra: the sequential scorer, the batched
-    frontier engine and the shard_map distributed scorer all route here.
-    Traceable (no jit) so it composes under shard_map/vmap.
+    train blocks by subtraction (the cross-fold trick, exact).  Routes into
+    the single fold-algebra copy `_candidate_fold_scores` (with the z-side
+    cores computed inline per candidate) — the sequential scorer, the
+    batched frontier engine and the shard_map distributed scorer all share
+    that core, so the paths can never drift apart numerically.  Traceable
+    (no jit) so it composes under shard_map/vmap.
     """
+    n1l = n1 * lmbda
 
     def one(v, u, s):
-        gxx = jnp.sum(v, axis=0)
-        gzx = jnp.sum(u, axis=0)
-        gzz = jnp.sum(s, axis=0)
-        fold = jax.vmap(
-            lambda p, e, f, vv, uu, ss: _fold_score_lr(
-                p, e, f, vv, uu, ss, n0, n1, lmbda, gamma
-            )
-        )
-        return jnp.mean(fold(gxx[None] - v, gzx[None] - u, gzz[None] - s, v, u, s))
+        f, chol_f = _z_cores_one(s, n1l)
+        return _candidate_fold_scores(v, u, s, f, chol_f, n0, n1, lmbda, gamma)
 
     return jax.vmap(one)(V, U, S)
 
@@ -189,44 +216,87 @@ def _z_fold_cores(S, n1l):
 
     S: (Nz, q, mz, mz) stacked per-fold test Grams Z_q^T Z_q of the
     distinct parent sets of a sweep.  Returns (F, chol_f), each
-    (Nz, q, mz, mz): the train Gram F_q = G_zz - S_q (cross-fold trick)
-    and the Cholesky factor of (F_q + n1 l I) — the O(mz^3) piece of the
-    fold algebra that does NOT depend on the child, hoisted out of the
-    per-candidate score so a parent set pays for it once no matter how
-    many of its children the frontier scores.  An all-zero S row (the
-    |Z|=0 specialization) yields chol_f = sqrt(n1 l) I exactly.
+    (Nz, q, mz, mz) — `_z_cores_one` hoisted out of the per-candidate
+    score so a parent set pays for its O(mz^3) factorizations once no
+    matter how many of its children the frontier scores.
     """
-    gzz = jnp.sum(S, axis=1, keepdims=True)
-    F = gzz - S
-    eye_z = jnp.eye(S.shape[-1], dtype=S.dtype)
-    chol_f = jnp.linalg.cholesky(F + n1l * eye_z)
-    return F, chol_f
+    return jax.vmap(lambda s: _z_cores_one(s, n1l))(S)
+
+
+@jax.jit
+def _z_fold_cores_from_bank(dbank, slots, n1l):
+    """Shared z-side fold cores gathered straight out of a device Gram
+    bank: dbank (n_slots, q, mz, mz) is the (mz, mz)-width
+    `DeviceGramBank` tensor holding the sweep's S blocks, slots (Nz,) the
+    parent sets' slot indices (`DeviceGramBank.ZERO_SLOT` for |Z|=0 rows —
+    the permanent all-zero block, i.e. the exact specialization).  Returns
+    (S, F, chol_f) device-resident; the host never stacks S blocks.
+    """
+    S = dbank[slots]
+    f, ch = jax.vmap(lambda s: _z_cores_one(s, n1l))(S)
+    return S, f, ch
+
+
+def _zshared_scores(V, U, S, F, CH, n0, n1, lmbda, gamma):
+    """(B,) scores from per-candidate V/U and gathered per-parent-set
+    cores — the shared fold entry of both chunk paths below."""
+    return jax.vmap(
+        lambda v, u, s, f, ch: _candidate_fold_scores(
+            v, u, s, f, ch, n0, n1, lmbda, gamma
+        )
+    )(V, U, S, F, CH)
 
 
 @partial(jax.jit, static_argnames=("n0", "n1"))
 def _scores_zshared_idx(V, U, s_bank, f_bank, chol_bank, iz, n0, n1, lmbda, gamma):
-    """Batched CV-LR scores from per-candidate V/U blocks + shared z-cores.
+    """Host-assembly fold path (device banks disabled or fallen back):
+    V (B, q, mx, mx) / U (B, q, mz, mx) are host-assembled per-candidate
+    chunks; s/f/chol banks (Nz, q, mz, mz) are per *parent set* (from
+    `_z_fold_cores`); iz (B,) gathers each candidate's shared core inside
+    the jit, so the mz x mz tensors are never re-stacked per candidate."""
+    return _zshared_scores(
+        V, U, s_bank[iz], f_bank[iz], chol_bank[iz], n0, n1, lmbda, gamma
+    )
 
-    V: (B, q, mx, mx), U: (B, q, mz, mx) per candidate;
-    s_bank/f_bank/chol_bank: (Nz, q, mz, mz) per *parent set* (from
-    `_z_fold_cores`); iz: (B,) parent-set bank index per candidate.
-    Gathering the cores inside the jit keeps the chunk to one dispatch and
-    never re-materializes S per candidate on the host.
+
+@partial(jax.jit, static_argnames=("n0", "n1", "mode"))
+def _scores_bankfold_idx(
+    v_bank, u_bank, ut_bank, iv, iu, it, tu,
+    s_bank, f_bank, chol_bank, iz, n0, n1, lmbda, gamma, mode="mixed",
+):
+    """Device-resident fold path: one index-gather jit over the Gram banks.
+
+    v_bank (Sv, q, wx, wx): the (wx, wx)-width `DeviceGramBank` tensor
+    (diagonal V blocks); u_bank (Su, q, wz, wx) / ut_bank (St, q, wx, wz):
+    the two cross banks a chunk may draw from — U blocks are cached under
+    the *unordered* factor pair, so a candidate's block is stored either
+    directly (Z^T X, gathered via iu) or transposed (X^T Z, gathered via
+    it and fold-wise swapped); tu (B,) bool selects per candidate.  Rows
+    with nothing to gather (|Z|=0, rank-0 children, the inactive side of
+    the tu select) point at slot 0, the bank's permanent all-zero block.
+    s/f/chol banks + iz as in `_scores_zshared_idx`.  The chunk's V/U
+    tensors are materialized by XLA gathers on device — the host only
+    builds the (B,) index vectors.
+
+    mode (static): the engine sorts each score group by the transpose
+    flag, so almost every chunk is homogeneous — "direct" / "transposed"
+    gather exactly one U bank; only the rare straddling chunk pays the
+    gather-both-and-select cost of "mixed".
     """
-
-    def one(v, u, s, f, ch):
-        gxx = jnp.sum(v, axis=0)
-        gzx = jnp.sum(u, axis=0)
-        fold = jax.vmap(
-            lambda p, e, ff, chh, vv, uu, ss: _fold_score_lr_core(
-                p, e, ff, chh, vv, uu, ss, n0, n1, lmbda, gamma
-            )
+    V = v_bank[iv]
+    if mode == "direct":
+        U = u_bank[iu]
+    elif mode == "transposed":
+        U = jnp.swapaxes(ut_bank[it], -1, -2)
+    else:
+        U = jnp.where(
+            tu[:, None, None, None],
+            jnp.swapaxes(ut_bank[it], -1, -2),
+            u_bank[iu],
         )
-        return jnp.mean(
-            fold(gxx[None] - v, gzx[None] - u, f, ch, v, u, s)
-        )
-
-    return jax.vmap(one)(V, U, s_bank[iz], f_bank[iz], chol_bank[iz])
+    return _zshared_scores(
+        V, U, s_bank[iz], f_bank[iz], chol_bank[iz], n0, n1, lmbda, gamma
+    )
 
 
 def _bucket(m: int, cap: int) -> int:
@@ -245,6 +315,12 @@ def _bucket(m: int, cap: int) -> int:
 # frontier cell.
 _BUCKET_LADDER = (8, 16, 32, 48, 64, 96)
 
+# Default byte budget (MB) for the Gram-block cache's device tier — sized
+# so a d <= 48 sweep-1 working set (a few hundred blocks, <= ~0.74 MB each
+# at wz = wx = 96 / q = 10 / f64) stays device-resident with headroom;
+# `api.make_scorer(device_bank_mb=...)` overrides, 0 disables.
+_DEFAULT_DEVICE_BANK_MB = 256
+
 
 def _pow2_pad(k: int, hi: int) -> int:
     """Next power of two >= k, capped at hi (shape-stable stack heights)."""
@@ -252,6 +328,19 @@ def _pow2_pad(k: int, hi: int) -> int:
     while p < min(k, hi):
         p *= 2
     return min(p, hi)
+
+
+_DUMMY_BANKS: dict = {}
+
+
+def _dummy_bank(q: int, wa: int, wb: int, dtype):
+    """A one-slot all-zero stand-in bank for width pairs the sweep never
+    materialized (e.g. every parent set at this width is |Z|=0): gathers
+    against slot 0 read exact zeros, same as a real bank's ZERO_SLOT."""
+    key = (int(q), int(wa), int(wb), np.dtype(dtype).str)
+    if key not in _DUMMY_BANKS:
+        _DUMMY_BANKS[key] = jnp.zeros((1, q, wa, wb), dtype)
+    return _DUMMY_BANKS[key]
 
 
 def cvlr_scores_batched(
@@ -269,6 +358,7 @@ def cvlr_scores_batched(
     gram_cache: GramBlockCache | None = None,
     pair_chunk: int = 32,
     score_chunk: int = 64,
+    timings: dict | None = None,
 ) -> np.ndarray:
     """Score a whole GES frontier in a handful of device dispatches.
 
@@ -283,17 +373,31 @@ def cvlr_scores_batched(
     child, S = Z_q^T Z_q once per parent set, U = Z_q^T X_q once per
     *unordered* (parent-set, child) factor pair (U(a, b) = U(b, a)^T, so
     the X -> Y and Y -> X candidates of a symmetric frontier share one
-    block) — never once per candidate — all produced by
-    the fused fold-Gram strip kernel (`repro.kernels.fold_gram_strip`:
-    bank-gather + fold-blocked contraction in one dispatch, a tiled
-    Pallas kernel on TPU) and stored in `gram_cache` (LRU, keyed on
-    (set_key_a, set_key_b)) so they persist across sweeps.  Fold cores:
-    the z-side train Gram F_q and its Cholesky factor depend only on
-    (parent set, fold), so `_z_fold_cores` computes them once per parent
-    set and every child of that set reuses them (the candidates are
-    grouped by parent set; see `_scores_zshared_idx`).  Every factor
-    takes part only at its *bucketed live rank*:
-    zero-padded columns are provably score-neutral
+    block) — never once per candidate — all produced by the fused
+    fold-Gram strip kernels (`repro.kernels.fold_gram_strip` /
+    `fold_gram_strip_banked`) and cached in `gram_cache` across sweeps.
+    Fold cores: the z-side train Gram F_q and its Cholesky factor depend
+    only on (parent set, fold), so they are computed once per parent set
+    and every child of that set reuses them; the remaining per-candidate
+    Qm Cholesky is one batched factorization per chunk
+    (`_candidate_fold_scores`).
+
+    **Device-resident pipeline** (default): the sweep's working set is
+    pinned into the cache's device tier (`GramBlockCache.
+    begin_device_sweep`), fused Gram kernels scatter each block straight
+    into a per-width `DeviceGramBank` slot at compute time, and the fold
+    stage gathers chunks out of the banks inside one jit
+    (`_scores_bankfold_idx`) — between the Gram and fold stages no block
+    crosses the host boundary, replacing the per-chunk `np.zeros` V/U
+    assembly + re-upload of the host path.  Cached blocks stay
+    device-resident across sweeps (host spill only on LRU eviction).  The
+    host-assembly path remains both the opt-out (`device_bank_mb=0` on
+    `api.make_scorer`, or a cache built without a device tier) and the
+    automatic fallback when a sweep's working set cannot fit the device
+    budget — both paths produce bit-identical scores on CPU.
+
+    Every factor takes part only at its *bucketed live rank*: zero-padded
+    columns are provably score-neutral
     (tests/test_score_lowrank.py::test_zero_padding_is_exact), so slicing
     to a per-set bucket is exact while cutting the m^2/m^3 terms by the
     (m_max / m_eff)^2 the padding was wasting — and because m_eff varies a
@@ -302,6 +406,12 @@ def cvlr_scores_batched(
     the batch max.  Within a group everything is chunked and padded to
     fixed chunk heights, so the jit cache stays small and no call
     dispatches more than O(B / chunk) kernels.
+
+    timings: optional dict; when given, per-stage wall times are
+    accumulated into it ("gram_s", "zcores_s", "fold_s", plus "path" =
+    "device"|"host") with device syncs at the stage boundaries — profiling
+    support for benchmarks/frontier_scoring.py, off by default because the
+    syncs defeat async dispatch.
     """
     pairs = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
     n_pairs = pairs.shape[0]
@@ -309,6 +419,7 @@ def cvlr_scores_batched(
         return np.zeros((0,), dtype=np.float64)
     lam_x_bank = [jnp.asarray(a) for a in lam_x_bank]
     lam_z_bank = [jnp.asarray(a) for a in lam_z_bank]
+    dtype = lam_x_bank[0].dtype
     n_eff = lam_x_bank[0].shape[0]
     n0 = n_eff // q
     n1 = n_eff - n0
@@ -320,7 +431,11 @@ def cvlr_scores_batched(
         x_keys = [("_x", i) for i in range(len(lam_x_bank))]
     if z_keys is None:
         z_keys = [("_z", i) for i in range(len(lam_z_bank))]
-    cache = gram_cache if gram_cache is not None else GramBlockCache()
+    cache = (
+        gram_cache
+        if gram_cache is not None
+        else GramBlockCache(device_bank_mb=_DEFAULT_DEVICE_BANK_MB)
+    )
 
     xs_used = sorted({int(p) for p in pairs[:, 0]})
     zs_used = sorted({int(p) for p in pairs[:, 1]})
@@ -331,40 +446,22 @@ def cvlr_scores_batched(
         if m_eff_z[i] > 0
     }
 
+    t_mark = [time.perf_counter()]
+
+    def _mark(name, sync=()):
+        if timings is None:
+            return
+        for arr in sync:
+            if arr is not None:
+                arr.block_until_ready()
+        now = time.perf_counter()
+        timings[name] = timings.get(name, 0.0) + (now - t_mark[0])
+        t_mark[0] = now
+
     def _take(a, w):
         return a[:, :w] if a.shape[1] >= w else jnp.pad(
             a, ((0, 0), (0, w - a.shape[1]))
         )
-
-    blocks: dict = {}  # cache-key -> host (q, me_a, me_b) block for this call
-
-    def _gather_missing(needed):
-        """One counted cache lookup per needed key; returns keys to compute."""
-        missing = []
-        for key, spec in needed.items():
-            blk = cache.get(key)
-            if blk is None:
-                missing.append((key, spec))
-            else:
-                blocks[key] = blk
-        return missing
-
-    def _store(key, out_row, ea, eb):
-        # copy: a view would pin the whole padded chunk buffer in the cache
-        blk = np.ascontiguousarray(out_row[:, :ea, :eb])
-        blocks[key] = blk
-        cache.put(key, blk)
-
-    def _drain(pending, trim):
-        """Second half of the submit/drain pipeline: convert the in-flight
-        device chunks to host blocks.  Draining only after every chunk is
-        submitted lets JAX's async dispatch overlap device einsums with the
-        host-side chunk preparation instead of syncing per chunk."""
-        for out_dev, chunk in pending:
-            out = np.asarray(out_dev)
-            for j, (key, spec) in enumerate(chunk):
-                ea, eb = trim(spec)
-                _store(key, out[j], ea, eb)
 
     banks = {"x": lam_x_bank, "z": lam_z_bank}
     m_effs = {"x": m_eff_x, "z": m_eff_z}
@@ -381,29 +478,6 @@ def cvlr_scores_batched(
             * (_pow2_pad(len(refs), cap) - len(refs))
         )
 
-    def _diag_blocks(missing, side):
-        """Diagonal per-fold Grams, grouped by bucket width.  Each group
-        stacks its unique trimmed factors once (pow2-padded height) and
-        runs fused strip-kernel chunks with ia == ib — one dispatch per
-        `pair_chunk` sets, no per-chunk restacking."""
-        buckets, m_eff = bucks[side], m_effs[side]
-        groups: dict = {}
-        for key, i in missing:
-            groups.setdefault(buckets[i], []).append((key, i))
-        pending = []
-        for w, items in sorted(groups.items()):
-            ids = sorted({i for _, i in items})
-            loc = {i: k for k, i in enumerate(ids)}
-            st = _stack_refs([(side, i) for i in ids], w, len(banks[side]))
-            for c0 in range(0, len(items), pair_chunk):
-                chunk = items[c0 : c0 + pair_chunk]
-                cpad = _pow2_pad(len(chunk), pair_chunk)
-                ii = [loc[i] for _, i in chunk]
-                ii += [ii[0]] * (cpad - len(ii))
-                idx = np.asarray(ii, np.int32)
-                pending.append((fold_gram_strip(st, st, idx, idx, q), chunk))
-        _drain(pending, lambda i: (m_eff[i], m_eff[i]))
-
     def _cross_key(zi, xi):
         """Canonical cache identity of the cross block U = Z_q^T X_q.
 
@@ -419,10 +493,152 @@ def cvlr_scores_batched(
             return (zk, xk), False, (("z", zi), ("x", xi))
         return (xk, zk), True, (("x", xi), ("z", zi))
 
-    def _cross_blocks(missing):
+    # -- needed blocks + device-tier width specs -------------------------
+    blocks: dict = {}  # host path: cache-key -> (q, me_a, me_b) host block
+    slot_of: dict = {}  # bank path: cache-key -> device bank slot
+    specs: dict = {}  # cache-key -> (wa, wb, ea, eb) for the device tier
+    conflict = [False]
+
+    def _spec(key, wa, wb, ea, eb):
+        prev = specs.get(key)
+        if prev is not None and prev != (wa, wb, ea, eb):
+            conflict[0] = True  # same key, different widths: host path
+        specs[key] = (wa, wb, ea, eb)
+
+    need_v = {}
+    for i in xs_used:
+        key = (x_keys[i], x_keys[i])
+        if m_eff_x[i] > 0:
+            need_v[key] = i
+            _spec(key, bx[i], bx[i], m_eff_x[i], m_eff_x[i])
+        else:
+            blocks[key] = np.zeros((q, 0, 0))
+    need_s = {}
+    for i in zs_used:
+        key = (z_keys[i], z_keys[i])
+        if m_eff_z[i] > 0:
+            need_s[key] = i
+            _spec(key, bz[i], bz[i], m_eff_z[i], m_eff_z[i])
+        else:
+            blocks[key] = np.zeros((q, 0, 0))
+    need_u = {}
+    for xi, zi in {(int(a), int(b)) for a, b in pairs}:
+        key, transposed, refs = _cross_key(zi, xi)
+        if m_eff_z[zi] == 0:
+            mx = m_eff_x[xi]
+            blocks[key] = np.zeros((q, mx, 0) if transposed else (q, 0, mx))
+        else:
+            need_u[key] = refs
+            ra, rb = refs
+            _spec(
+                key,
+                bucks[ra[0]][ra[1]],
+                bucks[rb[0]][rb[1]],
+                m_effs[ra[0]][ra[1]],
+                m_effs[rb[0]][rb[1]],
+            )
+
+    use_banks = (not conflict[0]) and cache.begin_device_sweep(
+        specs, q=q, dtype=dtype
+    )
+    if timings is not None:
+        timings["path"] = "device" if use_banks else "host"
+
+    def _gather_missing(needed):
+        """One counted cache lookup per needed key; returns keys to compute."""
+        missing = []
+        for key, spec in needed.items():
+            if use_banks:
+                slot = cache.device_lookup(key)
+                if slot is None:
+                    missing.append((key, spec))
+                else:
+                    slot_of[key] = slot
+            else:
+                blk = cache.get(key)
+                if blk is None:
+                    missing.append((key, spec))
+                else:
+                    blocks[key] = blk
+        return missing
+
+    def _store(key, out_row, ea, eb):
+        # copy: a view would pin the whole padded chunk buffer in the cache
+        blk = np.ascontiguousarray(out_row[:, :ea, :eb])
+        blocks[key] = blk
+        cache.put(key, blk)
+
+    def _drain(pending, trim):
+        """Second half of the host path's submit/drain pipeline: convert the
+        in-flight device chunks to host blocks.  Draining only after every
+        chunk is submitted lets JAX's async dispatch overlap device einsums
+        with the host-side chunk preparation instead of syncing per chunk."""
+        for out_dev, chunk in pending:
+            out = np.asarray(out_dev)
+            for j, (key, spec) in enumerate(chunk):
+                ea, eb = trim(spec)
+                _store(key, out[j], ea, eb)
+
+    def _submit_chunks(gen, trim):
+        """Run the generated Gram chunks through the path's sink.
+
+        Bank path: adopt a slot per block and run the fused
+        compute+scatter kernel (`fold_gram_strip_banked`) straight into
+        the bank tensor — nothing returns to the host, padding rows land
+        in the write-only scratch slot.  Host path: submit all strips,
+        then drain to trimmed host blocks (PR-2 behavior)."""
+        if use_banks:
+            for aa, bb, ia, ib, chunk, widths in gen:
+                slots = [cache.device_adopt(key) for key, _ in chunk]
+                for (key, _), s in zip(chunk, slots):
+                    slot_of[key] = s
+                slots += [DeviceGramBank.SCRATCH_SLOT] * (len(ia) - len(slots))
+                cache.set_bank_data(
+                    widths,
+                    fold_gram_strip_banked(
+                        aa, bb,
+                        np.asarray(ia, np.int32), np.asarray(ib, np.int32),
+                        cache.bank_data(widths),
+                        np.asarray(slots, np.int32), q,
+                    ),
+                )
+        else:
+            pending = [
+                (
+                    fold_gram_strip(
+                        aa, bb,
+                        np.asarray(ia, np.int32), np.asarray(ib, np.int32), q,
+                    ),
+                    chunk,
+                )
+                for aa, bb, ia, ib, chunk, widths in gen
+            ]
+            _drain(pending, trim)
+
+    def _diag_chunks(missing, side):
+        """Diagonal per-fold Grams, grouped by bucket width.  Each group
+        stacks its unique trimmed factors once (pow2-padded height) and
+        yields fused strip-kernel chunks with ia == ib — one dispatch per
+        `pair_chunk` sets, no per-chunk restacking."""
+        buckets = bucks[side]
+        groups: dict = {}
+        for key, i in missing:
+            groups.setdefault(buckets[i], []).append((key, i))
+        for w, items in sorted(groups.items()):
+            ids = sorted({i for _, i in items})
+            loc = {i: k for k, i in enumerate(ids)}
+            st = _stack_refs([(side, i) for i in ids], w, len(banks[side]))
+            for c0 in range(0, len(items), pair_chunk):
+                chunk = items[c0 : c0 + pair_chunk]
+                cpad = _pow2_pad(len(chunk), pair_chunk)
+                ii = [loc[i] for _, i in chunk]
+                ii += [ii[0]] * (cpad - len(ii))
+                yield st, st, ii, ii, chunk, (w, w)
+
+    def _cross_chunks(missing):
         """Cross per-fold Grams A_q^T B_q for canonical factor pairs,
         grouped by (bucket_a, bucket_b).  Each group stacks its unique
-        factors once per side (pow2-padded heights) and runs fused
+        factors once per side (pow2-padded heights) and yields fused
         strip-kernel chunks — one dispatch per `pair_chunk` pairs; on TPU
         the factor rows stream HBM->VMEM once with no gathered
         (B, q, n0, m) intermediate."""
@@ -431,7 +647,6 @@ def cvlr_scores_batched(
             wa = bucks[ra[0]][ra[1]]
             wb = bucks[rb[0]][rb[1]]
             groups.setdefault((wa, wb), []).append((key, (ra, rb)))
-        pending = []
         cap = len(lam_x_bank) + len(lam_z_bank)
         for (wa, wb), items in sorted(groups.items()):
             a_refs = sorted({ra for _, (ra, _) in items})
@@ -447,121 +662,183 @@ def cvlr_scores_batched(
                 ib = [b_loc[rb] for _, (_, rb) in chunk]
                 ia += [ia[0]] * (cpad - len(ia))
                 ib += [ib[0]] * (cpad - len(ib))
-                pending.append(
-                    (
-                        fold_gram_strip(
-                            aa, bb, np.asarray(ia, np.int32),
-                            np.asarray(ib, np.int32), q,
-                        ),
-                        chunk,
-                    )
-                )
-        _drain(
-            pending,
+                yield aa, bb, ia, ib, chunk, (wa, wb)
+
+    try:
+        # -- diagonal blocks: V once per child set, S once per parent set -
+        _submit_chunks(
+            _diag_chunks(_gather_missing(need_v), "x"),
+            lambda i: (m_eff_x[i], m_eff_x[i]),
+        )
+        _submit_chunks(
+            _diag_chunks(_gather_missing(need_s), "z"),
+            lambda i: (m_eff_z[i], m_eff_z[i]),
+        )
+        # -- cross blocks: one per unordered (parent-set, child) pair -----
+        _submit_chunks(
+            _cross_chunks(_gather_missing(need_u)),
             lambda ab: (m_effs[ab[0][0]][ab[0][1]], m_effs[ab[1][0]][ab[1][1]]),
         )
+        _mark(
+            "gram_s",
+            sync=[cache.bank_data(w[:2]) for w in specs.values()]
+            if use_banks
+            else (),
+        )
 
-    # -- diagonal blocks: V once per child set, S once per parent set ----
-    need_v = {}
-    for i in xs_used:
-        if m_eff_x[i] > 0:
-            need_v[(x_keys[i], x_keys[i])] = i
-        else:
-            blocks[(x_keys[i], x_keys[i])] = np.zeros((q, 0, 0))
-    _diag_blocks(_gather_missing(need_v), "x")
-    need_s = {}
-    for i in zs_used:
-        if m_eff_z[i] > 0:
-            need_s[(z_keys[i], z_keys[i])] = i
-        else:
-            blocks[(z_keys[i], z_keys[i])] = np.zeros((q, 0, 0))
-    _diag_blocks(_gather_missing(need_s), "z")
-    # -- cross blocks: one per unordered (parent-set, child) factor pair -
-    need_u = {}
-    for xi, zi in {(int(a), int(b)) for a, b in pairs}:
-        key, transposed, refs = _cross_key(zi, xi)
-        if m_eff_z[zi] == 0:
-            mx = m_eff_x[xi]
-            blocks[key] = np.zeros((q, mx, 0) if transposed else (q, 0, mx))
-        else:
-            need_u[key] = refs
-    _cross_blocks(_gather_missing(need_u))
+        # -- z-shared fold cores: Cholesky once per (parent set, fold) ----
+        lm = jnp.asarray(lmbda, jnp.float64)
+        gm = jnp.asarray(gamma, jnp.float64)
+        n1l = jnp.asarray(n1 * lmbda, jnp.float64)
+        wz_of = {zi: bz.get(zi, _BUCKET_LADDER[0]) for zi in zs_used}
+        score_groups: dict = {}
+        for b, (xi, zi) in enumerate(pairs):
+            score_groups.setdefault((wz_of[zi], bx[xi]), []).append(b)
+        # Group the sweep's distinct parent sets by bucket width and build
+        # the per-width core banks: S blocks -> (F, chol_f) once per parent
+        # set, device-resident, reused by every child of that set.  A |Z|=0
+        # set contributes an all-zero S row (the exact specialization).  On
+        # the bank path the S rows are index-gathered straight out of the
+        # (w, w) device Gram bank — the host never stacks them.
+        z_by_w: dict = {}
+        for zi in zs_used:
+            z_by_w.setdefault(wz_of[zi], []).append(zi)
+        z_cores: dict = {}  # wz -> (s_bank, f_bank, chol_bank) device tensors
+        z_loc: dict = {}  # zi -> row in its width's core bank
+        for w, zids in sorted(z_by_w.items()):
+            npad = _pow2_pad(len(zids), len(lam_z_bank))
+            if use_banks:
+                zslots = []
+                for k, zi in enumerate(sorted(zids)):
+                    z_loc[zi] = k
+                    zslots.append(
+                        slot_of[(z_keys[zi], z_keys[zi])]
+                        if m_eff_z[zi] > 0
+                        else DeviceGramBank.ZERO_SLOT
+                    )
+                zslots += [DeviceGramBank.ZERO_SLOT] * (npad - len(zslots))
+                dbank = cache.bank_data((w, w))
+                if dbank is None:
+                    dbank = _dummy_bank(q, w, w, dtype)
+                z_cores[w] = _z_fold_cores_from_bank(
+                    dbank, jnp.asarray(np.asarray(zslots, np.int32)), n1l
+                )
+            else:
+                s_host = np.zeros((npad, q, w, w))
+                for k, zi in enumerate(sorted(zids)):
+                    z_loc[zi] = k
+                    bs = blocks[(z_keys[zi], z_keys[zi])]
+                    s_host[k, :, : bs.shape[1], : bs.shape[2]] = bs
+                s_bank = jnp.asarray(s_host)
+                f_bank, chol_bank = _z_fold_cores(s_bank, n1l)
+                z_cores[w] = (s_bank, f_bank, chol_bank)
+        _mark("zcores_s", sync=[c[2] for c in z_cores.values()])
 
-    # -- z-shared fold cores: Cholesky once per (parent set, fold) --------
-    lm = jnp.asarray(lmbda, jnp.float64)
-    gm = jnp.asarray(gamma, jnp.float64)
-    n1l = jnp.asarray(n1 * lmbda, jnp.float64)
-    wz_of = {zi: bz.get(zi, _BUCKET_LADDER[0]) for zi in zs_used}
-    score_groups: dict = {}
-    for b, (xi, zi) in enumerate(pairs):
-        score_groups.setdefault((wz_of[zi], bx[xi]), []).append(b)
-    # Group the sweep's distinct parent sets by bucket width and build the
-    # per-width core banks: stacked S blocks -> (F, chol_f) once per
-    # parent set, device-resident, reused by every child of that set.  A
-    # |Z|=0 set contributes an all-zero S row (the exact specialization).
-    z_by_w: dict = {}
-    for zi in zs_used:
-        z_by_w.setdefault(wz_of[zi], []).append(zi)
-    z_cores: dict = {}  # wz -> (s_bank, f_bank, chol_bank) device tensors
-    z_loc: dict = {}  # zi -> row in its width's core bank
-    for w, zids in sorted(z_by_w.items()):
-        npad = _pow2_pad(len(zids), len(lam_z_bank))
-        s_host = np.zeros((npad, q, w, w))
-        for k, zi in enumerate(sorted(zids)):
-            z_loc[zi] = k
-            bs = blocks[(z_keys[zi], z_keys[zi])]
-            s_host[k, :, : bs.shape[1], : bs.shape[2]] = bs
-        s_bank = jnp.asarray(s_host)
-        f_bank, chol_bank = _z_fold_cores(s_bank, n1l)
-        z_cores[w] = (s_bank, f_bank, chol_bank)
-
-    # -- fold algebra: grouped by (bucket_z, bucket_x), fixed-size chunks -
-    scores = np.empty((n_pairs,), dtype=np.float64)
-    in_flight = []  # (device scores, target pair indices) — drained at the end
-    for (wz, wx), idxs in sorted(score_groups.items()):
-        s_bank, f_bank, chol_bank = z_cores[wz]
-        g = len(idxs)
-        c0 = 0
-        while c0 < g:
-            # few chunk heights (bounds compile variants): the full chunk,
-            # or a pow2 short chunk when the tail is small — padding a
-            # 9-pair group to 64 at a large bucket wastes ~7x the fold work
-            rem = g - c0
-            size = (
-                score_chunk
-                if rem >= score_chunk // 2
-                else max(score_chunk // 4, _pow2_pad(rem, score_chunk))
-            )
-            hi = min(c0 + size, g)
-            # assemble ONLY this chunk's padded V/U blocks: peak host
-            # memory stays O(score_chunk), not O(frontier), and the mz x mz
-            # S/F/chol tensors are never re-stacked per candidate — the
-            # chunk indexes the shared core banks; pad rows repeat row 0
-            V = np.zeros((size, q, wx, wx))
-            U = np.zeros((size, q, wz, wx))
-            iz = np.zeros((size,), np.int32)
-            chunk_idxs = idxs[c0:hi] + [idxs[c0]] * (size - (hi - c0))
-            for row, b in enumerate(chunk_idxs):
-                xi, zi = int(pairs[b, 0]), int(pairs[b, 1])
-                bv = blocks[(x_keys[xi], x_keys[xi])]
-                ck, transposed, _ = _cross_key(zi, xi)
-                bu = blocks[ck]
-                if transposed:  # stored as X_q^T Z_q; assignment copies
-                    bu = bu.transpose(0, 2, 1)
-                V[row, :, : bv.shape[1], : bv.shape[2]] = bv
-                U[row, :, : bu.shape[1], : bu.shape[2]] = bu
-                iz[row] = z_loc[zi]
-            out = _scores_zshared_idx(
-                jnp.asarray(V), jnp.asarray(U),
-                s_bank, f_bank, chol_bank, jnp.asarray(iz),
-                n0, n1, lm, gm,
-            )
-            in_flight.append((out, np.asarray(idxs[c0:hi])))
-            c0 = hi
-    for out, target in in_flight:
-        scores[target] = np.asarray(out)[: target.shape[0]]
+        # -- fold algebra: grouped by (bucket_z, bucket_x), fixed chunks --
+        scores = np.empty((n_pairs,), dtype=np.float64)
+        in_flight = []  # (device scores, target pair indices)
+        for (wz, wx), idxs in sorted(score_groups.items()):
+            s_bank, f_bank, chol_bank = z_cores[wz]
+            if use_banks:
+                v_data = cache.bank_data((wx, wx))
+                if v_data is None:
+                    v_data = _dummy_bank(q, wx, wx, dtype)
+                u_data = cache.bank_data((wz, wx))  # direct Z^T X blocks
+                if u_data is None:
+                    u_data = _dummy_bank(q, wz, wx, dtype)
+                ut_data = cache.bank_data((wx, wz))  # transposed X^T Z store
+                if ut_data is None:
+                    ut_data = _dummy_bank(q, wx, wz, dtype)
+                # sort the group by the cross-block transpose flag (stable)
+                # so chunks are homogeneous and the fold jit gathers only
+                # one U bank per chunk (mode= below); scores are
+                # per-candidate, so reordering is exact
+                idxs = sorted(
+                    idxs,
+                    key=lambda b: (
+                        m_eff_z[int(pairs[b, 1])] > 0
+                        and _cross_key(int(pairs[b, 1]), int(pairs[b, 0]))[1]
+                    ),
+                )
+            g = len(idxs)
+            c0 = 0
+            while c0 < g:
+                # few chunk heights (bounds compile variants): the full
+                # chunk, or a pow2 short chunk when the tail is small —
+                # padding a 9-pair group to 64 at a large bucket wastes
+                # ~7x the fold work
+                rem = g - c0
+                size = (
+                    score_chunk
+                    if rem >= score_chunk // 2
+                    else max(score_chunk // 4, _pow2_pad(rem, score_chunk))
+                )
+                hi = min(c0 + size, g)
+                chunk_idxs = idxs[c0:hi] + [idxs[c0]] * (size - (hi - c0))
+                if use_banks:
+                    # the chunk is FOUR small index vectors — the V/U
+                    # gathers happen on device inside the fold jit
+                    iv = np.zeros((size,), np.int32)
+                    iud = np.zeros((size,), np.int32)
+                    iut = np.zeros((size,), np.int32)
+                    tu = np.zeros((size,), bool)
+                    iz = np.zeros((size,), np.int32)
+                    for row, b in enumerate(chunk_idxs):
+                        xi, zi = int(pairs[b, 0]), int(pairs[b, 1])
+                        if m_eff_x[xi] > 0:
+                            iv[row] = slot_of[(x_keys[xi], x_keys[xi])]
+                        if m_eff_z[zi] > 0:
+                            ck, transposed, _ = _cross_key(zi, xi)
+                            if transposed:
+                                iut[row] = slot_of[ck]
+                                tu[row] = True
+                            else:
+                                iud[row] = slot_of[ck]
+                        iz[row] = z_loc[zi]
+                    has_t = bool(tu.any())
+                    mode = (
+                        "mixed"
+                        if has_t and not tu.all()
+                        else ("transposed" if has_t else "direct")
+                    )
+                    out = _scores_bankfold_idx(
+                        v_data, u_data, ut_data,
+                        jnp.asarray(iv), jnp.asarray(iud), jnp.asarray(iut),
+                        jnp.asarray(tu),
+                        s_bank, f_bank, chol_bank, jnp.asarray(iz),
+                        n0, n1, lm, gm, mode=mode,
+                    )
+                else:
+                    # assemble ONLY this chunk's padded V/U blocks: peak
+                    # host memory stays O(score_chunk), not O(frontier);
+                    # pad rows repeat row 0
+                    V = np.zeros((size, q, wx, wx))
+                    U = np.zeros((size, q, wz, wx))
+                    iz = np.zeros((size,), np.int32)
+                    for row, b in enumerate(chunk_idxs):
+                        xi, zi = int(pairs[b, 0]), int(pairs[b, 1])
+                        bv = blocks[(x_keys[xi], x_keys[xi])]
+                        ck, transposed, _ = _cross_key(zi, xi)
+                        bu = blocks[ck]
+                        if transposed:  # stored as X_q^T Z_q; copy on assign
+                            bu = bu.transpose(0, 2, 1)
+                        V[row, :, : bv.shape[1], : bv.shape[2]] = bv
+                        U[row, :, : bu.shape[1], : bu.shape[2]] = bu
+                        iz[row] = z_loc[zi]
+                    out = _scores_zshared_idx(
+                        jnp.asarray(V), jnp.asarray(U),
+                        s_bank, f_bank, chol_bank, jnp.asarray(iz),
+                        n0, n1, lm, gm,
+                    )
+                in_flight.append((out, np.asarray(idxs[c0:hi])))
+                c0 = hi
+        for out, target in in_flight:
+            scores[target] = np.asarray(out)[: target.shape[0]]
+        _mark("fold_s")
+    finally:
+        if use_banks:
+            cache.end_device_sweep()
     return scores
-
 
 
 class CVLRScorer(ScorerBase):
@@ -575,6 +852,10 @@ class CVLRScorer(ScorerBase):
     # (blocks are (q, m, m) float64, worst case ~0.7 MB each at m = 96).
     DEFAULT_GRAM_CACHE_ENTRIES = 4096
 
+    # Byte budget (MB) for the cache's device tier — the device-resident
+    # fold pipeline.  0 / None disables it (pure host-assembly engine).
+    DEFAULT_DEVICE_BANK_MB = _DEFAULT_DEVICE_BANK_MB
+
     def __init__(
         self,
         data,
@@ -583,13 +864,16 @@ class CVLRScorer(ScorerBase):
         config: ScoreConfig | None = None,
         batched: bool = True,
         gram_cache_entries: int | None = DEFAULT_GRAM_CACHE_ENTRIES,
+        device_bank_mb: float | None = DEFAULT_DEVICE_BANK_MB,
     ):
         config = config or ScoreConfig()
         super().__init__(VariableView(data, dims, discrete), config)
         self._feat_cache: dict = {}
         self.m_eff_log: dict = {}  # vars_key -> effective rank (diagnostics)
         self.batched = batched  # False => ges() falls back to lazy local_score
-        self.gram_cache = GramBlockCache(max_entries=gram_cache_entries)
+        self.gram_cache = GramBlockCache(
+            max_entries=gram_cache_entries, device_bank_mb=device_bank_mb
+        )
 
     def features(self, vars_key: tuple) -> jnp.ndarray:
         """Centered (n_eff, m_max) factor for a variable set (cached).
@@ -628,10 +912,12 @@ class CVLRScorer(ScorerBase):
             )
         )
 
-    def prefetch(self, configs) -> int:
+    def prefetch(self, configs, timings: dict | None = None) -> int:
         """Batched frontier engine: evaluate every uncached (node, parents)
         configuration through `cvlr_scores_batched`, sharing Gram blocks via
-        `self.gram_cache`.  Called by ges() once per sweep iteration."""
+        `self.gram_cache` (device-resident when its device tier is enabled).
+        Called by ges() once per sweep iteration; `timings` is forwarded to
+        the engine's per-stage profiler (benchmarks only)."""
         if not self.batched:
             return 0
         todo = []
@@ -665,6 +951,7 @@ class CVLRScorer(ScorerBase):
             x_keys=x_sets,
             z_keys=z_sets,
             gram_cache=self.gram_cache,
+            timings=timings,
         )
         for key, s in zip(todo, scores):
             self._score_cache[key] = float(s)

@@ -8,6 +8,10 @@
                    batched frontier engine's (B, q, m, m) block stage,
                    streaming gathered factor rows through VMEM once
                    instead of materializing (B, q, n0, m) intermediates.
+- fold_gram_strip_banked: the same strip fused with a scatter into a
+                   persistent device block bank — the device-resident fold
+                   pipeline's compute stage (blocks land in bank slots, the
+                   fold stage index-gathers them, no host round-trip).
 - fold_gram_blocks: identity-gather variant for already fold-blocked
                    factors (the shard_map distributed scorer's Gram stage).
 
@@ -21,6 +25,7 @@ from repro.kernels.ops import (
     centered_gram,
     fold_gram_blocks,
     fold_gram_strip,
+    fold_gram_strip_banked,
     rbf_gram,
 )
 
@@ -28,5 +33,6 @@ __all__ = [
     "centered_gram",
     "fold_gram_blocks",
     "fold_gram_strip",
+    "fold_gram_strip_banked",
     "rbf_gram",
 ]

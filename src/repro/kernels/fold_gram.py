@@ -32,6 +32,14 @@ The same kernel serves the identity-gather case (ia = ib = arange) used
 by the shard_map distributed scorer, where the "banks" are the already
 fold-blocked per-candidate factors.
 
+`fold_gram_strip_banked_pallas` is the device-resident-pipeline variant:
+identical gather + contraction, but the *output* BlockSpec is also driven
+by a scalar-prefetched index vector — block c lands at row ``slots[c]``
+of a persistent, input/output-aliased block-bank tensor, so the scatter
+into the engine's Gram banks happens in the output DMA and the chunk's
+blocks never exist as a standalone (B, q, ma, mb) array, let alone on the
+host.
+
 Interpret mode executes the identical body on CPU (tested against the
 kernels/ref.py jnp oracle in tests/test_kernels_pallas.py); dispatch
 between this kernel and the jnp fallback lives in kernels/ops.py.
@@ -52,6 +60,100 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def _fold_gram_banked_kernel(slots_ref, ia_ref, ib_ref, a_ref, b_ref, bank_ref, o_ref):
+    del slots_ref, ia_ref, ib_ref, bank_ref  # indices drive the index_maps
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[0, 0]
+    b = b_ref[0, 0]
+    o_ref[0, 0] += jax.lax.dot_general(
+        a, b, (((0,), (0,)), ((), ())), preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def fold_gram_strip_banked_pallas(
+    bank_a: jnp.ndarray,
+    bank_b: jnp.ndarray,
+    ia: jnp.ndarray,
+    ib: jnp.ndarray,
+    out_bank: jnp.ndarray,
+    slots: jnp.ndarray,
+    *,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused strip-Gram + scatter-into-bank: the device-resident fold
+    pipeline's compute stage writes each candidate's (q, ma, mb) Gram block
+    straight into a *slot* of a persistent bank tensor instead of a fresh
+    (B, q, ma, mb) output that a host drain would re-assemble.
+
+    bank_a (Sa, q, n0p, ma), bank_b (Sb, q, n0p, mb), ia/ib/slots (B,)
+    int32, out_bank (S_out, q, ma, mb) with n0p % block_n == 0; returns the
+    updated bank:  out[slots[c], f] = bank_a[ia[c], f]^T bank_b[ib[c], f],
+    every other slot byte-identical to ``out_bank``.
+
+    The mechanism is the output BlockSpec: ``slots`` rides in as a third
+    scalar-prefetch operand and the out index_map places block (c, f)'s
+    accumulator at bank row ``slots[c]`` — the scatter happens in the
+    output DMA, no gathered intermediate and no separate update kernel.
+    ``out_bank`` is input/output-aliased, so untouched slots are preserved
+    without being copied through VMEM.  Callers must NOT repeat a slot
+    except for padding rows aimed at a write-only scratch slot (duplicate
+    output blocks are revisited, so the last write wins but intermediate
+    flushes are unspecified).  Same f64->f32 compiled-mode policy as
+    `fold_gram_strip_pallas`; the contraction runs at ``out_bank.dtype``.
+    """
+    _, q, n0p, ma = bank_a.shape
+    mb = bank_b.shape[-1]
+    assert bank_b.shape[1:3] == (q, n0p), (bank_a.shape, bank_b.shape)
+    assert out_bank.shape[1:] == (q, ma, mb), (out_bank.shape, (q, ma, mb))
+    assert n0p % block_n == 0, (n0p, block_n)
+    n_pairs = ia.shape[0]
+    grid = (n_pairs, q, n0p // block_n)
+    dtype = out_bank.dtype
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, block_n, ma),
+                lambda c, f, t, s, ia, ib: (ia[c], f, t, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_n, mb),
+                lambda c, f, t, s, ia, ib: (ib[c], f, t, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, ma, mb), lambda c, f, t, s, ia, ib: (s[c], f, 0, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, ma, mb), lambda c, f, t, s, ia, ib: (s[c], f, 0, 0)
+        ),
+    )
+    return pl.pallas_call(
+        _fold_gram_banked_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(out_bank.shape, dtype),
+        # operand index 5 = out_bank (scalar-prefetch args count): alias so
+        # unwritten slots keep their contents instead of starting undefined
+        input_output_aliases={5: 0},
+        interpret=interpret,
+    )(
+        jnp.asarray(slots, jnp.int32),
+        jnp.asarray(ia, jnp.int32),
+        jnp.asarray(ib, jnp.int32),
+        bank_a.astype(dtype),
+        bank_b.astype(dtype),
+        out_bank,
+    )
 
 
 def _fold_gram_kernel(ia_ref, ib_ref, a_ref, b_ref, o_ref):

@@ -34,3 +34,17 @@ def fold_gram_strip_ref(bank_a, bank_b, ia, ib, q: int) -> jnp.ndarray:
     fa = bank_a[jnp.asarray(ia)].reshape(len(ia), q, n0, bank_a.shape[-1])
     fb = bank_b[jnp.asarray(ib)].reshape(len(ib), q, n0, bank_b.shape[-1])
     return jnp.einsum("cqni,cqnj->cqij", fa, fb)
+
+
+def fold_gram_strip_banked_ref(bank_a, bank_b, ia, ib, out_bank, slots, q: int):
+    """Oracle for the banked strip: compute the strip, then write block c
+    into bank row slots[c] sequentially (later writes win on duplicate
+    slots — only scratch-slot padding rows are allowed to duplicate).
+    Rows not named in ``slots`` keep their prior contents."""
+    import numpy as np
+
+    grams = np.asarray(fold_gram_strip_ref(bank_a, bank_b, ia, ib, q))
+    out = np.array(out_bank)
+    for c, s in enumerate(np.asarray(slots)):
+        out[int(s)] = grams[c].astype(out.dtype)
+    return out

@@ -1,0 +1,328 @@
+"""The device-resident fold pipeline (PR 3) vs the host-assembly engine.
+
+Gram blocks scattered into `DeviceGramBank` slots and index-gathered by the
+fold jit must be *bit-identical* on CPU to the PR-2 path that drains every
+block to host numpy and re-assembles padded V/U chunks — the scatter and
+gather are pure data movement around the very same einsums.  On top of
+that, the cache's device tier must honor its contracts: LRU slot reuse
+spills to the host tier and re-promotes on the next use, `device_bank_mb=0`
+opts out entirely, and a sweep that cannot fit the budget falls back to the
+host path for that sweep without changing any score.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import make_scorer
+from repro.core.score_common import (
+    DeviceGramBank,
+    GramBlockCache,
+    ScoreConfig,
+    config_key,
+)
+from repro.core.score_lowrank import (
+    CVLRScorer,
+    cvlr_score_from_features,
+    cvlr_scores_batched,
+)
+from repro.data.synthetic import generate_scm_data
+
+
+def _frontier_configs(d, extra=()):
+    configs = [(y, ()) for y in range(d)]
+    configs += [(y, (x,)) for x in range(d) for y in range(d) if x != y]
+    return configs + list(extra)
+
+
+def _scores(scorer, configs):
+    return np.array([scorer._score_cache[config_key(i, ps)] for i, ps in configs])
+
+
+# -- engine: device path == host path, bit for bit ------------------------
+
+
+def test_device_path_matches_host_path_bitwise():
+    """Same frontier, same data: the bank engine and the host-assembly
+    engine must produce identical float64 bits — including |Z|=0 and
+    multi-parent (ragged bucket) configurations."""
+    ds = generate_scm_data(d=6, n=260, density=0.4, kind="continuous", seed=21)
+    mk = lambda mb: CVLRScorer(
+        ds.data, config=ScoreConfig(seed=3), device_bank_mb=mb
+    )
+    dev, host = mk(CVLRScorer.DEFAULT_DEVICE_BANK_MB), mk(0)
+    configs = _frontier_configs(6, extra=[(5, (0, 1)), (0, (2, 3, 4))])
+    assert dev.prefetch(configs) == len(configs)
+    assert host.prefetch(configs) == len(configs)
+    np.testing.assert_array_equal(_scores(dev, configs), _scores(host, configs))
+    st = dev.gram_cache.stats
+    assert st["device_entries"] > 0 and st["bank_fallbacks"] == 0, st
+    assert host.gram_cache.stats["device_entries"] == 0
+
+
+def test_direct_banks_device_equals_host_and_oracle():
+    """Direct bank/pairs API with ragged live ranks and a |Z|=0 zero
+    factor: device cache == host cache bitwise, both == sequential oracle
+    to <= 1e-8."""
+    rng = np.random.default_rng(5)
+    n, q, m_pad = 200, 10, 24
+
+    def factor(m_live):
+        lam = rng.standard_normal((n, m_live))
+        lam = np.concatenate([lam, np.zeros((n, m_pad - m_live))], axis=1)
+        lam -= lam.mean(axis=0, keepdims=True)
+        return jnp.asarray(lam)
+
+    x_bank = [factor(m) for m in (3, 7, 5)]
+    z_bank = [factor(m) for m in (4, 11)] + [jnp.zeros((n, m_pad))]
+    m_eff_x = [3, 7, 5]
+    m_eff_z = [4, 11, 0]
+    pairs = [(xi, zi) for xi in range(3) for zi in range(3)]
+    kw = dict(m_eff_x=m_eff_x, m_eff_z=m_eff_z)
+    got_dev = cvlr_scores_batched(
+        x_bank, z_bank, pairs, q,
+        gram_cache=GramBlockCache(device_bank_mb=64), **kw,
+    )
+    got_host = cvlr_scores_batched(
+        x_bank, z_bank, pairs, q, gram_cache=GramBlockCache(), **kw
+    )
+    np.testing.assert_array_equal(got_dev, got_host)
+    lm = jnp.float64(0.01)
+    for (xi, zi), g in zip(pairs, got_dev):
+        want = float(cvlr_score_from_features(x_bank[xi], z_bank[zi], q, lm, lm))
+        assert abs(float(g) - want) / max(1.0, abs(want)) <= 1e-8
+
+
+def test_device_tier_persists_across_sweeps():
+    """A re-scored identical frontier is 100% device hits — no promotions,
+    no recompute, and still bitwise-equal scores."""
+    rng = np.random.default_rng(11)
+    data = rng.standard_normal((220, 4))
+    s = CVLRScorer(data, config=ScoreConfig(seed=0))
+    configs = _frontier_configs(4)
+    s.prefetch(configs)
+    first = _scores(s, configs)
+    misses0 = s.gram_cache.misses
+    s._score_cache.clear()
+    s.prefetch(configs)
+    np.testing.assert_array_equal(first, _scores(s, configs))
+    st = s.gram_cache.stats
+    assert st["misses"] == misses0, st  # nothing recomputed
+    assert st["promotions"] == 0 and st["spills"] == 0, st
+
+
+# -- engine: eviction / fallback / opt-out --------------------------------
+
+
+def _ragged_banks(rng, n=160, q=8, m_pad=16, m_live=5, count=2):
+    out = []
+    for _ in range(count):
+        lam = rng.standard_normal((n, m_live))
+        lam = np.concatenate([lam, np.zeros((n, m_pad - m_live))], axis=1)
+        lam -= lam.mean(axis=0, keepdims=True)
+        out.append(jnp.asarray(lam))
+    return out
+
+
+def test_device_lru_eviction_spills_to_host_and_repromotes():
+    """Two disjoint working sets under a budget that holds only ~one of
+    them: scoring them alternately forces device-slot LRU reuse (spill to
+    host) and, on return, host->device promotion — with every score equal
+    to an unbounded host-path scorer's."""
+    rng = np.random.default_rng(3)
+    n, q, m_pad, m_live = 160, 8, 16, 5
+    xa = _ragged_banks(rng, n, q, m_pad, m_live)
+    za = _ragged_banks(rng, n, q, m_pad, m_live)
+    xb = _ragged_banks(rng, n, q, m_pad, m_live)
+    zb = _ragged_banks(rng, n, q, m_pad, m_live)
+    pairs = [(xi, zi) for xi in range(2) for zi in range(2)]
+    kw = dict(m_eff_x=[m_live] * 2, m_eff_z=[m_live] * 2)
+    # slot = q * 8 * 8 * 8B = 4 KiB; frontier working set = 8 blocks ->
+    # a 16-slot bank (64 KiB).  72 KiB disallows growing for the second
+    # frontier, so its blocks must reuse slots via spill.
+    budget_mb = 72 / 1024
+    cache = GramBlockCache(device_bank_mb=budget_mb)
+    ref = GramBlockCache()  # host-only reference
+
+    def both(x, z, ka, kb):
+        keys = dict(x_keys=[(ka, i) for i in range(2)],
+                    z_keys=[(kb, i) for i in range(2)])
+        got = cvlr_scores_batched(x, z, pairs, q, gram_cache=cache, **kw, **keys)
+        want = cvlr_scores_batched(x, z, pairs, q, gram_cache=ref, **kw, **keys)
+        np.testing.assert_array_equal(got, want)
+
+    both(xa, za, "ax", "az")
+    assert cache.stats["bank_fallbacks"] == 0, cache.stats
+    both(xb, zb, "bx", "bz")  # evicts some of A's slots -> spills
+    assert cache.spills > 0, cache.stats
+    both(xa, za, "ax", "az")  # A's spilled blocks come back -> promotions
+    assert cache.promotions > 0, cache.stats
+    assert cache.stats["bank_fallbacks"] == 0, cache.stats
+
+
+def test_budget_too_small_falls_back_to_host_path():
+    """A sweep whose working set cannot be device-resident must fall back
+    wholesale (counted in bank_fallbacks) and still score identically."""
+    ds = generate_scm_data(d=5, n=240, density=0.4, kind="continuous", seed=4)
+    tiny = CVLRScorer(
+        ds.data, config=ScoreConfig(seed=1), device_bank_mb=1e-3
+    )
+    host = CVLRScorer(ds.data, config=ScoreConfig(seed=1), device_bank_mb=0)
+    configs = _frontier_configs(5)
+    tiny.prefetch(configs)
+    host.prefetch(configs)
+    np.testing.assert_array_equal(_scores(tiny, configs), _scores(host, configs))
+    st = tiny.gram_cache.stats
+    assert st["bank_fallbacks"] >= 1 and st["device_entries"] == 0, st
+
+
+def test_device_bank_opt_out_kwarg():
+    """api.make_scorer(device_bank_mb=0) and =None both run the pure host
+    engine; the default enables the device tier."""
+    rng = np.random.default_rng(9)
+    data = rng.standard_normal((200, 3))
+    for off in (0, None):
+        s = make_scorer(data, config=ScoreConfig(seed=0), device_bank_mb=off)
+        assert not s.gram_cache.device_enabled
+        s.prefetch(_frontier_configs(3))
+        assert s.gram_cache.stats["device_entries"] == 0
+    s = make_scorer(data, config=ScoreConfig(seed=0))
+    assert s.gram_cache.device_enabled
+    s.prefetch(_frontier_configs(3))
+    assert s.gram_cache.stats["device_entries"] > 0
+
+
+def test_prefetch_stage_timings():
+    """The engine's opt-in profiler reports the pipeline path and the
+    three stage slices (benchmarks/frontier_scoring.py depends on it)."""
+    rng = np.random.default_rng(2)
+    data = rng.standard_normal((180, 3))
+    s = CVLRScorer(data, config=ScoreConfig(seed=0))
+    t: dict = {}
+    s.prefetch(_frontier_configs(3), timings=t)
+    assert t["path"] == "device"
+    for k in ("gram_s", "zcores_s", "fold_s"):
+        assert t[k] >= 0.0
+
+
+# -- GramBlockCache device tier: unit-level contracts ---------------------
+
+
+def _fill_slot(cache, key, value_row):
+    """Adopt a slot for `key` and write `value_row` ((q, wa, wb)) into it,
+    the way the engine's fused scatter would."""
+    slot = cache.device_adopt(key)
+    widths = value_row.shape[1:]
+    data = cache.bank_data(widths)
+    cache.set_bank_data(widths, data.at[slot].set(jnp.asarray(value_row)))
+    return slot
+
+
+def test_cache_device_tier_spill_preserves_trimmed_block():
+    """Slot reuse spills the exact trimmed block to the host tier, and a
+    later sweep re-promotes it into a (zero-padded) slot."""
+    q, w = 2, 8
+    rng = np.random.default_rng(0)
+    row = np.zeros((q, w, w))
+    row[:, :3, :3] = rng.standard_normal((q, 3, 3))
+    # budget: exactly the minimal 4-slot bank (4 KiB at q=2, w=8, f64)
+    cache = GramBlockCache(device_bank_mb=4 * q * w * w * 8 / 2**20)
+    assert cache.begin_device_sweep({"k1": (w, w, 3, 3)}, q=q, dtype=np.float64)
+    _fill_slot(cache, "k1", row)
+    cache.end_device_sweep()
+    np.testing.assert_array_equal(cache.get("k1"), row[:, :3, :3])
+    assert "k1" in cache and len(cache) == 1
+
+    # two newcomers > free slots and growth is over budget -> spill k1
+    assert cache.begin_device_sweep(
+        {"k2": (w, w, 3, 3), "k3": (w, w, 3, 3)}, q=q, dtype=np.float64
+    )
+    assert cache.spills == 1 and cache.stats["device_entries"] == 0
+    _fill_slot(cache, "k2", row)
+    _fill_slot(cache, "k3", row)
+    cache.end_device_sweep()
+    np.testing.assert_array_equal(cache.get("k1"), row[:, :3, :3])  # host now
+
+    # k1 comes back -> promotion into a device slot, padded exactly
+    assert cache.begin_device_sweep({"k1": (w, w, 3, 3)}, q=q, dtype=np.float64)
+    slot = cache.device_lookup("k1")
+    assert slot is not None and cache.promotions == 1
+    np.testing.assert_array_equal(
+        np.asarray(cache.bank_data((w, w))[slot]), row
+    )
+    cache.end_device_sweep()
+
+
+def test_cache_device_tier_reserved_slots_stay_zero():
+    """Slot 0 (the |Z|=0 gather target) must remain exactly zero no matter
+    what is adopted, promoted, or spilled around it."""
+    q, w = 2, 8
+    cache = GramBlockCache(device_bank_mb=1)
+    assert cache.begin_device_sweep({"k": (w, w, w, w)}, q=q, dtype=np.float64)
+    _fill_slot(cache, "k", np.full((q, w, w), 7.0))
+    cache.end_device_sweep()
+    assert DeviceGramBank.ZERO_SLOT == 0
+    np.testing.assert_array_equal(
+        np.asarray(cache.bank_data((w, w))[0]), np.zeros((q, w, w))
+    )
+
+
+def test_cache_entry_bound_spans_both_tiers():
+    """max_entries bounds host+device entries together; a sweep larger
+    than the bound refuses the device path instead of evicting pinned
+    working-set blocks."""
+    q, w = 2, 8
+    cache = GramBlockCache(max_entries=2, device_bank_mb=1)
+    specs = {f"k{i}": (w, w, w, w) for i in range(3)}
+    assert not cache.begin_device_sweep(specs, q=q, dtype=np.float64)
+    assert cache.bank_fallbacks == 1
+
+    for key in ("a", "b", "c"):
+        assert cache.begin_device_sweep({key: (w, w, w, w)}, q=q, dtype=np.float64)
+        _fill_slot(cache, key, np.ones((q, w, w)))
+        cache.end_device_sweep()
+    assert len(cache) <= 2 and cache.evictions >= 1, cache.stats
+
+
+def test_refused_sweep_rolls_back_created_banks():
+    """A begin_device_sweep that fails on a later width group must tear
+    down the empty banks it already created — a refused sweep may not
+    leave zombie allocations eating the budget of every future sweep."""
+    q = 2
+    # budget fits the small (8, 8) bank but not the (96, 96) one
+    cache = GramBlockCache(device_bank_mb=8 * q * 8 * 8 * 8 / 2**20)
+    specs = {"small": (8, 8, 8, 8), "big": (96, 96, 96, 96)}
+    assert not cache.begin_device_sweep(specs, q=q, dtype=np.float64)
+    assert cache.device_nbytes == 0 and cache.bank_data((8, 8)) is None
+    # the small-only sweep still fits afterwards
+    assert cache.begin_device_sweep({"small": (8, 8, 8, 8)}, q=q, dtype=np.float64)
+    cache.end_device_sweep()
+
+
+def test_spilled_block_keeps_its_lru_age():
+    """A spill demotes a block without refreshing it: under entry-count
+    pressure the spilled (globally oldest) entry is evicted before
+    recently-used host blocks, despite its out-of-order dict position."""
+    q, w = 2, 8
+    cache = GramBlockCache(max_entries=3, device_bank_mb=4 * q * w * w * 8 / 2**20)
+    assert cache.begin_device_sweep({"old": (w, w, w, w)}, q=q, dtype=np.float64)
+    _fill_slot(cache, "old", np.ones((q, w, w)))
+    cache.end_device_sweep()
+    cache.put("h1", np.ones((q, 1, 1)))  # fresher host entries
+    cache.put("h2", np.ones((q, 2, 2)))
+    # two newcomers force the (unpinned, oldest) "old" slot to spill: it
+    # re-enters the host dict at the tail but keeps its old tick
+    assert cache.begin_device_sweep(
+        {"n1": (w, w, w, w), "n2": (w, w, w, w)}, q=q, dtype=np.float64
+    )
+    assert cache.spills == 1 and "old" in cache
+    _fill_slot(cache, "n1", np.ones((q, w, w)))
+    _fill_slot(cache, "n2", np.ones((q, w, w)))
+    cache.end_device_sweep()  # 5 entries > max 3: evict the oldest two
+    assert "old" not in cache, cache.stats  # oldest tick goes first
+    assert "h2" in cache and len(cache) == 3
+
+
+def test_cache_rejects_negative_budget():
+    with pytest.raises(ValueError):
+        GramBlockCache(device_bank_mb=-1)

@@ -21,10 +21,12 @@ from repro.kernels.ops import (
     centered_gram,
     fold_gram_blocks,
     fold_gram_strip,
+    fold_gram_strip_banked,
     rbf_gram,
 )
 from repro.kernels.ref import (
     centered_gram_ref,
+    fold_gram_strip_banked_ref,
     fold_gram_strip_ref,
     rbf_gram_ref,
 )
@@ -178,6 +180,90 @@ def test_fold_gram_strip_empty_rank_edge():
         bank_a, bank_b, ia[:0], ib[:0], 3, use_pallas=True, interpret=True
     )
     assert out2.shape == (0, 3, 7, 5)
+
+
+def _banked_inputs(seed, q, n0, ma, mb, n_slots=8, n_pairs=4):
+    bank_a, bank_b, ia, ib = _strip_inputs(seed, q, n0, ma, mb, n_pairs=n_pairs)
+    rng = np.random.default_rng(seed + 1)
+    out_bank = jnp.asarray(rng.standard_normal((n_slots, q, ma, mb)))
+    # distinct real slots, skipping the reserved zero/scratch pair
+    slots = np.arange(2, 2 + n_pairs, dtype=np.int32)
+    return bank_a, bank_b, ia, ib, out_bank, slots
+
+
+@pytest.mark.parametrize("ma,mb", [(8, 8), (16, 48), (33, 7)])
+@pytest.mark.parametrize("q,n0", [(2, 64), (5, 37)])
+def test_fold_gram_strip_banked_matches_ref(ma, mb, q, n0):
+    """The fused strip+scatter (both dispatches) == compute-then-assign
+    oracle: named slots get their Gram blocks, every other slot of the
+    pre-filled bank is preserved bit-for-bit."""
+    bank_a, bank_b, ia, ib, out_bank, slots = _banked_inputs(
+        q * 100 + ma + mb, q, n0, ma, mb
+    )
+    # the banked op consumes its out_bank (in-place donation/aliasing):
+    # snapshot the host copy first and hand each call its own buffer
+    out_np = np.asarray(out_bank)
+    ref = fold_gram_strip_banked_ref(bank_a, bank_b, ia, ib, out_np, slots, q)
+    got_j = fold_gram_strip_banked(
+        bank_a, bank_b, ia, ib, jnp.asarray(out_np), slots, q, use_pallas=False
+    )
+    got_p = fold_gram_strip_banked(
+        bank_a, bank_b, ia, ib, jnp.asarray(out_np), slots, q,
+        use_pallas=True, interpret=True,
+    )
+    untouched = [s for s in range(out_np.shape[0]) if s not in set(slots)]
+    for got in (np.asarray(got_j), np.asarray(got_p)):
+        np.testing.assert_allclose(got, ref, atol=1e-12)
+        np.testing.assert_array_equal(got[untouched], out_np[untouched])
+
+
+def test_fold_gram_strip_banked_jnp_is_bitwise_vs_unbanked():
+    """On the non-TPU dispatch the banked scatter must be pure data
+    movement: bank rows carry the exact bits of the unbanked strip — the
+    invariant the device-resident engine's bitwise-vs-host guarantee
+    rests on."""
+    bank_a, bank_b, ia, ib, out_bank, slots = _banked_inputs(17, 4, 50, 24, 16)
+    plain = fold_gram_strip(bank_a, bank_b, ia, ib, 4, use_pallas=False)
+    banked = fold_gram_strip_banked(
+        bank_a, bank_b, ia, ib, out_bank, slots, 4, use_pallas=False
+    )
+    np.testing.assert_array_equal(
+        np.asarray(banked)[slots], np.asarray(plain)
+    )
+
+
+def test_fold_gram_strip_banked_scratch_slot_padding():
+    """Chunk-padding rows may all target one write-only scratch slot
+    (duplicate writes); real slots must come out exact regardless."""
+    q, n0, m = 3, 20, 8
+    bank_a, bank_b, ia, ib, out_bank, _ = _banked_inputs(23, q, n0, m, m)
+    # rows 2..3 are padding duplicates of row 0 aimed at scratch slot 1
+    ia = np.array([ia[0], ia[1], ia[0], ia[0]], np.int32)
+    ib = np.array([ib[0], ib[1], ib[0], ib[0]], np.int32)
+    slots = np.array([4, 5, 1, 1], np.int32)
+    out_np = np.asarray(out_bank)  # snapshot: out_bank is consumed per call
+    ref = fold_gram_strip_ref(bank_a, bank_b, ia[:2], ib[:2], q)
+    for kw in (dict(use_pallas=False), dict(use_pallas=True, interpret=True)):
+        got = np.asarray(
+            fold_gram_strip_banked(
+                bank_a, bank_b, ia, ib, jnp.asarray(out_np), slots, q, **kw
+            )
+        )
+        np.testing.assert_allclose(got[[4, 5]], np.asarray(ref), atol=1e-12)
+        np.testing.assert_array_equal(got[0], out_np[0])
+
+
+def test_fold_gram_strip_banked_degenerate_edges():
+    """Zero-width factors and empty pair lists return the bank untouched."""
+    bank_a, bank_b, ia, ib, out_bank, slots = _banked_inputs(29, 3, 16, 7, 5)
+    out = fold_gram_strip_banked(
+        bank_a, bank_b[:, :, :0], ia, ib, out_bank[:, :, :, :0], slots, 3
+    )
+    assert out.shape == (out_bank.shape[0], 3, 7, 0)
+    out2 = fold_gram_strip_banked(
+        bank_a, bank_b, ia[:0], ib[:0], out_bank, slots[:0], 3
+    )
+    np.testing.assert_array_equal(np.asarray(out2), np.asarray(out_bank))
 
 
 def test_fold_gram_blocks_identity_gather():

@@ -1,11 +1,17 @@
-"""Repo hygiene: compiled caches must never ship or shadow source.
+"""Repo hygiene: compiled caches must never ship or shadow source, and
+the user-facing docs must never dangle.
 
 Companion to the conftest.py collection guard (`_purge_stale_bytecode`):
 these assert the *tracked* tree stays clean and the guard actually drops
-stale cache files.
+stale cache files.  The docs-consistency tests parse README.md and
+docs/ARCHITECTURE.md and fail on any file path that does not exist or any
+`repro.*` dotted name that does not import — CI runs this module in its
+docs job, so a refactor cannot silently strand the documentation.
 """
 
+import importlib
 import os
+import re
 import subprocess
 import sys
 import time
@@ -40,6 +46,78 @@ def test_gitignore_covers_bytecode():
         lines = {ln.strip() for ln in f}
     assert "__pycache__/" in lines
     assert "*.pyc" in lines
+
+
+_DOC_FILES = ("README.md", os.path.join("docs", "ARCHITECTURE.md"))
+
+# path-like tokens: markdown link targets and backticked repo paths
+_MD_LINK = re.compile(r"\]\(([^)#\s]+)\)")
+_TICKED = re.compile(r"`([^`\n]+)`")
+_PATHLIKE = re.compile(
+    r"^(?:src|tests|benchmarks|examples|docs|\.github)/[\w./-]+$|^[\w.-]+\.(?:md|json|py|yml|txt)$"
+)
+_DOTTED = re.compile(r"\brepro(?:\.\w+)+")
+
+
+def _doc_path_refs(text):
+    """File references a doc makes: link targets plus backticked tokens
+    that look like repo paths (``tests/foo.py::test_bar`` counts as
+    ``tests/foo.py``)."""
+    refs = set(_MD_LINK.findall(text))
+    for tok in _TICKED.findall(text):
+        tok = tok.split("::")[0].strip()
+        if _PATHLIKE.match(tok):
+            refs.add(tok)
+    return {r.split("::")[0] for r in refs if not r.startswith("http")}
+
+
+def _resolve_dotted(name: str) -> bool:
+    """True iff a dotted ``repro.x.y`` reference resolves to an importable
+    module or an attribute of one (longest importable prefix + getattrs)."""
+    parts = name.split(".")
+    for cut in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:cut]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+@pytest.mark.parametrize("doc", _DOC_FILES)
+def test_doc_file_references_resolve(doc):
+    """Every file path README/ARCHITECTURE mention must exist: dangling
+    pointers in the entry-point docs are treated as broken builds."""
+    doc_path = os.path.join(_ROOT, doc)
+    with open(doc_path) as f:
+        text = f.read()
+    base = os.path.dirname(doc_path)
+    missing = []
+    for ref in sorted(_doc_path_refs(text)):
+        # links resolve relative to the doc; bare repo paths from the root
+        if not (
+            os.path.exists(os.path.join(base, ref))
+            or os.path.exists(os.path.join(_ROOT, ref))
+        ):
+            missing.append(ref)
+    assert missing == [], f"{doc} references missing files: {missing}"
+
+
+@pytest.mark.parametrize("doc", _DOC_FILES)
+def test_doc_code_references_resolve(doc):
+    """Every ``repro.*`` dotted name README/ARCHITECTURE mention must
+    import (module, or attribute reachable from one)."""
+    with open(os.path.join(_ROOT, doc)) as f:
+        text = f.read()
+    names = sorted(set(_DOTTED.findall(text)))
+    assert names, f"{doc} should anchor itself to code with repro.* refs"
+    bad = [n for n in names if not _resolve_dotted(n)]
+    assert bad == [], f"{doc} references unresolvable code names: {bad}"
 
 
 def test_collection_guard_purges_stale_and_orphaned_pyc(tmp_path):
