@@ -7,7 +7,7 @@ import time
 
 import numpy as np
 
-from repro.core.api import causal_discover
+from repro.core.api import DataSpec, causal_discover
 from repro.core.metrics import skeleton_f1
 from repro.core.score_common import ScoreConfig
 from repro.data.networks import CHILD, SACHS, sample_network
@@ -23,11 +23,12 @@ def run(ns=(200, 500), reps=2, include_cv=True, networks=(SACHS,), quick=False):
                 f1s, times = [], []
                 for rep in range(reps):
                     data, adj = sample_network(net, n=n, seed=rep)
+                    spec = DataSpec.from_arrays(data, discrete=[True] * net.d)
                     t0 = time.perf_counter()
                     res = causal_discover(
                         data,
                         method=method,
-                        discrete=[True] * net.d,
+                        spec=spec,
                         config=ScoreConfig(seed=rep),
                     )
                     times.append(time.perf_counter() - t0)

@@ -15,6 +15,11 @@ BENCH_frontier.json at the repo root so future PRs track the trajectory.
 
 ``python -m benchmarks.frontier_scoring``            — full grid
 ``python -m benchmarks.frontier_scoring --quick``    — small cells only
+``--precision``  — additionally time the ``precision="f32_gram"`` policy
+(`repro.core.spec.EngineOptions`): cold/warm rates of the engine with
+f32 Gram accumulation, plus its max |score - f64 oracle| deviation
+(absolute and relative) against the bitwise engine, which on CPU *is*
+the f64 oracle.  Never run concurrently with the test suite.
 ``--check-speedup X``  — exit nonzero unless every cell's batched/seq
 ratio is >= X (the CI perf-smoke gate: engine regressions fail loudly).
 """
@@ -38,9 +43,12 @@ def _frontier_configs(d: int):
     return configs
 
 
-def _bench_cell(d: int, n: int, seq_cap: int, seed: int = 0) -> dict:
+def _bench_cell(
+    d: int, n: int, seq_cap: int, seed: int = 0, precision: bool = False
+) -> dict:
     from repro.core.score_common import ScoreConfig, config_key
     from repro.core.score_lowrank import CVLRScorer
+    from repro.core.spec import EngineOptions
     from repro.data.synthetic import generate_scm_data
 
     ds = generate_scm_data(d=d, n=n, density=0.3, kind="continuous", seed=seed)
@@ -115,6 +123,33 @@ def _bench_cell(d: int, n: int, seq_cap: int, seed: int = 0) -> dict:
         assert t.pop("path") == name
         stage_split[name] = {k: round(v, 4) for k, v in t.items()}
 
+    # -- opt-in: the f32_gram precision policy ----------------------------
+    f32 = None
+    if precision:
+        opts = EngineOptions(precision="f32_gram")
+        f32_cold, rate_f32 = _timed_cold(options=opts)
+        rate_f32_warm = _timed_warm(f32_cold)
+        # deviation vs the f64 oracle over the WHOLE frontier: on CPU the
+        # default (bitwise) engine is bit-identical to the sequential f64
+        # oracle, so its score cache is the oracle reference.
+        max_abs = max_rel = 0.0
+        for i, ps in configs:
+            a = f32_cold._score_cache[config_key(i, ps)]
+            b = cold._score_cache[config_key(i, ps)]
+            max_abs = max(max_abs, abs(a - b))
+            max_rel = max(max_rel, abs(a - b) / max(1.0, abs(b)))
+        f32 = {
+            "cold_scores_per_sec": round(rate_f32, 3),
+            "warm_sweep_scores_per_sec": round(rate_f32_warm, 3),
+            "speedup_vs_bitwise_cold": round(rate_f32 / rate_bat, 3),
+            "max_abs_dev_vs_f64_oracle": max_abs,
+            "max_rel_dev_vs_f64_oracle": max_rel,
+            "policy_oracle_rtol": opts.oracle_rtol,
+        }
+        assert max_rel <= opts.oracle_rtol, (
+            f"f32_gram deviated {max_rel:.2e} > policy bound {opts.oracle_rtol}"
+        )
+
     # numerical agreement spot-check (engine == oracle)
     worst = 0.0
     for (i, ps), b in zip(seq_configs, seq_scores):
@@ -138,10 +173,13 @@ def _bench_cell(d: int, n: int, seq_cap: int, seed: int = 0) -> dict:
         "stage_split_s": stage_split,
         "max_rel_err": worst,
         "gram_cache": gram_stats,
+        **({"f32_gram": f32} if f32 is not None else {}),
     }
 
 
-def run(quick: bool = False, out_path: str = OUT_PATH) -> dict:
+def run(
+    quick: bool = False, out_path: str = OUT_PATH, precision: bool = False
+) -> dict:
     grid = (
         [(8, 1000), (16, 1000)]
         if quick
@@ -150,19 +188,28 @@ def run(quick: bool = False, out_path: str = OUT_PATH) -> dict:
     cells = []
     print("d,n,n_configs,seq/s,batched/s,hostpath/s,speedup,max_rel_err")
     for d, n in grid:
-        cell = _bench_cell(d, n, seq_cap=24 if n >= 10000 else 48)
+        cell = _bench_cell(
+            d, n, seq_cap=24 if n >= 10000 else 48, precision=precision
+        )
         cells.append(cell)
         print(
             f"{d},{n},{cell['n_configs']},{cell['seq_scores_per_sec']},"
             f"{cell['batched_scores_per_sec']},"
             f"{cell['batched_hostpath_scores_per_sec']},{cell['speedup']},"
             f"{cell['max_rel_err']:.2e}"
+            + (
+                f",f32={cell['f32_gram']['cold_scores_per_sec']}/s"
+                f",dev={cell['f32_gram']['max_rel_dev_vs_f64_oracle']:.2e}"
+                if "f32_gram" in cell
+                else ""
+            )
         )
     result = {
         "benchmark": "frontier_scoring",
         "unit": "candidate-scores/sec",
         "engine": "device-resident fold pipeline (Gram banks + gather-fold)"
-        " over fold-gram strips + z-shared cores (PR 3)",
+        " over fold-gram strips + z-shared cores (PR 3); precision policy"
+        " via repro.core.spec.EngineOptions (PR 4)",
         "quick": quick,
         "cells": cells,
     }
@@ -178,6 +225,12 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default=OUT_PATH)
     ap.add_argument(
+        "--precision",
+        action="store_true",
+        help="additionally benchmark the precision='f32_gram' engine policy"
+        " and record its deviation vs the f64 oracle per cell",
+    )
+    ap.add_argument(
         "--check-speedup",
         type=float,
         default=None,
@@ -186,7 +239,7 @@ if __name__ == "__main__":
         " is >= X — the CI smoke gate against engine perf regressions",
     )
     args = ap.parse_args()
-    result = run(quick=args.quick, out_path=args.out)
+    result = run(quick=args.quick, out_path=args.out, precision=args.precision)
     if args.check_speedup is not None:
         slow = [
             (c["d"], c["n"], c["speedup"])

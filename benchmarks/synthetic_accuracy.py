@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.api import causal_discover
+from repro.core.api import DataSpec, causal_discover
 from repro.core.metrics import shd_cpdag, skeleton_f1
 from repro.core.graph import dag_to_cpdag
 from repro.core.score_common import ScoreConfig
@@ -34,11 +34,13 @@ def run(
                         ds = generate_scm_data(
                             d=d, n=n, density=dens, kind=kind, seed=100 * rep + 7
                         )
+                        spec = DataSpec.from_arrays(
+                            ds.data, dims=ds.dims, discrete=ds.discrete
+                        )
                         res = causal_discover(
                             ds.data,
                             method=method,
-                            dims=ds.dims,
-                            discrete=ds.discrete,
+                            spec=spec,
                             config=ScoreConfig(seed=rep),
                         )
                         f1s.append(skeleton_f1(res.cpdag, ds.dag))

@@ -1,10 +1,12 @@
 """Distributed causal discovery: the paper's score on a device mesh.
 
-Demonstrates (1) the batched GES frontier hook (one vmapped score kernel
-for a whole sweep), and (2) the shard_map sample-parallel scorer that the
-multi-pod dry-run lowers on the production mesh.  Runs on however many
-devices are available (1 on this CPU container; set
-XLA_FLAGS=--xla_force_host_platform_device_count=8 to fan out).
+Demonstrates (1) the sharded GES engine — `EngineOptions(engine="sharded")`
+routes every sweep's frontier through the stacked distributed scoring
+pipeline, no hand-rolled batch_hook — and (2) the shard_map
+sample-parallel scorer that the multi-pod dry-run lowers on the
+production mesh.  Runs on however many devices are available (1 on this
+CPU container; set XLA_FLAGS=--xla_force_host_platform_device_count=8 to
+fan out).
 
     PYTHONPATH=src python examples/distributed_discovery.py
 """
@@ -21,14 +23,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import make_scorer
+from repro.core.api import DiscoverySession, EngineOptions
 from repro.core.distributed_score import (
     block_folds,
     cvlr_scores_stacked,
-    ges_batch_hook,
     make_sharded_scorer,
 )
-from repro.core.ges import ges
 from repro.core.metrics import skeleton_f1
 from repro.core.score_common import ScoreConfig
 from repro.data.synthetic import generate_scm_data
@@ -37,15 +37,23 @@ from repro.data.synthetic import generate_scm_data
 def main():
     ds = generate_scm_data(d=6, n=400, density=0.35, kind="continuous", seed=3)
 
-    # 1) GES with the batched frontier hook
-    scorer = make_scorer(ds.data, method="cvlr", config=ScoreConfig(seed=1))
-    t0 = time.perf_counter()
-    res = ges(scorer, batch_hook=ges_batch_hook)
-    print(
-        f"batched GES: {time.perf_counter()-t0:.1f}s, "
-        f"F1={skeleton_f1(res.cpdag, ds.dag):.3f}, "
-        f"{scorer.cache_size} local scores evaluated"
+    # 1) GES through the sharded engine: every sweep's frontier is scored
+    #    by the stacked distributed pipeline (repro.core.distributed_score)
+    #    — selected declaratively, no batch_hook threading.
+    session = DiscoverySession(
+        ds.data,
+        options=EngineOptions(engine="sharded"),
+        config=ScoreConfig(seed=1),
     )
+    t0 = time.perf_counter()
+    res = session.run()
+    print(
+        f"sharded GES: {time.perf_counter()-t0:.1f}s, "
+        f"F1={skeleton_f1(res.cpdag, ds.dag):.3f}, "
+        f"{session.scorer.cache_size} local scores evaluated over "
+        f"{len(session.sweep_log)} sweeps"
+    )
+    scorer = session.scorer  # feature bank reused by the shard_map demo
 
     # 2) shard_map scorer on a device mesh (samples over 'data',
     #    candidates over 'model') — the multi-pod dry-run workload

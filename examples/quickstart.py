@@ -5,7 +5,7 @@
 
 import numpy as np
 
-from repro.core.api import causal_discover
+from repro.core.api import DataSpec, EngineOptions, causal_discover
 from repro.core.metrics import shd_cpdag, skeleton_f1
 from repro.core.graph import dag_to_cpdag
 from repro.core.score_common import ScoreConfig
@@ -17,9 +17,18 @@ def main():
     ds = generate_scm_data(d=7, n=500, density=0.35, kind="continuous", seed=42)
     print(f"data: {ds.data.shape}, true edges: {int(ds.dag.sum())}")
 
+    # DataSpec.infer guesses per-variable kinds (continuous here); build
+    # one explicitly with DataSpec.from_arrays(data, dims=..., discrete=...)
+    spec = DataSpec.infer(ds.data)
+    print("inferred variables:", [(v.name, v.kind) for v in spec.variables])
+
     res = causal_discover(
         ds.data,
         method="cvlr",  # the paper's O(n) score; method="cv" = exact O(n^3)
+        spec=spec,
+        # the default engine: batched frontier scoring, bitwise-exact vs
+        # the sequential oracle; see EngineOptions for every knob
+        options=EngineOptions(engine="batched", precision="bitwise"),
         config=ScoreConfig(m_max=100, q_folds=10),
         verbose=True,
     )

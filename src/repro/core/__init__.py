@@ -23,9 +23,18 @@ from repro.core.lowrank import (  # noqa: E402
     discrete_lowrank,
     lowrank_features,
 )
+from repro.core.spec import (  # noqa: E402
+    DataSpec,
+    EngineOptions,
+    VariableSpec,
+)
 from repro.core.score_exact import CVScorer  # noqa: E402
 from repro.core.score_lowrank import CVLRScorer  # noqa: E402
-from repro.core.api import causal_discover, make_scorer  # noqa: E402
+from repro.core.api import (  # noqa: E402
+    DiscoverySession,
+    causal_discover,
+    make_scorer,
+)
 
 __all__ = [
     "KernelSpec",
@@ -35,6 +44,10 @@ __all__ = [
     "incomplete_cholesky",
     "discrete_lowrank",
     "lowrank_features",
+    "DataSpec",
+    "VariableSpec",
+    "EngineOptions",
+    "DiscoverySession",
     "CVScorer",
     "CVLRScorer",
     "causal_discover",

@@ -1,110 +1,334 @@
-"""Public API: build scorers, run causal discovery end-to-end.
+"""Public API: declarative causal discovery.
 
-Two entry points:
+The surface is three objects plus two functions:
 
-* `make_scorer` — construct a decomposable local scorer (`CVLRScorer`,
-  the paper's O(n) method, or `CVScorer`, the exact O(n^3) baseline) with
-  the engine knobs documented below.
-* `causal_discover` — `make_scorer` + GES in one call; returns the
-  estimated CPDAG.
+* `repro.core.spec.DataSpec` — *what the data is*: one
+  `VariableSpec(name, dim, kind)` per variable, built explicitly
+  (`DataSpec.from_arrays`) or by heuristics (`DataSpec.infer`).
+* `repro.core.spec.EngineOptions` — *how to run*: engine selection
+  (`"batched"` | `"sequential"` | `"sharded"`), Gram-block cache bounds,
+  and the Gram-accumulation `precision` policy.
+* `DiscoverySession` — scorer construction + the GES loop, owning the
+  sweep lifecycle (`begin_sweep` / `score_frontier` / `end_sweep`) and a
+  per-sweep log; `causal_discover` is the one-call wrapper over it.
+* `make_scorer` — construct just the local scorer (`CVLRScorer`, the
+  paper's O(n) method, or `CVScorer`, the exact O(n^3) baseline).
+* `causal_discover` — session + GES in one call; returns the CPDAG.
 
-See README.md for a quickstart and docs/ARCHITECTURE.md for how the
-batched scoring engine behind these knobs is put together.
+The pre-PR-4 kwargs (`dims=`, `discrete=`, `batched=`,
+`gram_cache_entries=`, `device_bank_mb=`, `batch_hook=`) keep working for
+one release through a deprecation shim — they emit `DeprecationWarning`
+and produce identical results.  See README.md §Migration for the old →
+new mapping and docs/ARCHITECTURE.md for the engine behind the options.
 """
 
 from __future__ import annotations
 
-import numpy as np
+import warnings
 
 from repro.core.ges import ges, GESResult
 from repro.core.score_common import ScoreConfig
 from repro.core.score_exact import CVScorer
 from repro.core.score_lowrank import CVLRScorer
+from repro.core.spec import DataSpec, EngineOptions, VariableSpec, resolve_spec
+
+__all__ = [
+    "DataSpec",
+    "VariableSpec",
+    "EngineOptions",
+    "DiscoverySession",
+    "make_scorer",
+    "causal_discover",
+]
+
+_UNSET = object()  # distinguishes "not passed" from an explicit None
+
+
+def _deprecated(old: str, new: str, stacklevel: int = 3) -> None:
+    # stacklevel must land on the *caller of the public API*, not on this
+    # module: the CI gate runs the suite with -W error::DeprecationWarning
+    # filtered to repro.*, so repo code calling its own deprecated surface
+    # fails loudly while user/test code merely sees the warning.
+    warnings.warn(
+        f"{old} is deprecated; {new} (the old form keeps working for one "
+        "release and produces identical results)",
+        DeprecationWarning,
+        stacklevel=stacklevel,
+    )
+
+
+def _resolve_legacy_spec(data, spec, dims, discrete):
+    """Fold the deprecated dims=/discrete= lists into a DataSpec."""
+    if dims is not _UNSET:
+        _deprecated(
+            "the dims= list",
+            "describe variables with spec=DataSpec.from_arrays(...)",
+            stacklevel=4,
+        )
+    if discrete is not _UNSET:
+        _deprecated(
+            "the discrete= list",
+            "describe variables with spec=DataSpec.from_arrays(...)",
+            stacklevel=4,
+        )
+    return resolve_spec(
+        data,
+        spec=spec,
+        dims=None if dims is _UNSET else dims,
+        discrete=None if discrete is _UNSET else discrete,
+    )
+
+
+def _resolve_legacy_options(options, batched, gram_cache_entries, device_bank_mb):
+    """Fold the deprecated loose engine kwargs into an EngineOptions."""
+    legacy = {
+        "batched=": batched,
+        "gram_cache_entries=": gram_cache_entries,
+        "device_bank_mb=": device_bank_mb,
+    }
+    passed = {k: v for k, v in legacy.items() if v is not _UNSET}
+    if options is not None:
+        if passed:
+            raise ValueError(
+                f"pass either options=EngineOptions(...) or the legacy "
+                f"kwargs {sorted(passed)}, not both"
+            )
+        if not isinstance(options, EngineOptions):
+            raise ValueError(
+                f"options must be an EngineOptions, got {type(options).__name__}"
+            )
+        return options
+    for name in sorted(passed):
+        field = {
+            "batched=": 'engine="batched"/"sequential"',
+            "gram_cache_entries=": "gram_cache_entries=",
+            "device_bank_mb=": "device_bank_mb=",
+        }[name]
+        _deprecated(name, f"set {field} on options=EngineOptions(...)", stacklevel=4)
+    kw = {}
+    if batched is not _UNSET:
+        kw["engine"] = "batched" if batched else "sequential"
+    if gram_cache_entries is not _UNSET:
+        kw["gram_cache_entries"] = gram_cache_entries
+    if device_bank_mb is not _UNSET:
+        kw["device_bank_mb"] = device_bank_mb
+    return EngineOptions(**kw)
 
 
 def make_scorer(
     data,
     method: str = "cvlr",
-    dims=None,
-    discrete=None,
+    spec: DataSpec | None = None,
+    options: EngineOptions | None = None,
     config: ScoreConfig | None = None,
-    batched: bool = True,
-    gram_cache_entries: int | None = CVLRScorer.DEFAULT_GRAM_CACHE_ENTRIES,
-    device_bank_mb: float | None = CVLRScorer.DEFAULT_DEVICE_BANK_MB,
+    # -- deprecated (one release): the pre-PR-4 loose kwargs -------------
+    dims=_UNSET,
+    discrete=_UNSET,
+    batched=_UNSET,
+    gram_cache_entries=_UNSET,
+    device_bank_mb=_UNSET,
 ):
     """Build a local scorer over an (n, cols) data matrix.
 
     method: 'cvlr' (the paper's low-rank CV score) or 'cv' (exact O(n^3)
-    baseline).  dims / discrete: per-variable column widths and
-    discreteness flags (see `causal_discover`).  config: hyperparameters
+    baseline).  spec: a `repro.core.spec.DataSpec` describing the
+    variables (default: every column a continuous 1-D variable; use
+    `DataSpec.infer(data)` for dtype/cardinality heuristics).  options: a
+    `repro.core.spec.EngineOptions` — engine selection, Gram-block cache
+    bounds (`gram_cache_entries`, `device_bank_mb`) and the `precision`
+    policy; every field is documented there.  The exact scorer ignores the
+    engine options except that `engine="sharded"` is rejected (the
+    distributed pipeline is CV-LR only).  config: score hyperparameters
     (`ScoreConfig`; paper defaults).
 
-    batched: let the CV-LR scorer evaluate GES frontiers through the
-    batched engine (default); False forces the sequential per-candidate
-    oracle path.  Ignored by the exact scorer, which is always lazy.
-
-    gram_cache_entries: LRU bound on the CV-LR Gram-block cache — the
-    total entry count across its host and device tiers (None = unbounded).
-    The default is sized to a sweep's working set — see
-    `CVLRScorer.DEFAULT_GRAM_CACHE_ENTRIES`; shrink it on memory-tight
-    hosts, grow it for very large frontiers.  Ignored by the exact scorer.
-
-    device_bank_mb: byte budget (in MB) for the Gram-block cache's
-    *device tier* — the device-resident fold pipeline, where the fused
-    Gram kernels scatter blocks straight into padded per-width device bank
-    tensors and the fold stage index-gathers them, with no host round-trip
-    between the stages (see `repro.core.score_lowrank.cvlr_scores_batched`
-    and docs/ARCHITECTURE.md).  Cached blocks persist on device across
-    sweeps and spill to the host tier only on LRU eviction.  0 or None
-    disables the tier: the engine then runs the host-assembly path (same
-    scores, bit-identical on CPU); a sweep whose working set exceeds the
-    budget falls back to that path automatically for just that sweep.
-    Default `CVLRScorer.DEFAULT_DEVICE_BANK_MB`.  Ignored by the exact
-    scorer.
+    The legacy kwargs (`dims`/`discrete`/`batched`/`gram_cache_entries`/
+    `device_bank_mb`) are deprecated shims over the two objects.
     """
+    spec = _resolve_legacy_spec(data, spec, dims, discrete)
+    options = _resolve_legacy_options(
+        options, batched, gram_cache_entries, device_bank_mb
+    )
     if method == "cvlr":
-        return CVLRScorer(
-            data, dims=dims, discrete=discrete, config=config, batched=batched,
-            gram_cache_entries=gram_cache_entries,
-            device_bank_mb=device_bank_mb,
-        )
+        return CVLRScorer(data, spec=spec, config=config, options=options)
     if method == "cv":
-        return CVScorer(data, dims=dims, discrete=discrete, config=config)
+        if options.engine == "sharded":
+            raise ValueError(
+                'EngineOptions(engine="sharded") requires method="cvlr" — '
+                "the distributed pipeline scores low-rank factors only"
+            )
+        return CVScorer(data, spec=spec, config=config)
     raise ValueError(f"unknown scoring method {method!r}")
+
+
+class DiscoverySession:
+    """One causal-discovery run: scorer construction + the GES loop, with
+    the session owning the sweep lifecycle.
+
+    `repro.core.ges.ges` calls `begin_sweep(phase)` /
+    `score_frontier(configs)` / `end_sweep(step)` around every frontier
+    evaluation; the session routes the scoring by its `EngineOptions`
+    (`"batched"` → the scorer's prefetch engine, `"sharded"` → the
+    distributed stacked pipeline, `"sequential"` → lazy per-candidate
+    scores) and records one entry per sweep in `sweep_log`:
+    ``{phase, sweep, n_configs, n_scored, step, gram_cache}`` with the
+    Gram-cache counter deltas for that sweep.  This is the seam the
+    planned incremental-frontier-delta optimization plugs into — a
+    session sees consecutive frontiers and can diff them.
+
+    Typical use is through `causal_discover`; instantiate directly when
+    you want the scorer, the per-sweep log, or custom search parameters:
+
+        session = DiscoverySession(data, options=EngineOptions())
+        result = session.run()
+        session.sweep_log  # per-sweep engine/cache telemetry
+    """
+
+    def __init__(
+        self,
+        data,
+        spec: DataSpec | None = None,
+        options: EngineOptions | None = None,
+        *,
+        method: str = "cvlr",
+        config: ScoreConfig | None = None,
+        max_subset: int | None = None,
+        verbose: bool = False,
+    ):
+        self.options = options if options is not None else EngineOptions()
+        self.scorer = make_scorer(
+            data, method=method, spec=spec, options=self.options, config=config
+        )
+        self.spec = self.scorer.view.spec
+        self.max_subset = max_subset
+        self.verbose = verbose
+        self.sweep_log: list = []
+        self.result: GESResult | None = None
+        self._active: dict | None = None
+        if self.options.engine == "sharded":
+            # resolved once, loudly, instead of failing mid-search
+            from repro.core.distributed_score import sharded_batch_hook
+
+            self._sharded_hook = sharded_batch_hook
+        else:
+            self._sharded_hook = None
+
+    # -- sweep lifecycle (driven by repro.core.ges.ges) -------------------
+    def begin_sweep(self, phase: str) -> None:
+        stats = getattr(self.scorer, "gram_cache", None)
+        self._active = {
+            "phase": phase,
+            "sweep": len(self.sweep_log),
+            "n_configs": 0,
+            "n_scored": 0,
+            "step": None,
+            "_stats0": dict(stats.stats) if stats is not None else None,
+        }
+
+    def score_frontier(self, configs) -> int:
+        """Evaluate one sweep's (node, parents) frontier through the
+        engine the options selected; returns the number of scores
+        actually computed (cached configurations cost nothing)."""
+        if self._active is None:
+            self.begin_sweep("adhoc")
+        self._active["n_configs"] = len(configs)
+        if self._sharded_hook is not None:
+            n = self._sharded_hook(self.scorer, configs)
+        elif self.options.batched:
+            prefetch = getattr(self.scorer, "prefetch", None)
+            n = prefetch(configs) if prefetch is not None else 0
+        else:
+            n = 0  # sequential: ges falls back to lazy local_score
+        self._active["n_scored"] = int(n)
+        return int(n)
+
+    def end_sweep(self, step=None) -> None:
+        rec, self._active = self._active, None
+        if rec is None:
+            return
+        rec["step"] = step
+        stats0 = rec.pop("_stats0")
+        cache = getattr(self.scorer, "gram_cache", None)
+        if cache is not None and stats0 is not None:
+            counters = (
+                "hits", "misses", "evictions",
+                "promotions", "spills", "bank_fallbacks",
+            )
+            rec["gram_cache"] = {
+                k: cache.stats[k] - stats0[k] for k in counters
+            }
+        self.sweep_log.append(rec)
+
+    # -- the run ----------------------------------------------------------
+    def run(self) -> GESResult:
+        """GES end to end; returns (and retains as `self.result`) the
+        `GESResult` whose `cpdag` is the estimated equivalence class."""
+        self.result = ges(
+            self.scorer,
+            max_subset=self.max_subset,
+            verbose=self.verbose,
+            session=self,
+        )
+        return self.result
 
 
 def causal_discover(
     data,
     method: str = "cvlr",
-    dims=None,
-    discrete=None,
+    spec: DataSpec | None = None,
+    options: EngineOptions | None = None,
     config: ScoreConfig | None = None,
     max_subset: int | None = None,
-    batch_hook=None,
     verbose: bool = False,
-    batched: bool = True,
-    gram_cache_entries: int | None = CVLRScorer.DEFAULT_GRAM_CACHE_ENTRIES,
-    device_bank_mb: float | None = CVLRScorer.DEFAULT_DEVICE_BANK_MB,
+    # -- deprecated (one release): the pre-PR-4 loose kwargs -------------
+    dims=_UNSET,
+    discrete=_UNSET,
+    batched=_UNSET,
+    gram_cache_entries=_UNSET,
+    device_bank_mb=_UNSET,
+    batch_hook=_UNSET,
 ) -> GESResult:
     """GES + (CV-LR | CV) generalized score on an (n, cols) data matrix.
 
-    dims: per-variable column widths (multi-dim variables); default all 1.
-    discrete: per-variable discreteness flags (routes Alg. 2).
-    batched: evaluate each GES frontier through the batched scoring engine
-    (CV-LR only; the default).  On CPU (and under interpret mode) results
-    are identical to the sequential path up to machine-precision
-    reassociation — this holds for both the device-bank and host-assembly
-    engine paths; on TPU the fused fold-Gram kernels contract at f32
-    (Mosaic has no f64 MXU path — see repro/kernels/fold_gram.py), so
-    batched scores there agree with the oracle only to f32 Gram accuracy
-    (~1e-7 relative), like every other compiled kernel in repro.kernels.
-    gram_cache_entries / device_bank_mb: Gram-block cache bounds — entry
-    count and device-tier byte budget (see `make_scorer`).
-    Returns a GESResult whose `cpdag` is the estimated equivalence class.
+    spec: `DataSpec` describing the variables — `DataSpec.from_arrays`
+    absorbs explicit dims/discreteness, `DataSpec.infer` guesses kinds
+    from dtype/cardinality (routing the paper's Alg.-2 sampling for
+    discrete variables).  options: `EngineOptions` — engine
+    (`"batched"`/`"sequential"`/`"sharded"`), cache bounds, `precision`.
+    Selecting `"sharded"` routes every GES frontier through
+    `repro.core.distributed_score` internally; no `batch_hook` callable
+    needed.  Returns a GESResult whose `cpdag` is the estimated
+    equivalence class; the underlying `DiscoverySession` (scorer handle,
+    per-sweep log) is one `DiscoverySession(...).run()` away when you
+    need it.
+
+    The legacy kwargs are deprecated shims: `dims`/`discrete` fold into
+    `spec`, `batched`/`gram_cache_entries`/`device_bank_mb` into
+    `options`, and `batch_hook=` is replaced by
+    `EngineOptions(engine="sharded")` for the supported paths.
     """
-    scorer = make_scorer(
-        data, method=method, dims=dims, discrete=discrete, config=config,
-        batched=batched, gram_cache_entries=gram_cache_entries,
-        device_bank_mb=device_bank_mb,
+    spec = _resolve_legacy_spec(data, spec, dims, discrete)
+    options = _resolve_legacy_options(
+        options, batched, gram_cache_entries, device_bank_mb
     )
-    return ges(scorer, max_subset=max_subset, batch_hook=batch_hook, verbose=verbose)
+    # an explicit batch_hook=None was the old default ("no hook") — treat
+    # it as not passed rather than warning about a no-op value
+    if batch_hook is not _UNSET and batch_hook is not None:
+        _deprecated(
+            "causal_discover(batch_hook=...)",
+            'select options=EngineOptions(engine="sharded") instead',
+        )
+        scorer = make_scorer(
+            data, method=method, spec=spec, options=options, config=config
+        )
+        return ges(
+            scorer, max_subset=max_subset, batch_hook=batch_hook, verbose=verbose
+        )
+    return DiscoverySession(
+        data,
+        spec=spec,
+        options=options,
+        method=method,
+        config=config,
+        max_subset=max_subset,
+        verbose=verbose,
+    ).run()

@@ -46,14 +46,16 @@ except AttributeError:  # pragma: no cover - depends on jax version
     from jax.experimental.shard_map import shard_map as _shard_map
 
 
-def _block_grams(lam_x_b, lam_z_b, data_axes=None):
+def _block_grams(lam_x_b, lam_z_b, data_axes=None, precision="bitwise"):
     """Per-fold test Gram blocks (V, U, S) from fold-blocked factors.
 
     lam_x_b, lam_z_b: (..., Q, n0_local, m) with any leading batch dims.
     The contraction routes through `repro.kernels.fold_gram_blocks` — the
     same fused fold-Gram strip kernel as the local batched frontier
     engine (tiled Pallas on TPU, einsum elsewhere), so the local and
-    sharded scorers share both the fold algebra AND the Gram kernel.
+    sharded scorers share both the fold algebra AND the Gram kernel —
+    including the `precision` policy (f32 accumulation on the einsum
+    backend under ``"f32_gram"``).
     When `data_axes` is given, the n0 axis is a shard and the blocks are
     summed across it with one fused psum (3 tensors per *batch*, not per
     candidate: batching the all-reduce amortizes collective latency across
@@ -62,9 +64,9 @@ def _block_grams(lam_x_b, lam_z_b, data_axes=None):
     REFUTED: the materialized concat costs an extra write+read that
     exceeds the duplicate-stream saving — EXPERIMENTS.md §Perf.)
     """
-    V = fold_gram_blocks(lam_x_b, lam_x_b)
-    U = fold_gram_blocks(lam_z_b, lam_x_b)
-    S = fold_gram_blocks(lam_z_b, lam_z_b)
+    V = fold_gram_blocks(lam_x_b, lam_x_b, precision=precision)
+    U = fold_gram_blocks(lam_z_b, lam_x_b, precision=precision)
+    S = fold_gram_blocks(lam_z_b, lam_z_b, precision=precision)
     if data_axes is not None:
         V, U, S = jax.lax.psum((V, U, S), data_axes)
     return V, U, S
@@ -77,32 +79,39 @@ def block_folds(lam: jnp.ndarray, q: int) -> jnp.ndarray:
     return lam[: q * n0].reshape(q, n0, m)
 
 
-def cvlr_scores_stacked(lam_x_b, lam_z_b, lmbda=0.01, gamma=0.01):
+def cvlr_scores_stacked(lam_x_b, lam_z_b, lmbda=0.01, gamma=0.01, precision="bitwise"):
     """Batched scores for a GES frontier from pre-blocked stacked factors.
 
     lam_x_b, lam_z_b: (B, Q, n0, m) fold-blocked centered factors.
     Returns (B,) scores.  Pure einsum + the shared fold kernel — shard the
-    B axis with pjit for candidate parallelism.  (The local search path
-    uses `score_lowrank.cvlr_scores_batched` instead — a different,
-    bank+pairs signature — which shares Gram blocks across candidates
-    through the Gram-block cache.)
+    B axis with pjit for candidate parallelism.  `precision` is the Gram
+    accumulation policy (`repro.core.spec.EngineOptions.precision`).
+    (The local search path uses `score_lowrank.cvlr_scores_batched`
+    instead — a different, bank+pairs signature — which shares Gram
+    blocks across candidates through the Gram-block cache.)
     """
     _, q, n0, _ = lam_x_b.shape
     n1 = (q - 1) * n0
     lm = jnp.asarray(lmbda, lam_x_b.dtype)
     gm = jnp.asarray(gamma, lam_x_b.dtype)
-    V, U, S = _block_grams(lam_x_b, lam_z_b)
+    V, U, S = _block_grams(lam_x_b, lam_z_b, precision=precision)
     return scores_from_fold_blocks(V, U, S, n0, n1, lm, gm)
 
 
-def make_sharded_scorer(mesh: Mesh, data_axis="data", model_axis: str = "model"):
+def make_sharded_scorer(
+    mesh: Mesh,
+    data_axis="data",
+    model_axis: str = "model",
+    precision: str = "bitwise",
+):
     """shard_map CV-LR frontier scorer on `mesh`.
 
     Returns a jit'd fn of ((B, Q, n0, m), (B, Q, n0, m)) -> (B,) with
     B sharded over `model_axis` and n0 sharded over `data_axis` (a name or
     a tuple of names — pass ("pod", "data") on the multi-pod mesh so the
     sample shards span pods); Gram blocks psum over the data axes exactly
-    as described in the module doc.
+    as described in the module doc.  `precision` is the Gram accumulation
+    policy (`repro.core.spec.EngineOptions.precision`).
     """
     data_axes = (data_axis,) if isinstance(data_axis, str) else tuple(data_axis)
     data_size = 1
@@ -116,7 +125,7 @@ def make_sharded_scorer(mesh: Mesh, data_axis="data", model_axis: str = "model")
         n1 = (q - 1) * n0
         lm = jnp.asarray(0.01, lam_x_b.dtype)
         gm = jnp.asarray(0.01, lam_x_b.dtype)
-        V, U, S = _block_grams(lam_x_b, lam_z_b, data_axes)
+        V, U, S = _block_grams(lam_x_b, lam_z_b, data_axes, precision=precision)
         return scores_from_fold_blocks(V, U, S, n0, n1, lm, gm)
 
     spec_in = P(model_axis, None, data_axes if len(data_axes) > 1 else data_axes[0], None)
@@ -127,7 +136,7 @@ def make_sharded_scorer(mesh: Mesh, data_axis="data", model_axis: str = "model")
     return jax.jit(fn)
 
 
-def ges_batch_hook(scorer, configs, lmbda=None, gamma=None):
+def ges_batch_hook(scorer, configs, lmbda=None, gamma=None, precision=None):
     """`batch_hook` for repro.core.ges.ges: evaluate a whole sweep's local
     scores in one batched (vmapped) call and fill the scorer cache.
 
@@ -136,8 +145,11 @@ def ges_batch_hook(scorer, configs, lmbda=None, gamma=None):
     (`CVLRScorer.prefetch`), which shares Gram blocks across candidates;
     with explicit lmbda/gamma overrides it falls back to stacking the
     scorer's feature bank and scoring through the same shared fold kernel.
+    `precision` defaults to the scorer's own Gram accumulation policy.
     """
     cfg = scorer.config
+    if precision is None:
+        precision = getattr(scorer, "precision", "bitwise")
     if lmbda is None and gamma is None and getattr(scorer, "batched", False):
         return scorer.prefetch(configs)
     lmbda = cfg.lmbda if lmbda is None else lmbda
@@ -159,8 +171,34 @@ def ges_batch_hook(scorer, configs, lmbda=None, gamma=None):
         lxs.append(block_folds(lam_x, q))
         lzs.append(block_folds(lam_z, q))
     scores = cvlr_scores_stacked(
-        jnp.stack(lxs), jnp.stack(lzs), lmbda=lmbda, gamma=gamma
+        jnp.stack(lxs), jnp.stack(lzs), lmbda=lmbda, gamma=gamma,
+        precision=precision,
     )
     for key, s in zip(todo, np.asarray(scores)):
         scorer._score_cache[key] = float(s)
     return len(todo)
+
+
+def sharded_batch_hook(scorer, configs) -> int:
+    """The ``EngineOptions(engine="sharded")`` frontier path: score a GES
+    sweep through the *stacked* distributed pipeline (`cvlr_scores_stacked`
+    — fold-blocked factors, candidate axis vmapped locally / shardable over
+    a mesh's `model` axis) regardless of the scorer's own engine setting.
+
+    `repro.core.api.DiscoverySession` routes frontiers here when the
+    options select the sharded engine, so user code never threads a raw
+    ``batch_hook`` callable again; passing the scorer's own
+    hyperparameters explicitly is what pins `ges_batch_hook` to the
+    stacked path instead of delegating back to the local prefetch engine.
+    The scorer's `precision` policy rides along, so
+    ``EngineOptions(engine="sharded", precision="f32_gram")`` accumulates
+    the stacked pipeline's Grams at f32 exactly like the local engine.
+    """
+    cfg = scorer.config
+    return ges_batch_hook(
+        scorer,
+        configs,
+        lmbda=cfg.lmbda,
+        gamma=cfg.gamma,
+        precision=getattr(scorer, "precision", "bitwise"),
+    )

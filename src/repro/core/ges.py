@@ -25,6 +25,13 @@ caching, e.g. CVLRScorer(batched=False) or the exact CVScorer) falls back
 to lazy per-candidate `local_score` — kept as the oracle for tests.
 `batch_hook`, when set, overrides `prefetch`; the distributed runtime uses
 it to evaluate the frontier on a mesh (repro.core.distributed_score).
+User-facing engine selection does not thread hooks any more: a
+`repro.core.api.DiscoverySession` (built from
+`repro.core.spec.EngineOptions`) passes itself as `session=` and owns the
+sweep lifecycle — `begin_sweep` / `score_frontier` / `end_sweep` around
+every frontier evaluation — which is also the seam the planned
+incremental-frontier-delta optimization needs (a session sees consecutive
+frontiers and can diff them).
 """
 
 from __future__ import annotations
@@ -128,9 +135,33 @@ def ges(
     max_subset: int | None = None,
     batch_hook=None,
     verbose: bool = False,
+    session=None,
 ) -> GESResult:
-    """Run GES with the given local scorer (CVScorer / CVLRScorer / ...)."""
-    d = d if d is not None else scorer.view.num_vars
+    """Run GES with the given local scorer (CVScorer / CVLRScorer / ...).
+
+    d: number of variables — inferred from the scorer's view; passing it
+    explicitly is only accepted when it agrees (a mismatch used to be
+    silently hazardous and now raises).  `session`: a
+    `repro.core.api.DiscoverySession` that owns the sweep lifecycle and
+    routes frontier scoring by its `EngineOptions` (mutually exclusive
+    with the low-level `batch_hook`).
+    """
+    num_vars = getattr(getattr(scorer, "view", None), "num_vars", None)
+    if d is None:
+        if num_vars is None:
+            raise ValueError(
+                "ges() needs d= when the scorer has no .view to infer the "
+                "variable count from"
+            )
+        d = num_vars
+    elif num_vars is not None and int(d) != num_vars:
+        raise ValueError(
+            f"ges(d={d}) conflicts with the scorer's view over {num_vars} "
+            "variables — drop the d argument, it is inferred from the scorer"
+        )
+    d = int(d)
+    if session is not None and batch_hook is not None:
+        raise ValueError("pass either session= or batch_hook=, not both")
     a = np.zeros((d, d), dtype=np.int8)
     trace = []
     fwd = bwd = 0
@@ -152,7 +183,10 @@ def ges(
             # and handing it each parent set's children contiguously keeps
             # a sweep's shared-core chunks dense instead of interleaved.
             configs = sorted(configs, key=lambda c: (c[1], c[0]))
-            if batch_hook is not None:
+            if session is not None:
+                session.begin_sweep(phase)
+                session.score_frontier(configs)
+            elif batch_hook is not None:
                 batch_hook(scorer, configs)
             else:
                 prefetch = getattr(scorer, "prefetch", None)
@@ -165,19 +199,24 @@ def ges(
                 )
                 if delta > best_delta + 1e-12:
                     best_delta, best = delta, (op, x, y, sub)
+            step = None
+            if best is not None:
+                op, x, y, sub = best
+                a = (
+                    _apply_insert(a, x, y, sub)
+                    if op == "insert"
+                    else _apply_delete(a, x, y, sub)
+                )
+                steps += 1
+                step = (op, x, y, tuple(sorted(sub)), best_delta)
+                trace.append(step)
+                if verbose:
+                    print(f"[GES/{phase}] {op}({x},{y},{tuple(sorted(sub))}) "
+                          f"delta={best_delta:.4f}")
+            if session is not None:
+                session.end_sweep(step)
             if best is None:
                 break
-            op, x, y, sub = best
-            a = (
-                _apply_insert(a, x, y, sub)
-                if op == "insert"
-                else _apply_delete(a, x, y, sub)
-            )
-            steps += 1
-            trace.append((op, x, y, tuple(sorted(sub)), best_delta))
-            if verbose:
-                print(f"[GES/{phase}] {op}({x},{y},{tuple(sorted(sub))}) "
-                      f"delta={best_delta:.4f}")
         return steps
 
     fwd = sweep("forward")

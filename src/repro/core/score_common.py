@@ -510,21 +510,23 @@ class VariableView:
 
     Supports multi-dimensional variables (paper Sec. 7.4) via `dims`:
     variable i owns columns [offsets[i], offsets[i]+dims[i]).
+
+    Since PR 4 every view is backed by a `repro.core.spec.DataSpec` —
+    pass one as `spec`, or the legacy `dims`/`discrete` lists are
+    absorbed into one (`DataSpec.from_arrays`).  The spec validates the
+    matrix once, up front (column coverage, finiteness), with error
+    messages that name the offending variable.
     """
 
-    def __init__(self, data: np.ndarray, dims=None, discrete=None):
-        data = np.asarray(data, dtype=np.float64)
-        if data.ndim == 1:
-            data = data[:, None]
-        self.data = data
-        if dims is None:
-            dims = [1] * data.shape[1]
-        self.dims = list(dims)
+    def __init__(self, data: np.ndarray, dims=None, discrete=None, spec=None):
+        from repro.core.spec import resolve_spec
+
+        self.spec = resolve_spec(data, spec=spec, dims=dims, discrete=discrete)
+        self.data = self.spec.validate(data)
+        self.dims = self.spec.dims
         self.offsets = np.concatenate([[0], np.cumsum(self.dims)]).astype(int)
-        if self.offsets[-1] != data.shape[1]:
-            raise ValueError("dims do not cover the data columns")
-        self.num_vars = len(self.dims)
-        self.discrete = list(discrete) if discrete is not None else [False] * self.num_vars
+        self.num_vars = self.spec.num_vars
+        self.discrete = self.spec.discrete
 
     def columns(self, vars_idx) -> np.ndarray:
         """Concatenate columns of the given variables (sorted order)."""

@@ -84,11 +84,24 @@ def cv_score_from_kernels(kx, kz, train_idx, n0: int, n1: int, q: int, lmbda, ga
 
 
 class CVScorer(ScorerBase):
-    """Exact CV likelihood local score (the paper's baseline)."""
+    """Exact CV likelihood local score (the paper's baseline).
 
-    def __init__(self, data, dims=None, discrete=None, config: ScoreConfig | None = None):
+    Takes the same `repro.core.spec.DataSpec` frontend as the low-rank
+    scorer (`spec=` supersedes the legacy `dims`/`discrete` lists).  The
+    engine knobs of `repro.core.spec.EngineOptions` do not apply here —
+    this scorer is always lazy/sequential, O(n^3) per local score.
+    """
+
+    def __init__(
+        self,
+        data,
+        dims=None,
+        discrete=None,
+        config: ScoreConfig | None = None,
+        spec=None,
+    ):
         config = config or ScoreConfig()
-        super().__init__(VariableView(data, dims, discrete), config)
+        super().__init__(VariableView(data, dims, discrete, spec=spec), config)
         # Same keyed-cache interface as the low-rank scorer's Gram-block
         # cache: (set_key, set_key)-keyed with hit/miss accounting.  An
         # (n, n) centered kernel is the m -> n degenerate Gram block.

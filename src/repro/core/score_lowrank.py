@@ -65,6 +65,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lowrank import lowrank_features
+from repro.core.spec import (
+    DEFAULT_DEVICE_BANK_MB,
+    DEFAULT_GRAM_CACHE_ENTRIES,
+    EngineOptions,
+)
 from repro.kernels import fold_gram_strip, fold_gram_strip_banked
 from repro.core.score_common import (
     DeviceGramBank,
@@ -318,8 +323,9 @@ _BUCKET_LADDER = (8, 16, 32, 48, 64, 96)
 # Default byte budget (MB) for the Gram-block cache's device tier — sized
 # so a d <= 48 sweep-1 working set (a few hundred blocks, <= ~0.74 MB each
 # at wz = wx = 96 / q = 10 / f64) stays device-resident with headroom;
-# `api.make_scorer(device_bank_mb=...)` overrides, 0 disables.
-_DEFAULT_DEVICE_BANK_MB = 256
+# `EngineOptions(device_bank_mb=...)` overrides, 0 disables.  The number
+# itself lives in repro.core.spec (single source for the API defaults).
+_DEFAULT_DEVICE_BANK_MB = DEFAULT_DEVICE_BANK_MB
 
 
 def _pow2_pad(k: int, hi: int) -> int:
@@ -331,6 +337,8 @@ def _pow2_pad(k: int, hi: int) -> int:
 
 
 _DUMMY_BANKS: dict = {}
+
+_UNSET = object()  # CVLRScorer: distinguishes "kwarg not passed" from a value
 
 
 def _dummy_bank(q: int, wa: int, wb: int, dtype):
@@ -359,6 +367,7 @@ def cvlr_scores_batched(
     pair_chunk: int = 32,
     score_chunk: int = 64,
     timings: dict | None = None,
+    precision: str = "bitwise",
 ) -> np.ndarray:
     """Score a whole GES frontier in a handful of device dispatches.
 
@@ -412,6 +421,12 @@ def cvlr_scores_batched(
     "device"|"host") with device syncs at the stage boundaries — profiling
     support for benchmarks/frontier_scoring.py, off by default because the
     syncs defeat async dispatch.
+
+    precision: the Gram accumulation policy
+    (`repro.core.spec.EngineOptions.precision`) forwarded to the fold-Gram
+    dispatchers — ``"f32_gram"`` relaxes the CPU engine==oracle bitwise
+    guarantee to ~1e-7-relative Gram accuracy in exchange for f32
+    contractions on the gather+einsum backend (the fold algebra stays f64).
     """
     pairs = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
     n_pairs = pairs.shape[0]
@@ -600,6 +615,7 @@ def cvlr_scores_batched(
                         np.asarray(ia, np.int32), np.asarray(ib, np.int32),
                         cache.bank_data(widths),
                         np.asarray(slots, np.int32), q,
+                        precision=precision,
                     ),
                 )
         else:
@@ -608,6 +624,7 @@ def cvlr_scores_batched(
                     fold_gram_strip(
                         aa, bb,
                         np.asarray(ia, np.int32), np.asarray(ib, np.int32), q,
+                        precision=precision,
                     ),
                     chunk,
                 )
@@ -850,7 +867,8 @@ class CVLRScorer(ScorerBase):
     # so 4096 holds every block of a d <= 60 sweep with room for the
     # previous sweep's overlap, while bounding a long search's footprint
     # (blocks are (q, m, m) float64, worst case ~0.7 MB each at m = 96).
-    DEFAULT_GRAM_CACHE_ENTRIES = 4096
+    # The numbers live in repro.core.spec (shared with EngineOptions).
+    DEFAULT_GRAM_CACHE_ENTRIES = DEFAULT_GRAM_CACHE_ENTRIES
 
     # Byte budget (MB) for the cache's device tier — the device-resident
     # fold pipeline.  0 / None disables it (pure host-assembly engine).
@@ -862,15 +880,61 @@ class CVLRScorer(ScorerBase):
         dims=None,
         discrete=None,
         config: ScoreConfig | None = None,
-        batched: bool = True,
-        gram_cache_entries: int | None = DEFAULT_GRAM_CACHE_ENTRIES,
-        device_bank_mb: float | None = DEFAULT_DEVICE_BANK_MB,
+        batched: bool = _UNSET,
+        gram_cache_entries: int | None = _UNSET,
+        device_bank_mb: float | None = _UNSET,
+        spec=None,
+        options: EngineOptions | None = None,
+        precision: str = _UNSET,
     ):
+        """`spec` (a `repro.core.spec.DataSpec`) supersedes the legacy
+        `dims`/`discrete` lists; `options` (a `repro.core.spec.
+        EngineOptions`) supersedes the loose engine kwargs (`batched`,
+        `gram_cache_entries`, `device_bank_mb`, `precision`) — passing
+        both raises, so a loose value can never be silently overridden.
+        Either way the resolved policy is inspectable as `self.options`.
+        Loose-kwarg defaults: batched=True,
+        `DEFAULT_GRAM_CACHE_ENTRIES`, `DEFAULT_DEVICE_BANK_MB`,
+        precision="bitwise"."""
+        loose = {
+            "batched": batched,
+            "gram_cache_entries": gram_cache_entries,
+            "device_bank_mb": device_bank_mb,
+            "precision": precision,
+        }
+        passed = sorted(k for k, v in loose.items() if v is not _UNSET)
+        if options is not None:
+            if passed:
+                raise ValueError(
+                    f"pass either options=EngineOptions(...) or the loose "
+                    f"engine kwargs {passed}, not both"
+                )
+            batched = options.batched
+            gram_cache_entries = options.gram_cache_entries
+            device_bank_mb = options.device_bank_mb
+            precision = options.precision
+        else:
+            batched = True if batched is _UNSET else batched
+            if gram_cache_entries is _UNSET:
+                gram_cache_entries = self.DEFAULT_GRAM_CACHE_ENTRIES
+            if device_bank_mb is _UNSET:
+                device_bank_mb = self.DEFAULT_DEVICE_BANK_MB
+            precision = "bitwise" if precision is _UNSET else precision
+            options = EngineOptions(
+                engine="batched" if batched else "sequential",
+                gram_cache_entries=gram_cache_entries,
+                device_bank_mb=device_bank_mb,
+                precision=precision,
+            )
         config = config or ScoreConfig()
-        super().__init__(VariableView(data, dims, discrete), config)
+        super().__init__(
+            VariableView(data, dims, discrete, spec=spec), config
+        )
         self._feat_cache: dict = {}
         self.m_eff_log: dict = {}  # vars_key -> effective rank (diagnostics)
+        self.options = options
         self.batched = batched  # False => ges() falls back to lazy local_score
+        self.precision = precision
         self.gram_cache = GramBlockCache(
             max_entries=gram_cache_entries, device_bank_mb=device_bank_mb
         )
@@ -952,6 +1016,7 @@ class CVLRScorer(ScorerBase):
             z_keys=z_sets,
             gram_cache=self.gram_cache,
             timings=timings,
+            precision=self.precision,
         )
         for key, s in zip(todo, scores):
             self._score_cache[key] = float(s)

@@ -1,0 +1,345 @@
+"""Declarative discovery API: typed descriptions of *what the data is*
+(`DataSpec` / `VariableSpec`) and *how the engine should run*
+(`EngineOptions`).
+
+Until PR 4 the public surface grew one ad-hoc kwarg per engine change
+(`batched=`, `gram_cache_entries=`, `device_bank_mb=`), the distributed
+path needed a hand-threaded `batch_hook` callable, and per-variable
+structure rode in as two parallel untyped lists (`dims=`, `discrete=`).
+This module replaces all of that with two frozen, inspectable objects:
+
+* `DataSpec` — one `VariableSpec(name, dim, kind)` per variable.  Built
+  explicitly (`DataSpec.from_arrays`, absorbing the old lists) or by
+  dtype/cardinality heuristics (`DataSpec.infer`), it routes the paper's
+  per-data-type sampling (Alg. 1 ICL for continuous sets, Alg. 2 exact
+  factorization for discrete sets) and validates the data matrix once, up
+  front, with real error messages.
+
+* `EngineOptions` — engine selection (`"batched"` | `"sequential"` |
+  `"sharded"`), the Gram-block cache bounds, and the **precision
+  policy**: `"bitwise"` keeps the engine bit-identical to the sequential
+  f64 oracle on CPU; `"f32_gram"` lets the gather+einsum Gram fallback
+  accumulate at float32 (what the TPU MXU kernels already do), attacking
+  the cross-Gram einsum floor at the cost of ~1e-7-relative Gram accuracy.
+  The oracle-comparison tolerance tests and benchmarks should use is keyed
+  off the policy (`EngineOptions.oracle_rtol`).
+
+The module is deliberately dependency-light (numpy only at import time) so
+specs can be constructed, serialized and validated without touching JAX.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+# Single source of truth for the engine-knob defaults (CVLRScorer and the
+# legacy api kwargs alias these).  GRAM_CACHE: sized to a sweep working
+# set — see the CVLRScorer class comment.  DEVICE_BANK: byte budget (MB)
+# for the Gram-block cache's device tier; 0/None disables it.
+DEFAULT_GRAM_CACHE_ENTRIES = 4096
+DEFAULT_DEVICE_BANK_MB = 256
+
+VARIABLE_KINDS = ("continuous", "discrete")
+ENGINES = ("batched", "sequential", "sharded")
+PRECISIONS = ("bitwise", "f32_gram")
+
+
+@dataclasses.dataclass(frozen=True)
+class VariableSpec:
+    """One variable of the data matrix: `dim` contiguous columns, sampled
+    by the paper's Alg. 1 (continuous) or Alg. 2 (discrete) route."""
+
+    name: str
+    dim: int = 1
+    kind: str = "continuous"
+
+    def __post_init__(self):
+        if not isinstance(self.name, str) or not self.name:
+            raise ValueError(
+                f"VariableSpec.name must be a non-empty string, got {self.name!r}"
+            )
+        if int(self.dim) < 1:
+            raise ValueError(
+                f"VariableSpec {self.name!r}: dim must be >= 1, got {self.dim!r}"
+            )
+        object.__setattr__(self, "dim", int(self.dim))
+        if self.kind not in VARIABLE_KINDS:
+            raise ValueError(
+                f"VariableSpec {self.name!r}: kind must be one of "
+                f"{VARIABLE_KINDS}, got {self.kind!r}"
+            )
+
+    @property
+    def discrete(self) -> bool:
+        return self.kind == "discrete"
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    """Typed description of an (n, total_cols) data matrix as variables.
+
+    Construct with `from_arrays` (explicit dims/discreteness — the typed
+    replacement for the old parallel lists) or `infer` (dtype/cardinality
+    heuristics).  `validate(data)` checks the matrix against the spec once,
+    up front, and returns the float64 matrix every scorer consumes.
+    """
+
+    variables: tuple
+
+    def __post_init__(self):
+        variables = tuple(self.variables)
+        if not variables:
+            raise ValueError("DataSpec needs at least one variable")
+        for v in variables:
+            if not isinstance(v, VariableSpec):
+                raise ValueError(
+                    f"DataSpec.variables must be VariableSpec instances, got {v!r}"
+                )
+        names = [v.name for v in variables]
+        dupes = sorted({n for n in names if names.count(n) > 1})
+        if dupes:
+            raise ValueError(f"DataSpec variable names must be unique: {dupes}")
+        object.__setattr__(self, "variables", variables)
+
+    # -- views the scorers consume ---------------------------------------
+    @property
+    def num_vars(self) -> int:
+        return len(self.variables)
+
+    @property
+    def names(self) -> list:
+        return [v.name for v in self.variables]
+
+    @property
+    def dims(self) -> list:
+        return [v.dim for v in self.variables]
+
+    @property
+    def discrete(self) -> list:
+        return [v.discrete for v in self.variables]
+
+    @property
+    def total_cols(self) -> int:
+        return sum(v.dim for v in self.variables)
+
+    # -- constructors ----------------------------------------------------
+    @classmethod
+    def from_arrays(cls, data, dims=None, discrete=None, names=None) -> "DataSpec":
+        """Spec from the legacy per-variable lists (`dims`, `discrete`).
+
+        `data` supplies the column count; omitted lists default the way the
+        old kwargs did (all dims 1, all continuous).  Mismatched list
+        lengths or dims that do not tile the matrix raise immediately with
+        the offending numbers spelled out.
+        """
+        arr = _as_matrix(data)
+        total = arr.shape[1]
+        if dims is None:
+            dims = [1] * total
+        dims = [int(d) for d in dims]
+        if sum(dims) != total:
+            raise ValueError(
+                f"dims {dims} cover {sum(dims)} columns but the data matrix "
+                f"has {total}"
+            )
+        d = len(dims)
+        if discrete is None:
+            discrete = [False] * d
+        if len(discrete) != d:
+            raise ValueError(
+                f"discrete has {len(discrete)} entries for {d} variables "
+                f"(dims={dims})"
+            )
+        if names is None:
+            names = [f"x{i}" for i in range(d)]
+        if len(names) != d:
+            raise ValueError(
+                f"names has {len(names)} entries for {d} variables"
+            )
+        return cls(
+            tuple(
+                VariableSpec(
+                    name=str(nm),
+                    dim=dm,
+                    kind="discrete" if bool(dc) else "continuous",
+                )
+                for nm, dm, dc in zip(names, dims, discrete)
+            )
+        )
+
+    @classmethod
+    def infer(cls, data, dims=None, max_levels: int | None = None) -> "DataSpec":
+        """Infer per-variable kinds by dtype/cardinality heuristics.
+
+        A variable is tagged ``discrete`` — routing the paper's exact
+        Alg.-2 factorization — when every one of its columns is
+        integer-valued (bool/int dtype, or floats that are all whole
+        numbers) AND the variable's rows take at most `max_levels` distinct
+        values (default ``min(20, max(2, n // 10))``: a discrete kernel on
+        near-continuous cardinality would defeat Alg. 2's m_d <= m_max
+        requirement).  Everything else is ``continuous``.
+
+        `dims` groups columns into multi-dimensional variables before
+        inference (cardinality is then counted on the joint rows); by
+        default every column is its own variable.
+        """
+        arr = _as_matrix(data)
+        n, total = arr.shape
+        if dims is None:
+            dims = [1] * total
+        dims = [int(d) for d in dims]
+        if sum(dims) != total:
+            raise ValueError(
+                f"dims {dims} cover {sum(dims)} columns but the data matrix "
+                f"has {total}"
+            )
+        if max_levels is None:
+            max_levels = min(20, max(2, n // 10))
+        from repro.core.lowrank import count_distinct_rows
+
+        variables = []
+        offset = 0
+        for i, dm in enumerate(dims):
+            block = arr[:, offset : offset + dm]
+            offset += dm
+            integral = bool(
+                np.all(np.isfinite(block)) and np.all(block == np.round(block))
+            )
+            kind = "continuous"
+            if integral and count_distinct_rows(block, max_levels) <= max_levels:
+                kind = "discrete"
+            variables.append(VariableSpec(name=f"x{i}", dim=dm, kind=kind))
+        return cls(tuple(variables))
+
+    # -- validation ------------------------------------------------------
+    def validate(self, data) -> np.ndarray:
+        """Check `data` against this spec; returns the (n, total_cols)
+        float64 matrix.  Raises ValueError naming the variable and the
+        offending shape/value — the one up-front shape check every scorer
+        relies on instead of failing deep inside a kernel.
+        """
+        arr = _as_matrix(data)
+        n, total = arr.shape
+        if total != self.total_cols:
+            raise ValueError(
+                f"DataSpec describes {self.num_vars} variables over "
+                f"{self.total_cols} columns (dims={self.dims}) but the data "
+                f"matrix has {total} columns"
+            )
+        if n < 2:
+            raise ValueError(f"need at least 2 samples, got data shape {arr.shape}")
+        if not np.all(np.isfinite(arr)):
+            offsets = np.concatenate([[0], np.cumsum(self.dims)])
+            bad = sorted(
+                self.variables[i].name
+                for i in range(self.num_vars)
+                if not np.all(np.isfinite(arr[:, offsets[i] : offsets[i + 1]]))
+            )
+            raise ValueError(
+                f"data contains non-finite values in variable(s) {bad}; "
+                "clean or impute before scoring"
+            )
+        return arr
+
+
+def _as_matrix(data) -> np.ndarray:
+    """(n,) or (n, cols) array-likes -> float64 (n, cols) matrix."""
+    arr = np.asarray(data, dtype=np.float64)
+    if arr.ndim == 1:
+        arr = arr[:, None]
+    if arr.ndim != 2:
+        raise ValueError(
+            f"data must be a 1-D or 2-D array, got shape {arr.shape}"
+        )
+    return arr
+
+
+def resolve_spec(data, spec=None, dims=None, discrete=None) -> DataSpec:
+    """One resolution rule for every scorer: an explicit `DataSpec` wins
+    (passing the legacy lists alongside it is an error, not a silent
+    override); otherwise the legacy lists build one via `from_arrays`."""
+    if spec is not None:
+        if dims is not None or discrete is not None:
+            raise ValueError(
+                "pass either spec= or the legacy dims=/discrete= lists, not both"
+            )
+        if not isinstance(spec, DataSpec):
+            raise ValueError(f"spec must be a DataSpec, got {type(spec).__name__}")
+        return spec
+    return DataSpec.from_arrays(data, dims=dims, discrete=discrete)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineOptions:
+    """How a discovery run should execute — one frozen, inspectable object
+    consolidating what used to be loose kwargs plus a user-threaded hook.
+
+    engine:
+      * ``"batched"`` (default) — the batched frontier engine
+        (`repro.core.score_lowrank.cvlr_scores_batched`): feature bank,
+        two-tier Gram-block cache, fused fold-Gram kernels.
+      * ``"sequential"`` — the lazy per-candidate oracle path (the old
+        ``batched=False``).
+      * ``"sharded"`` — the GES frontier routes through
+        `repro.core.distributed_score` (stacked fold-blocked factors,
+        the shard_map-able scoring pipeline); no hand-rolled
+        ``batch_hook`` needed.
+
+    gram_cache_entries / device_bank_mb: the Gram-block cache bounds
+    (total LRU entry count across tiers / device-tier byte budget), as
+    before — see `repro.core.score_common.GramBlockCache`.
+
+    precision:
+      * ``"bitwise"`` (default) — f64 Gram accumulation on CPU/GPU; the
+        engine is bit-identical to the sequential oracle on CPU.
+      * ``"f32_gram"`` — the gather+einsum Gram fallback accumulates at
+        float32 and casts back (exactly what the TPU Mosaic kernels
+        already do — there the two policies coincide), relaxing
+        engine==oracle to ~1e-7-relative Gram accuracy in exchange for
+        ~2x cheaper cross-Gram contractions on the CPU/GPU paths.
+        Downstream fold algebra (Cholesky solves, logdets) stays f64.
+        Oracle-comparison tolerances must key off `oracle_rtol`.
+    """
+
+    engine: str = "batched"
+    gram_cache_entries: int | None = DEFAULT_GRAM_CACHE_ENTRIES
+    device_bank_mb: float | None = DEFAULT_DEVICE_BANK_MB
+    precision: str = "bitwise"
+
+    def __post_init__(self):
+        if self.engine not in ENGINES:
+            raise ValueError(
+                f"engine must be one of {ENGINES}, got {self.engine!r}"
+            )
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {PRECISIONS}, got {self.precision!r}"
+            )
+        if self.gram_cache_entries is not None and int(self.gram_cache_entries) < 1:
+            raise ValueError(
+                "gram_cache_entries must be >= 1 or None, got "
+                f"{self.gram_cache_entries!r}"
+            )
+        if self.device_bank_mb is not None:
+            mb = float(self.device_bank_mb)
+            if math.isnan(mb) or mb < 0:
+                raise ValueError(
+                    f"device_bank_mb must be >= 0 or None, got {self.device_bank_mb!r}"
+                )
+
+    @property
+    def batched(self) -> bool:
+        """Whether the scorer's batched prefetch engine should serve GES
+        frontiers (the ``"sharded"`` engine scores frontiers through the
+        distributed pipeline instead, so its scorer stays lazy)."""
+        return self.engine == "batched"
+
+    @property
+    def oracle_rtol(self) -> float:
+        """Relative tolerance vs the sequential f64 oracle that this
+        policy guarantees on CPU — what tests and benchmarks should
+        assert against instead of hard-coding a number."""
+        return 1e-8 if self.precision == "bitwise" else 1e-5

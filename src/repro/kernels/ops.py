@@ -9,6 +9,14 @@ the scoring engines, two backends — the fused Pallas strip kernel on TPU
 (or under interpret=True for tests), a single-jit gather+einsum on other
 backends (interpret-mode Pallas is far slower than XLA:CPU einsums, so it
 is opt-in, never the production CPU path).
+
+Every fold-Gram dispatcher takes a `precision` policy
+(`repro.core.spec.EngineOptions.precision`): ``"bitwise"`` contracts at
+the input dtype (f64 — the engine==oracle guarantee on CPU), while
+``"f32_gram"`` makes the gather+einsum backend accumulate at float32 and
+cast back.  The TPU Pallas kernels already contract at f32 (Mosaic has no
+f64 MXU path), so on TPU the two policies coincide and the flag only
+changes the CPU/GPU fallback.
 """
 
 from __future__ import annotations
@@ -28,6 +36,16 @@ from repro.kernels.rbf_gram import rbf_gram_pallas
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+_PRECISIONS = ("bitwise", "f32_gram")
+
+
+def _check_precision(precision: str) -> None:
+    if precision not in _PRECISIONS:
+        raise ValueError(
+            f"precision must be one of {_PRECISIONS}, got {precision!r}"
+        )
 
 
 def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
@@ -68,16 +86,26 @@ def rbf_gram(
     return out[:n, :m]
 
 
-@functools.partial(jax.jit, static_argnames=("q",))
-def _fold_gram_jnp(bank_a, bank_b, ia, ib, q: int):
+@functools.partial(jax.jit, static_argnames=("q", "precision"))
+def _fold_gram_jnp(bank_a, bank_b, ia, ib, q: int, precision: str = "bitwise"):
     """Gather+fold-Gram in one jit (the non-TPU backend of the dispatcher):
     keeping the gather *inside* the jit keeps the per-chunk host work to a
     single dispatch — per-pair host-side stacking of bank slices was
-    measured at ~0.2 s/chunk of pure overhead, 15x the einsum itself."""
+    measured at ~0.2 s/chunk of pure overhead, 15x the einsum itself.
+    Under ``precision="f32_gram"`` the contraction runs at float32 and the
+    blocks are cast back to the banks' dtype (the f64 fold algebra
+    downstream is unchanged)."""
     n_eff, ma = bank_a.shape[1:]
     n0 = n_eff // q
     fa = bank_a[ia].reshape(ia.shape[0], q, n0, ma)
     fb = bank_b[ib].reshape(ib.shape[0], q, n0, bank_b.shape[-1])
+    if precision == "f32_gram":
+        out_dt = jnp.result_type(bank_a.dtype, bank_b.dtype)
+        return jnp.einsum(
+            "cqni,cqnj->cqij",
+            fa.astype(jnp.float32),
+            fb.astype(jnp.float32),
+        ).astype(out_dt)
     return jnp.einsum("cqni,cqnj->cqij", fa, fb)
 
 
@@ -91,6 +119,7 @@ def fold_gram_strip(
     block_n: int = 512,
     use_pallas: bool | None = None,
     interpret: bool | None = None,
+    precision: str = "bitwise",
 ) -> jnp.ndarray:
     """Per-fold Gram blocks for gathered bank pairs, any (S, n_eff, m).
 
@@ -100,7 +129,10 @@ def fold_gram_strip(
     factor rows stream HBM->VMEM once, no (B, q, n0, m) gathered
     intermediate.  Elsewhere it is a fused single-jit gather+einsum
     unless `use_pallas=True` forces the (interpret-mode) kernel.
+    `precision="f32_gram"` makes the einsum backend accumulate at f32
+    (the Pallas kernel always does — module doc).
     """
+    _check_precision(precision)
     if use_pallas is None:
         use_pallas = _on_tpu()
     if interpret is None:
@@ -117,7 +149,7 @@ def fold_gram_strip(
         dt = jnp.result_type(bank_a.dtype, bank_b.dtype)
         return jnp.zeros((ia.shape[0], q, ma, mb), dt)
     if not use_pallas:
-        return _fold_gram_jnp(bank_a, bank_b, ia, ib, q)
+        return _fold_gram_jnp(bank_a, bank_b, ia, ib, q, precision)
     # Fold-block the banks and zero-pad each fold's rows to a tile
     # multiple (zero rows add nothing to A^T B).
     bn = min(block_n, -(-n0 // 8) * 8)
@@ -133,8 +165,12 @@ def fold_gram_strip(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("q",), donate_argnums=(4,))
-def _fold_gram_banked_jnp(bank_a, bank_b, ia, ib, out_bank, slots, q: int):
+@functools.partial(
+    jax.jit, static_argnames=("q", "precision"), donate_argnums=(4,)
+)
+def _fold_gram_banked_jnp(
+    bank_a, bank_b, ia, ib, out_bank, slots, q: int, precision: str = "bitwise"
+):
     """Non-TPU backend of the banked dispatcher: the same fused
     gather+fold-Gram einsum as `_fold_gram_jnp`, scattered into the bank
     inside the same jit — the chunk's Gram blocks never exist as a host
@@ -146,7 +182,7 @@ def _fold_gram_banked_jnp(bank_a, bank_b, ia, ib, out_bank, slots, q: int):
     must treat the passed-in array as consumed and keep only the result,
     which is how the engine's cache tier manages ``DeviceGramBank.data``.
     """
-    grams = _fold_gram_jnp(bank_a, bank_b, ia, ib, q)
+    grams = _fold_gram_jnp(bank_a, bank_b, ia, ib, q, precision)
     return out_bank.at[slots].set(grams.astype(out_bank.dtype))
 
 
@@ -162,6 +198,7 @@ def fold_gram_strip_banked(
     block_n: int = 512,
     use_pallas: bool | None = None,
     interpret: bool | None = None,
+    precision: str = "bitwise",
 ):
     """Fused per-fold Gram strip scattered into a device block bank.
 
@@ -184,7 +221,10 @@ def fold_gram_strip_banked(
     aliasing on TPU, buffer donation on the jnp path): treat the array you
     pass as consumed and use only the returned bank — exactly how
     `repro.core.score_common.GramBlockCache` swaps ``DeviceGramBank.data``.
+    ``precision="f32_gram"`` makes the jnp backend's einsum accumulate at
+    f32 before the (dtype-preserving) scatter into the bank.
     """
+    _check_precision(precision)
     if use_pallas is None:
         use_pallas = _on_tpu()
     if interpret is None:
@@ -202,7 +242,9 @@ def fold_gram_strip_banked(
     if ma == 0 or mb == 0 or ia.shape[0] == 0:
         return out_bank
     if not use_pallas:
-        return _fold_gram_banked_jnp(bank_a, bank_b, ia, ib, out_bank, slots, q)
+        return _fold_gram_banked_jnp(
+            bank_a, bank_b, ia, ib, out_bank, slots, q, precision
+        )
     bn = min(block_n, -(-n0 // 8) * 8)
     n0p = -(-n0 // bn) * bn
     a4 = bank_a.reshape(-1, q, n0, ma)
@@ -223,6 +265,7 @@ def fold_gram_blocks(
     block_n: int = 512,
     use_pallas: bool | None = None,
     interpret: bool | None = None,
+    precision: str = "bitwise",
 ) -> jnp.ndarray:
     """Per-fold Grams for already fold-blocked factors (identity gather).
 
@@ -230,11 +273,20 @@ def fold_gram_blocks(
     out[..., f] = fa[..., f]^T fb[..., f].  The shard_map distributed
     scorer's Gram stage: on TPU the leading dims collapse into the fused
     strip kernel's candidate axis with ia = ib = arange; elsewhere one
-    einsum.  Composes under jit/shard_map (backend choice is trace-time).
+    einsum (accumulated at f32 under ``precision="f32_gram"``).  Composes
+    under jit/shard_map (backend choice is trace-time).
     """
+    _check_precision(precision)
     if use_pallas is None:
         use_pallas = _on_tpu()
     if not use_pallas:
+        if precision == "f32_gram":
+            out_dt = jnp.result_type(fa.dtype, fb.dtype)
+            return jnp.einsum(
+                "...qni,...qnj->...qij",
+                fa.astype(jnp.float32),
+                fb.astype(jnp.float32),
+            ).astype(out_dt)
         return jnp.einsum("...qni,...qnj->...qij", fa, fb)
     if interpret is None:
         interpret = not _on_tpu()

@@ -177,12 +177,18 @@ def test_budget_too_small_falls_back_to_host_path():
 
 
 def test_device_bank_opt_out_kwarg():
-    """api.make_scorer(device_bank_mb=0) and =None both run the pure host
+    """EngineOptions(device_bank_mb=0) and =None both run the pure host
     engine; the default enables the device tier."""
+    from repro.core.spec import EngineOptions
+
     rng = np.random.default_rng(9)
     data = rng.standard_normal((200, 3))
     for off in (0, None):
-        s = make_scorer(data, config=ScoreConfig(seed=0), device_bank_mb=off)
+        s = make_scorer(
+            data,
+            config=ScoreConfig(seed=0),
+            options=EngineOptions(device_bank_mb=off),
+        )
         assert not s.gram_cache.device_enabled
         s.prefetch(_frontier_configs(3))
         assert s.gram_cache.stats["device_entries"] == 0

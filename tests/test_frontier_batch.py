@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.api import causal_discover, make_scorer
+from repro.core.api import EngineOptions, causal_discover, make_scorer
 from repro.core.ges import ges
 from repro.core.lowrank import lowrank_features
 from repro.core.score_common import GramBlockCache, ScoreConfig, config_key
@@ -188,7 +188,11 @@ def test_gram_cache_bound_is_configurable_and_exact_under_pressure():
     d, n = 4, 200
     data = rng.standard_normal((n, d))
     configs = _frontier_configs(d)
-    tight = make_scorer(data, config=ScoreConfig(seed=0), gram_cache_entries=2)
+    tight = make_scorer(
+        data,
+        config=ScoreConfig(seed=0),
+        options=EngineOptions(gram_cache_entries=2),
+    )
     loose = make_scorer(data, config=ScoreConfig(seed=0))
     assert tight.gram_cache.max_entries == 2
     tight.prefetch(configs)
@@ -218,15 +222,20 @@ def test_ges_batched_default_equals_sequential_search():
     assert _rel_err(r_bat.score, r_seq.score) <= 1e-8
 
 
-def test_causal_discover_batched_kwarg():
-    """Public API: `batched` toggles without changing the result."""
+def test_causal_discover_engine_option():
+    """Public API: `EngineOptions(engine=...)` toggles the batched engine
+    against the sequential oracle without changing the result."""
     rng = np.random.default_rng(2)
     n = 220
     x0 = rng.standard_normal(n)
     x1 = np.tanh(x0) + 0.4 * rng.standard_normal(n)
     data = np.stack([x0, x1], axis=1)
     r1 = causal_discover(data, config=ScoreConfig(seed=8))
-    r2 = causal_discover(data, config=ScoreConfig(seed=8), batched=False)
+    r2 = causal_discover(
+        data,
+        config=ScoreConfig(seed=8),
+        options=EngineOptions(engine="sequential"),
+    )
     np.testing.assert_array_equal(r1.cpdag, r2.cpdag)
 
 

@@ -3,7 +3,7 @@
 import numpy as np
 import pytest
 
-from repro.core.api import causal_discover
+from repro.core.api import DataSpec, causal_discover
 from repro.core.graph import dag_to_cpdag
 from repro.core.metrics import shd_cpdag, skeleton_f1
 from repro.core.score_common import ScoreConfig
@@ -47,8 +47,7 @@ def test_ges_synthetic_scm(kind):
     res = causal_discover(
         ds.data,
         method="cvlr",
-        dims=ds.dims,
-        discrete=ds.discrete,
+        spec=DataSpec.from_arrays(ds.data, dims=ds.dims, discrete=ds.discrete),
         config=ScoreConfig(seed=3),
     )
     f1 = skeleton_f1(res.cpdag, ds.dag)
@@ -62,7 +61,8 @@ def test_ges_sachs_subset():
     sub = data[:, keep]
     sub_adj = adj[np.ix_(keep, keep)]
     res = causal_discover(
-        sub, method="cvlr", discrete=[True] * len(keep),
+        sub, method="cvlr",
+        spec=DataSpec.from_arrays(sub, discrete=[True] * len(keep)),
         config=ScoreConfig(seed=4),
     )
     f1 = skeleton_f1(res.cpdag, sub_adj)

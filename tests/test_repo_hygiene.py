@@ -120,6 +120,84 @@ def test_doc_code_references_resolve(doc):
     assert bad == [], f"{doc} references unresolvable code names: {bad}"
 
 
+# The PR-4 declarative surface: the entry-point docs must present it and
+# every presented name must import.  A plain grep for `repro.*` tokens
+# cannot catch a doc that silently *stops* mentioning the public API, so
+# the required names are pinned here.
+_REQUIRED_API_NAMES = (
+    "repro.core.spec.DataSpec",
+    "repro.core.spec.EngineOptions",
+    "repro.core.api.DiscoverySession",
+)
+
+
+def test_declarative_api_documented_and_importable():
+    text = ""
+    for doc in _DOC_FILES:
+        with open(os.path.join(_ROOT, doc)) as f:
+            text += f.read()
+    for name in _REQUIRED_API_NAMES:
+        short = name.rsplit(".", 1)[1]
+        assert short in text, f"docs never mention {short} ({name})"
+        assert _resolve_dotted(name), f"{name} does not import"
+
+
+def test_repo_code_never_calls_its_own_deprecated_surface():
+    """The deprecation shims exist for *users*; repo-internal code must be
+    on the new surface.  pytest.ini enforces this dynamically (shim
+    DeprecationWarnings attributed to repro modules become errors) —
+    mirror the intent statically over src/examples/benchmarks with an AST
+    scan, so the failure names the offending file:line even for code the
+    suite never executes."""
+    import ast
+
+    deprecated_kwargs = {
+        "dims", "discrete", "batched",
+        "gram_cache_entries", "device_bank_mb", "batch_hook",
+    }
+    shimmed_fns = {"causal_discover", "make_scorer"}
+    offenders = []
+    roots = [
+        os.path.join(_ROOT, "src", "repro"),
+        os.path.join(_ROOT, "examples"),
+        os.path.join(_ROOT, "benchmarks"),
+    ]
+    for root in roots:
+        for dirpath, _, files in os.walk(root):
+            if "__pycache__" in dirpath:
+                continue
+            for fn in files:
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                with open(path) as f:
+                    tree = ast.parse(f.read(), filename=path)
+                for node in ast.walk(tree):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    callee = node.func
+                    name = (
+                        callee.id
+                        if isinstance(callee, ast.Name)
+                        else callee.attr
+                        if isinstance(callee, ast.Attribute)
+                        else None
+                    )
+                    if name not in shimmed_fns:
+                        continue
+                    bad = sorted(
+                        kw.arg
+                        for kw in node.keywords
+                        if kw.arg in deprecated_kwargs
+                    )
+                    if bad:
+                        rel = os.path.relpath(path, _ROOT)
+                        offenders.append(f"{rel}:{node.lineno} {name}({bad})")
+    assert offenders == [], (
+        f"repo code calls the deprecated kwarg surface: {offenders}"
+    )
+
+
 def test_collection_guard_purges_stale_and_orphaned_pyc(tmp_path):
     """The conftest guard must drop (a) orphaned .pyc whose source is gone
     and (b) .pyc not strictly newer than their source, while keeping a

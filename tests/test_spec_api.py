@@ -1,0 +1,374 @@
+"""The declarative API surface (PR 4): DataSpec / EngineOptions /
+DiscoverySession, engine selection, the precision policy, and the
+one-release deprecation shims over the old kwargs.
+
+Covers: `DataSpec.infer` dtype/cardinality heuristics (continuous /
+discrete / multi-dim columns), `DataSpec` and `EngineOptions` validation
+errors, deprecated kwargs emitting `DeprecationWarning` while producing
+identical `GESResult`s, `engine="sharded"`/`"sequential"` matching the
+paths they replace, `precision="f32_gram"` staying within the policy's
+oracle tolerance, the `ges(d=...)` consistency check, and the session
+sweep lifecycle.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.api import (
+    DataSpec,
+    DiscoverySession,
+    EngineOptions,
+    VariableSpec,
+    causal_discover,
+    make_scorer,
+)
+from repro.core.distributed_score import ges_batch_hook
+from repro.core.ges import ges
+from repro.core.score_common import ScoreConfig, config_key
+from repro.core.score_lowrank import CVLRScorer
+from repro.data.synthetic import generate_scm_data
+
+
+def _chain_data(n=250, seed=1):
+    rng = np.random.default_rng(seed)
+    x0 = rng.standard_normal(n)
+    x1 = np.tanh(x0) + 0.3 * rng.standard_normal(n)
+    x2 = np.sin(x1) + 0.3 * rng.standard_normal(n)
+    return np.stack([x0, x1, x2], axis=1)
+
+
+def _frontier_configs(d):
+    configs = [(y, ()) for y in range(d)]
+    configs += [(y, (x,)) for x in range(d) for y in range(d) if x != y]
+    return configs
+
+
+# -- DataSpec ------------------------------------------------------------
+
+
+def test_dataspec_from_arrays_absorbs_legacy_lists():
+    data = np.zeros((10, 5))
+    spec = DataSpec.from_arrays(data, dims=[1, 2, 2], discrete=[True, False, True])
+    assert spec.num_vars == 3
+    assert spec.dims == [1, 2, 2]
+    assert spec.discrete == [True, False, True]
+    assert spec.total_cols == 5
+    assert spec.names == ["x0", "x1", "x2"]
+    # defaults: every column its own continuous variable
+    d2 = DataSpec.from_arrays(data)
+    assert d2.dims == [1] * 5 and d2.discrete == [False] * 5
+
+
+def test_dataspec_validation_errors_are_specific():
+    data = np.zeros((10, 4))
+    with pytest.raises(ValueError, match=r"cover 3 columns .* has 4"):
+        DataSpec.from_arrays(data, dims=[1, 2])
+    with pytest.raises(ValueError, match=r"discrete has 3 entries for 2"):
+        DataSpec.from_arrays(data, dims=[2, 2], discrete=[True, False, True])
+    with pytest.raises(ValueError, match="kind"):
+        VariableSpec("x", kind="categorical")
+    with pytest.raises(ValueError, match="dim"):
+        VariableSpec("x", dim=0)
+    with pytest.raises(ValueError, match="unique"):
+        DataSpec((VariableSpec("a"), VariableSpec("a")))
+    spec = DataSpec.from_arrays(data)
+    with pytest.raises(ValueError, match=r"4 columns .* has 6"):
+        spec.validate(np.zeros((10, 6)))
+    bad = data.copy()
+    bad[3, 2] = np.nan
+    with pytest.raises(ValueError, match=r"non-finite .*'x2'"):
+        spec.validate(bad)
+
+
+def test_dataspec_infer_heuristics():
+    rng = np.random.default_rng(0)
+    n = 300
+    cont = rng.standard_normal(n)  # continuous floats
+    disc = rng.integers(0, 4, n).astype(np.float64)  # small-cardinality ints
+    idlike = np.arange(n, dtype=np.float64)  # integer but high-cardinality
+    spec = DataSpec.infer(np.stack([cont, disc, idlike], axis=1))
+    assert [v.kind for v in spec.variables] == [
+        "continuous",
+        "discrete",
+        "continuous",
+    ]
+    # multi-dim grouping: cardinality is judged on the variable's JOINT
+    # rows — a 2-wide block of 0/1 columns is a discrete 4-level variable
+    two_bits = rng.integers(0, 2, (n, 2)).astype(np.float64)
+    spec2 = DataSpec.infer(
+        np.concatenate([two_bits, rng.standard_normal((n, 2))], axis=1),
+        dims=[2, 2],
+    )
+    assert [v.kind for v in spec2.variables] == ["discrete", "continuous"]
+    assert spec2.dims == [2, 2]
+    # max_levels tightens the discrete cut
+    assert (
+        DataSpec.infer(disc[:, None], max_levels=3).variables[0].kind
+        == "continuous"
+    )
+
+
+def test_dataspec_infer_routes_alg2_like_explicit_spec():
+    """An inferred spec must score identically to the hand-written one on
+    discrete data (the Alg.-2 routing is driven by the spec alone)."""
+    rng = np.random.default_rng(3)
+    data = rng.integers(0, 4, size=(240, 3)).astype(np.float64)
+    inferred = DataSpec.infer(data)
+    assert all(v.discrete for v in inferred.variables)
+    s_inf = make_scorer(data, spec=inferred, config=ScoreConfig(seed=1))
+    s_exp = make_scorer(
+        data,
+        spec=DataSpec.from_arrays(data, discrete=[True] * 3),
+        config=ScoreConfig(seed=1),
+    )
+    for i, ps in [(0, ()), (1, (0,)), (2, (0, 1))]:
+        assert s_inf.local_score(i, ps) == s_exp.local_score(i, ps)
+
+
+# -- EngineOptions -------------------------------------------------------
+
+
+def test_engine_options_validation():
+    with pytest.raises(ValueError, match="engine"):
+        EngineOptions(engine="warp")
+    with pytest.raises(ValueError, match="precision"):
+        EngineOptions(precision="f16")
+    with pytest.raises(ValueError, match="gram_cache_entries"):
+        EngineOptions(gram_cache_entries=0)
+    with pytest.raises(ValueError, match="device_bank_mb"):
+        EngineOptions(device_bank_mb=-1)
+    assert EngineOptions().batched
+    assert not EngineOptions(engine="sequential").batched
+    assert not EngineOptions(engine="sharded").batched
+    # oracle tolerance is keyed off the precision policy
+    assert EngineOptions().oracle_rtol == 1e-8
+    assert EngineOptions(precision="f32_gram").oracle_rtol == 1e-5
+
+
+def test_conflicting_old_and_new_kwargs_raise():
+    data = _chain_data()
+    with pytest.raises(ValueError, match="not both"):
+        make_scorer(data, options=EngineOptions(), batched=False)
+    with pytest.raises(ValueError, match="not both"):
+        make_scorer(data, spec=DataSpec.from_arrays(data), dims=[1, 1, 1])
+    with pytest.raises(ValueError, match='requires method="cvlr"'):
+        make_scorer(data, method="cv", options=EngineOptions(engine="sharded"))
+    # the scorer class holds the same line: loose kwargs cannot be
+    # silently overridden by an options object
+    with pytest.raises(ValueError, match="not both"):
+        CVLRScorer(data, batched=False, options=EngineOptions())
+
+
+# -- deprecation shims ---------------------------------------------------
+
+
+def test_deprecated_engine_kwargs_warn_and_match():
+    data = _chain_data(seed=5)
+    cfg = ScoreConfig(seed=5)
+    new = causal_discover(
+        data, config=cfg, options=EngineOptions(engine="sequential")
+    )
+    with pytest.warns(DeprecationWarning, match="batched="):
+        old = causal_discover(data, config=cfg, batched=False)
+    np.testing.assert_array_equal(old.cpdag, new.cpdag)
+    assert old.score == new.score
+    assert old.trace == new.trace
+
+    with pytest.warns(DeprecationWarning, match="gram_cache_entries"):
+        s = make_scorer(data, config=cfg, gram_cache_entries=7)
+    assert s.gram_cache.max_entries == 7
+    with pytest.warns(DeprecationWarning, match="device_bank_mb"):
+        s = make_scorer(data, config=cfg, device_bank_mb=0)
+    assert not s.gram_cache.device_enabled
+
+
+def test_deprecated_variable_lists_warn_and_match():
+    ds = generate_scm_data(d=4, n=240, density=0.4, kind="mixed", seed=9)
+    cfg = ScoreConfig(seed=2)
+    spec = DataSpec.from_arrays(ds.data, dims=ds.dims, discrete=ds.discrete)
+    new = causal_discover(ds.data, spec=spec, config=cfg)
+    with pytest.warns(DeprecationWarning, match="dims="):
+        old = causal_discover(
+            ds.data, dims=ds.dims, discrete=ds.discrete, config=cfg
+        )
+    np.testing.assert_array_equal(old.cpdag, new.cpdag)
+    assert old.score == new.score
+
+
+def test_deprecated_batch_hook_warns_and_matches_sharded_engine():
+    data = _chain_data(seed=7)
+    cfg = ScoreConfig(seed=6)
+    new = causal_discover(
+        data, config=cfg, options=EngineOptions(engine="sharded")
+    )
+    with pytest.warns(DeprecationWarning, match="batch_hook"):
+        old = causal_discover(data, config=cfg, batch_hook=ges_batch_hook)
+    np.testing.assert_array_equal(old.cpdag, new.cpdag)
+
+
+def test_batch_hook_none_is_not_deprecated():
+    """batch_hook=None was the pre-PR-4 default ('no hook'): it must not
+    warn and must take the normal session path."""
+    data = _chain_data(seed=7)
+    cfg = ScoreConfig(seed=6)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        res = causal_discover(data, config=cfg, batch_hook=None)
+    np.testing.assert_array_equal(
+        res.cpdag, causal_discover(data, config=cfg).cpdag
+    )
+
+
+# -- engine selection ----------------------------------------------------
+
+
+def test_sharded_engine_matches_legacy_hook_and_sequential():
+    """EngineOptions(engine="sharded") == the old hand-threaded
+    ges(scorer, batch_hook=ges_batch_hook) == the sequential path, as
+    equivalence classes."""
+    data = _chain_data(seed=11)
+    cfg = ScoreConfig(seed=4)
+    r_sharded = causal_discover(
+        data, config=cfg, options=EngineOptions(engine="sharded")
+    )
+    legacy_scorer = CVLRScorer(data, config=cfg)
+    r_hook = ges(legacy_scorer, batch_hook=ges_batch_hook)
+    r_seq = causal_discover(
+        data, config=cfg, options=EngineOptions(engine="sequential")
+    )
+    np.testing.assert_array_equal(r_sharded.cpdag, r_hook.cpdag)
+    np.testing.assert_array_equal(r_sharded.cpdag, r_seq.cpdag)
+    assert abs(r_sharded.score - r_seq.score) <= 1e-6 * max(
+        1.0, abs(r_seq.score)
+    )
+
+
+def test_sharded_session_actually_routes_through_stacked_pipeline():
+    """The sharded session's scorer must NOT have run its local batched
+    engine (its Gram-block cache stays empty) — proof the frontier went
+    through the distributed stacked path."""
+    data = _chain_data(seed=13)
+    session = DiscoverySession(
+        data, options=EngineOptions(engine="sharded"), config=ScoreConfig(seed=3)
+    )
+    session.run()
+    assert session.scorer.cache_size > 0  # scores were filled in...
+    assert len(session.scorer.gram_cache) == 0  # ...but not by the engine
+    assert any(rec["n_scored"] > 0 for rec in session.sweep_log)
+
+
+# -- precision policy ----------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["continuous", "mixed"])
+def test_f32_gram_scores_within_policy_tolerance(kind):
+    """precision="f32_gram" frontier scores stay within the policy's
+    oracle_rtol (1e-5) of the sequential f64 oracle on the tier-1
+    fixtures — |Z|=0, multi-parent and discrete variables included."""
+    ds = generate_scm_data(d=5, n=250, density=0.4, kind=kind, seed=9)
+    opts = EngineOptions(precision="f32_gram")
+    spec = DataSpec.from_arrays(ds.data, dims=ds.dims, discrete=ds.discrete)
+    s_f32 = make_scorer(ds.data, spec=spec, options=opts, config=ScoreConfig(seed=2))
+    s_seq = make_scorer(
+        ds.data,
+        spec=spec,
+        options=EngineOptions(engine="sequential"),
+        config=ScoreConfig(seed=2),
+    )
+    configs = _frontier_configs(5) + [(4, (0, 1)), (3, (0, 1, 2))]
+    n_done = s_f32.prefetch(configs)
+    assert n_done == len(configs)
+    for i, ps in configs:
+        got = s_f32._score_cache[config_key(i, ps)]
+        want = s_seq.local_score(i, ps)
+        rel = abs(got - want) / max(1.0, abs(want))
+        assert rel <= opts.oracle_rtol, (i, ps, got, want, rel)
+
+
+def test_f32_gram_reaches_sharded_pipeline():
+    """The precision policy must ride into the sharded engine's stacked
+    Gram stage: f32_gram scores differ from bitwise at the reassociation
+    level (proof the f32 path actually ran) while staying within the
+    policy tolerance of the f64 oracle."""
+    data = _chain_data(seed=31)
+    cfg = ScoreConfig(seed=8)
+    configs = _frontier_configs(3)
+
+    def _sharded_scores(precision):
+        session = DiscoverySession(
+            data,
+            options=EngineOptions(engine="sharded", precision=precision),
+            config=cfg,
+        )
+        session.score_frontier(configs)
+        return {
+            (i, ps): session.scorer._score_cache[config_key(i, ps)]
+            for i, ps in configs
+        }
+
+    s32 = _sharded_scores("f32_gram")
+    s64 = _sharded_scores("bitwise")
+    rtol = EngineOptions(precision="f32_gram").oracle_rtol
+    assert any(s32[k] != s64[k] for k in s64), "f32 path never ran"
+    for k in s64:
+        assert abs(s32[k] - s64[k]) / max(1.0, abs(s64[k])) <= rtol, (
+            k, s32[k], s64[k]
+        )
+
+
+def test_f32_gram_discovery_matches_bitwise_cpdag():
+    data = _chain_data(seed=17)
+    cfg = ScoreConfig(seed=7)
+    r64 = causal_discover(data, config=cfg)
+    r32 = causal_discover(
+        data, config=cfg, options=EngineOptions(precision="f32_gram")
+    )
+    np.testing.assert_array_equal(r64.cpdag, r32.cpdag)
+
+
+# -- ges(d=...) consistency ----------------------------------------------
+
+
+def test_ges_d_param_validated_against_scorer():
+    data = _chain_data(seed=19)
+    scorer = CVLRScorer(data, config=ScoreConfig(seed=1))
+    with pytest.raises(ValueError, match=r"ges\(d=5\) conflicts"):
+        ges(scorer, d=5)
+    # a consistent d is accepted and equals the inferred-run result
+    r1 = ges(scorer, d=3)
+    r2 = ges(CVLRScorer(data, config=ScoreConfig(seed=1)))
+    np.testing.assert_array_equal(r1.cpdag, r2.cpdag)
+
+
+# -- DiscoverySession lifecycle ------------------------------------------
+
+
+def test_session_sweep_log_records_lifecycle():
+    data = _chain_data(seed=23)
+    session = DiscoverySession(data, config=ScoreConfig(seed=9))
+    res = session.run()
+    assert session.result is res
+    assert session.spec.num_vars == 3
+    assert len(session.sweep_log) >= 2  # >=1 forward + >=1 backward sweep
+    phases = {rec["phase"] for rec in session.sweep_log}
+    assert phases <= {"forward", "backward"} and "forward" in phases
+    for rec in session.sweep_log:
+        assert rec["n_configs"] > 0
+        assert rec["n_scored"] >= 0
+        assert set(rec["gram_cache"]) == {
+            "hits", "misses", "evictions",
+            "promotions", "spills", "bank_fallbacks",
+        }
+    # every applied GES step is recorded on exactly one sweep
+    steps = [rec["step"] for rec in session.sweep_log if rec["step"] is not None]
+    assert len(steps) == res.forward_steps + res.backward_steps
+    assert steps == res.trace
+
+
+def test_session_and_batch_hook_are_mutually_exclusive():
+    data = _chain_data(seed=29)
+    session = DiscoverySession(data, config=ScoreConfig(seed=0))
+    with pytest.raises(ValueError, match="not both"):
+        ges(session.scorer, batch_hook=ges_batch_hook, session=session)
