@@ -1,0 +1,202 @@
+"""Feature-backend grid: build time + downstream score fidelity per
+registered factorization backend (PR 5).
+
+For each (backend, n, data-kind) cell the benchmark routes EVERY variable
+set of a small SCM through one backend
+(`repro.features.policy.FeaturePolicy`), then measures:
+
+* **build** — wall time to build the frontier's factors cold (the bank's
+  ``build_s``), plus the live-rank range and the bank's trace-residual
+  telemetry;
+* **score deviation** — max |CV-LR score - exact CV score| over a probe
+  set of local configurations, against the exact-Gram O(n^3) oracle
+  (`repro.core.score_exact.CVScorer`) on the oracle-sized cells (the
+  exact kernel score is the ground truth all low-rank backends
+  approximate; ICL's row is the baseline the new backends are judged
+  against);
+* **bank reuse** — a second scorer sharing the `FeatureBank` must build
+  zero factors (the multi-sweep/multi-session rebuild-avoidance win),
+  timed so the saving is a number, not a claim.
+
+Emits BENCH_features.json at the repo root.
+
+``python -m benchmarks.feature_banks``            — full grid
+``python -m benchmarks.feature_banks --quick``    — CI smoke (small cells)
+Never run concurrently with the test suite (2-vCPU box; see
+EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_features.json")
+
+BACKENDS = (
+    ("icl", {}),
+    ("rff", {}),
+    ("nystrom", {"sampler": "uniform"}),
+    ("nystrom", {"sampler": "leverage"}),
+    ("nystrom", {"sampler": "stratified"}),
+)
+
+
+def _policy(backend: str, params: dict):
+    from repro.features.policy import BackendChoice, FeaturePolicy
+
+    choice = BackendChoice.of(backend, **params)
+    if backend == "icl":
+        # the default policy: ICL + exact-discrete — the baseline row
+        return FeaturePolicy.default()
+    return FeaturePolicy(continuous=choice, discrete=choice, mixed=choice, seed=0)
+
+
+def _probe_configs(d: int):
+    configs = [(y, ()) for y in range(d)]
+    configs += [(y, (x,)) for x in range(d) for y in range(d) if x != y]
+    configs += [(d - 1, (0, 1))]
+    return configs
+
+
+def _oracle_scores(ds, spec, cfg, configs) -> dict:
+    """Exact-Gram CV scores for the probe configs (computed once per
+    dataset; every backend row of that dataset is judged against it)."""
+    from repro.core.api import make_scorer
+
+    oracle = make_scorer(ds.data, method="cv", spec=spec, config=cfg)
+    return {c: oracle.local_score(*c) for c in configs}
+
+
+def _bench_cell(
+    backend: str, params: dict, ds, spec, cfg, d: int,
+    oracle: dict | None = None,
+) -> dict:
+    from repro.core.api import EngineOptions, make_scorer
+    from repro.core.score_common import config_key
+    from repro.features.bank import FeatureBank
+
+    n = ds.data.shape[0]
+    kind = ds.kind
+    opts = EngineOptions(features=_policy(backend, params))
+    configs = _probe_configs(d)
+
+    bank = FeatureBank()
+    scorer = make_scorer(
+        ds.data, spec=spec, config=cfg, options=opts, feature_bank=bank
+    )
+    t0 = time.perf_counter()
+    scorer.prefetch(configs)
+    t_total = time.perf_counter() - t0
+    stats = dict(bank.stats)
+    m_effs = sorted(scorer.m_eff_log.values())
+    resid = [
+        e["gram_resid"] for e in bank.entry_log() if e["gram_resid"] is not None
+    ]
+
+    # -- bank reuse: a second scorer over the same data rebuilds nothing --
+    scorer2 = make_scorer(
+        ds.data, spec=spec, config=cfg, options=opts, feature_bank=bank
+    )
+    t0 = time.perf_counter()
+    scorer2.prefetch(configs)
+    t_reuse = time.perf_counter() - t0
+    rebuilds = bank.stats["builds"] - stats["builds"]
+
+    cell = {
+        "backend": backend,
+        "params": params,
+        "n": n,
+        "d": d,
+        "kind": kind,
+        "n_configs": len(configs),
+        "feature_build_s": round(stats["build_s"], 4),
+        "frontier_total_s": round(t_total, 4),
+        "shared_bank_frontier_s": round(t_reuse, 4),
+        "shared_bank_rebuilds": int(rebuilds),
+        "m_eff_range": [int(m_effs[0]), int(m_effs[-1])],
+        "max_gram_resid": round(float(max(resid)), 6) if resid else None,
+        "bank": stats,
+    }
+
+    # -- downstream fidelity vs the exact-Gram oracle ---------------------
+    if oracle is not None:
+        max_abs = max_rel = 0.0
+        for i, ps in configs:
+            got = scorer._score_cache[config_key(i, ps)]
+            want = oracle[(i, ps)]
+            max_abs = max(max_abs, abs(got - want))
+            max_rel = max(max_rel, abs(got - want) / max(1.0, abs(want)))
+        cell["score_dev_vs_exact_abs"] = max_abs
+        cell["score_dev_vs_exact_rel"] = max_rel
+    return cell
+
+
+def run(quick: bool = False, out_path: str = OUT_PATH) -> dict:
+    from repro.core.api import DataSpec
+    from repro.core.score_common import ScoreConfig
+    from repro.data.synthetic import generate_scm_data
+
+    # oracle rows keep n small (the exact CV score is O(n^3) per config);
+    # the larger n rows measure build scaling only
+    grid = (
+        [(400, "mixed", True)]
+        if quick
+        else [
+            (400, "continuous", True),
+            (400, "mixed", True),
+            (1000, "mixed", True),
+            (4000, "mixed", False),
+        ]
+    )
+    d, seed = 5, 0
+    cells = []
+    print("backend,params,n,kind,build_s,reuse_s,rebuilds,score_dev_rel")
+    for n, kind, with_oracle in grid:
+        ds = generate_scm_data(d=d, n=n, density=0.35, kind=kind, seed=seed)
+        spec = DataSpec.from_arrays(ds.data, dims=ds.dims, discrete=ds.discrete)
+        cfg = ScoreConfig(seed=seed)
+        oracle = (
+            _oracle_scores(ds, spec, cfg, _probe_configs(d))
+            if with_oracle
+            else None
+        )
+        for backend, params in BACKENDS:
+            cell = _bench_cell(backend, params, ds, spec, cfg, d, oracle=oracle)
+            cells.append(cell)
+            dev = cell.get("score_dev_vs_exact_rel")
+            print(
+                f"{backend},{params or '-'},{n},{kind},"
+                f"{cell['feature_build_s']},{cell['shared_bank_frontier_s']},"
+                f"{cell['shared_bank_rebuilds']},"
+                + (f"{dev:.2e}" if dev is not None else "-")
+            )
+            assert cell["shared_bank_rebuilds"] == 0, (
+                "shared FeatureBank must avoid every rebuild"
+            )
+    result = {
+        "benchmark": "feature_banks",
+        "unit": "seconds / max score deviation vs repro.core.score_exact",
+        "engine": "repro.features backend registry + FeaturePolicy routing "
+        "+ session-owned FeatureBank (PR 5)",
+        "quick": quick,
+        "cells": cells,
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    run(quick=args.quick, out_path=args.out)

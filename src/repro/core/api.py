@@ -121,6 +121,7 @@ def make_scorer(
     spec: DataSpec | None = None,
     options: EngineOptions | None = None,
     config: ScoreConfig | None = None,
+    feature_bank=None,
     # -- deprecated (one release): the pre-PR-4 loose kwargs -------------
     dims=_UNSET,
     discrete=_UNSET,
@@ -135,11 +136,15 @@ def make_scorer(
     variables (default: every column a continuous 1-D variable; use
     `DataSpec.infer(data)` for dtype/cardinality heuristics).  options: a
     `repro.core.spec.EngineOptions` — engine selection, Gram-block cache
-    bounds (`gram_cache_entries`, `device_bank_mb`) and the `precision`
-    policy; every field is documented there.  The exact scorer ignores the
-    engine options except that `engine="sharded"` is rejected (the
-    distributed pipeline is CV-LR only).  config: score hyperparameters
-    (`ScoreConfig`; paper defaults).
+    bounds (`gram_cache_entries`, `device_bank_mb`), the `precision`
+    policy, and the `features` factorization policy
+    (`repro.features.policy.FeaturePolicy`); every field is documented
+    there.  feature_bank: a `repro.features.bank.FeatureBank` to reuse
+    built factors across scorers/sessions over the same data (CV-LR
+    only — passing one with method='cv' raises).  The exact scorer
+    ignores the engine options except that `engine="sharded"` is
+    rejected (the distributed pipeline is CV-LR only).  config: score
+    hyperparameters (`ScoreConfig`; paper defaults).
 
     The legacy kwargs (`dims`/`discrete`/`batched`/`gram_cache_entries`/
     `device_bank_mb`) are deprecated shims over the two objects.
@@ -149,12 +154,20 @@ def make_scorer(
         options, batched, gram_cache_entries, device_bank_mb
     )
     if method == "cvlr":
-        return CVLRScorer(data, spec=spec, config=config, options=options)
+        return CVLRScorer(
+            data, spec=spec, config=config, options=options,
+            feature_bank=feature_bank,
+        )
     if method == "cv":
         if options.engine == "sharded":
             raise ValueError(
                 'EngineOptions(engine="sharded") requires method="cvlr" — '
                 "the distributed pipeline scores low-rank factors only"
+            )
+        if feature_bank is not None:
+            raise ValueError(
+                'feature_bank= requires method="cvlr" — the exact scorer '
+                "builds no low-rank factors"
             )
         return CVScorer(data, spec=spec, config=config)
     raise ValueError(f"unknown scoring method {method!r}")
@@ -170,10 +183,17 @@ class DiscoverySession:
     (`"batched"` → the scorer's prefetch engine, `"sharded"` → the
     distributed stacked pipeline, `"sequential"` → lazy per-candidate
     scores) and records one entry per sweep in `sweep_log`:
-    ``{phase, sweep, n_configs, n_scored, step, gram_cache}`` with the
-    Gram-cache counter deltas for that sweep.  This is the seam the
-    planned incremental-frontier-delta optimization plugs into — a
-    session sees consecutive frontiers and can diff them.
+    ``{phase, sweep, n_configs, n_scored, step, gram_cache,
+    feature_bank}`` with the Gram-cache and feature-bank counter deltas
+    for that sweep.  This is the seam the planned
+    incremental-frontier-delta optimization plugs into — a session sees
+    consecutive frontiers and can diff them.
+
+    The session owns a `repro.features.bank.FeatureBank` (exposed as
+    `feature_bank`): built factors persist across the run's sweeps, and
+    passing the same bank to a later session over the same data skips
+    rebuilding entirely — the sweep log's ``feature_bank`` deltas show
+    the hits.
 
     Typical use is through `causal_discover`; instantiate directly when
     you want the scorer, the per-sweep log, or custom search parameters:
@@ -181,6 +201,7 @@ class DiscoverySession:
         session = DiscoverySession(data, options=EngineOptions())
         result = session.run()
         session.sweep_log  # per-sweep engine/cache telemetry
+        session.feature_bank.stats  # factor-build/hit/miss counters
     """
 
     def __init__(
@@ -193,12 +214,15 @@ class DiscoverySession:
         config: ScoreConfig | None = None,
         max_subset: int | None = None,
         verbose: bool = False,
+        feature_bank=None,
     ):
         self.options = options if options is not None else EngineOptions()
         self.scorer = make_scorer(
-            data, method=method, spec=spec, options=self.options, config=config
+            data, method=method, spec=spec, options=self.options,
+            config=config, feature_bank=feature_bank,
         )
         self.spec = self.scorer.view.spec
+        self.feature_bank = getattr(self.scorer, "feature_bank", None)
         self.max_subset = max_subset
         self.verbose = verbose
         self.sweep_log: list = []
@@ -222,6 +246,9 @@ class DiscoverySession:
             "n_scored": 0,
             "step": None,
             "_stats0": dict(stats.stats) if stats is not None else None,
+            "_bank0": dict(self.feature_bank.stats)
+            if self.feature_bank is not None
+            else None,
         }
 
     def score_frontier(self, configs) -> int:
@@ -255,6 +282,12 @@ class DiscoverySession:
             )
             rec["gram_cache"] = {
                 k: cache.stats[k] - stats0[k] for k in counters
+            }
+        bank0 = rec.pop("_bank0")
+        if self.feature_bank is not None and bank0 is not None:
+            rec["feature_bank"] = {
+                k: round(self.feature_bank.stats[k] - bank0[k], 4)
+                for k in ("hits", "misses", "builds", "build_s")
             }
         self.sweep_log.append(rec)
 

@@ -1,214 +1,49 @@
-"""Low-rank kernel factorizations (paper Sec. 4).
+"""Deprecated shim (one release): the low-rank factorization layer moved
+to the pluggable feature-bank subsystem, `repro.features`.
 
-Two samplers:
+Every name this module used to define lives on — implementation
+unchanged — in `repro.features.backends`:
 
-* `incomplete_cholesky` — Alg. 1 (ICL), the adaptive Nystroem variant: greedy
-  pivot selection maximizing the residual-diagonal bound.  Restructured for
-  accelerators as a `lax.fori_loop` whose per-step body is a *vectorized*
-  kernel-strip evaluation + rank-1 residual update (O(n) per step, no Python
-  early-exit: the eta stopping rule is carried as a flag and dead columns are
-  masked to zero — zero-padded columns leave every downstream score identity
-  exact, see score_lowrank.py).
+    incomplete_cholesky   (Alg. 1, the ``icl`` backend)
+    discrete_lowrank      (Alg. 2, the ``discrete_exact`` backend)
+    count_distinct_rows
+    lowrank_features      (the default-policy end-to-end builder)
 
-* `discrete_lowrank` — Alg. 2: for a variable (set) with m_d <= m distinct
-  rows the factorization Lambda = K_{XX'} L^{-T} (K_{X'} = L L^T) is *exact*
-  (Lemma 4.3).  Note the paper prints L^{-1}; the correct right factor is
-  L^{-T} — tested to machine precision in tests/test_lowrank.py.
-
-Both return a fixed-width (n, m_max) factor plus the effective rank, so all
-downstream score computations are fixed-shape and jit-cacheable.
+Importing them from here keeps working for one release and emits a
+`DeprecationWarning` attributed to the *caller*; the tier-1 pytest.ini
+filterwarnings gate escalates that warning to an error when the caller
+is a ``repro.*`` module, so repo code can never quietly stay on the old
+path while user code gets a clean migration window.
 """
 
 from __future__ import annotations
 
-from functools import partial
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.scipy.linalg import solve_triangular
-
-from repro.core.kernel_fns import (
-    KernelSpec,
-    center_features,
-    kernel_rows,
-    median_heuristic_width,
-    standardize,
+_MOVED = (
+    "incomplete_cholesky",
+    "discrete_lowrank",
+    "count_distinct_rows",
+    "lowrank_features",
 )
 
+__all__ = list(_MOVED)
 
-@partial(jax.jit, static_argnames=("m_max", "kind"))
-def _icl_jax(x: jnp.ndarray, width, m_max: int, eta, kind: str):
-    """Jitted ICL. x: (n, d) data; returns (Lambda (n, m_max), m_eff)."""
-    n = x.shape[0]
-    dtype = x.dtype
-    diag0 = jnp.ones((n,), dtype) if kind in ("rbf", "delta") else jnp.sum(
-        x * x, axis=-1
-    )
-    spec_width = width
 
-    def krow(j):
-        # k(X, x_j): vectorized kernel strip — the hot spot (Pallas-served
-        # on TPU via repro.kernels.ops.rbf_gram; jnp here).
-        pivot = jax.lax.dynamic_slice_in_dim(x, j, 1, axis=0)  # (1, d)
-        if kind == "rbf":
-            d2 = jnp.sum((x - pivot) ** 2, axis=-1)
-            return jnp.exp(-d2 / (2.0 * spec_width * spec_width))
-        if kind == "delta":
-            d2 = jnp.sum((x - pivot) ** 2, axis=-1)
-            return (d2 < 1e-18).astype(dtype)
-        return x @ pivot[0]
-
-    def body(i, carry):
-        lam, d_res, unselected, m_eff, active = carry
-        # Stopping rule (Alg. 1 line 6): residual trace below eta.
-        still = jnp.sum(jnp.maximum(d_res, 0.0) * unselected) >= eta
-        active = jnp.logical_and(active, still)
-        j_star = jnp.argmax(jnp.where(unselected > 0, d_res, -jnp.inf))
-        dj = jnp.maximum(d_res[j_star], 1e-30)
-        nu = jnp.sqrt(dj)
-        # Column i (Alg. 1 lines 11-12): columns >= i of lam are zero, so the
-        # full matvec equals the [:, :i] slice without dynamic shapes.
-        col = (krow(j_star) - lam @ lam[j_star]) / nu
-        col = jnp.where(active, col, jnp.zeros_like(col))
-        lam = lam.at[:, i].set(col)
-        d_res = jnp.maximum(d_res - col * col, 0.0)
-        d_res = jnp.where(active, d_res.at[j_star].set(0.0), d_res)
-        unselected = jnp.where(
-            active, unselected.at[j_star].set(0.0), unselected
+def __getattr__(name):
+    if name in _MOVED:
+        warnings.warn(
+            f"repro.core.lowrank.{name} is deprecated; import it from "
+            "repro.features.backends (the old location keeps working for "
+            "one release and re-exports the identical implementation)",
+            DeprecationWarning,
+            stacklevel=2,
         )
-        m_eff = m_eff + jnp.where(active, 1, 0)
-        return lam, d_res, unselected, m_eff, active
+        from repro.features import backends
 
-    lam0 = jnp.zeros((n, m_max), dtype)
-    carry = (
-        lam0,
-        diag0,
-        jnp.ones((n,), dtype),
-        jnp.asarray(0, jnp.int32),
-        jnp.asarray(True),
-    )
-    lam, _, _, m_eff, _ = jax.lax.fori_loop(0, m_max, body, carry)
-    return lam, m_eff
+        return getattr(backends, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-def incomplete_cholesky(
-    x,
-    spec: KernelSpec,
-    m_max: int = 100,
-    eta: float = 1e-6,
-):
-    """Alg. 1.  Returns (Lambda (n, m_max) with ||Lam Lam^T - K|| <= eta
-    when m_eff < m_max, m_eff)."""
-    x = jnp.asarray(x, jnp.float64)
-    if x.ndim == 1:
-        x = x[:, None]
-    return _icl_jax(
-        x, jnp.asarray(spec.width, x.dtype), int(m_max), jnp.asarray(eta, x.dtype), spec.kind
-    )
-
-
-def discrete_lowrank(
-    x,
-    spec: KernelSpec,
-    m_max: int = 100,
-    jitter: float = 1e-10,
-    backend: str = "jnp",
-):
-    """Alg. 2: exact factorization from deduplicated rows.
-
-    Host-side unique (data-dependent shape), jitted algebra.  Returns
-    (Lambda (n, m_max) zero-padded, m_d).  Requires m_d <= m_max.
-
-    backend="pallas" routes the (n x m_d) kernel strip — the hot spot —
-    through the tiled Pallas kernel (repro.kernels.ops.rbf_gram); on this
-    CPU container it runs in interpret mode, on TPU it lowers to Mosaic.
-    """
-    xn = np.asarray(x, dtype=np.float64)
-    if xn.ndim == 1:
-        xn = xn[:, None]
-    uniq = np.unique(xn, axis=0)
-    m_d = uniq.shape[0]
-    if m_d > m_max:
-        raise ValueError(f"m_d={m_d} exceeds m_max={m_max}; use ICL instead")
-    if backend == "pallas" and spec.kind == "rbf":
-        from repro.kernels.ops import rbf_gram
-
-        k_xu = rbf_gram(xn, uniq, spec.width).astype(jnp.float64)
-    else:
-        k_xu = kernel_rows(xn, uniq, spec)  # (n, m_d)
-    k_uu = kernel_rows(uniq, uniq, spec)  # (m_d, m_d)
-    k_uu = k_uu + jitter * jnp.eye(m_d, dtype=k_uu.dtype)
-    chol = jnp.linalg.cholesky(k_uu)
-    # Lambda = K_{XX'} L^{-T}:  solve L Y^T = K_{XX'}^T  =>  Y = K L^{-T}.
-    lam = solve_triangular(chol, k_xu.T, lower=True).T
-    pad = jnp.zeros((lam.shape[0], m_max - m_d), lam.dtype)
-    return jnp.concatenate([lam, pad], axis=1), m_d
-
-
-def count_distinct_rows(x: np.ndarray, cap: int, chunk: int = 16384) -> int:
-    """Number of distinct rows, early-exiting once > cap.
-
-    Vectorized: rows are compared as raw bytes through a contiguous void
-    view (one np.unique per chunk, C speed) instead of a per-row Python
-    tuple()/hash loop.  The chunked scan keeps the early-exit-at-cap
-    semantics: counts <= cap are exact, and any count beyond the cap is
-    reported as cap + 1 (the value the incremental loop stopped at).
-    """
-    xn = np.asarray(x)
-    if xn.ndim == 1:
-        xn = xn[:, None]
-    if xn.shape[0] == 0:
-        return 0
-    if xn.shape[1] == 0:
-        return 1  # every zero-width row is the same (empty) row
-    r = np.round(np.asarray(xn, dtype=np.float64), 12)
-    r += 0.0  # normalize -0.0 -> +0.0 so the byte view matches == semantics
-    r = np.ascontiguousarray(r)
-    void = np.dtype((np.void, r.dtype.itemsize * r.shape[1]))
-    rows = r.view(void).ravel()
-    uniq = None
-    for lo in range(0, rows.shape[0], chunk):
-        block = np.unique(rows[lo : lo + chunk])
-        uniq = block if uniq is None else np.unique(
-            np.concatenate([uniq, block])
-        )
-        if uniq.size > cap:
-            return int(cap) + 1
-    return int(uniq.size)
-
-
-def lowrank_features(
-    x,
-    *,
-    discrete: bool = False,
-    m_max: int = 100,
-    eta: float = 1e-6,
-    width_factor: float = 2.0,
-    spec: KernelSpec | None = None,
-    standardize_data: bool = True,
-):
-    """End-to-end feature builder used by the CV-LR scorer (paper Sec. 7.1):
-
-    - z-score the columns,
-    - pick the RBF width by the 2x-median heuristic (unless `spec` given),
-    - route: Alg. 2 when the variable is discrete with m_d <= m_max,
-      else Alg. 1 (ICL),
-    - center the factor (Lambda~ = H Lambda).
-
-    Returns (Lambda~ (n, m_max) float64, m_eff, spec).
-    """
-    xn = np.asarray(x, dtype=np.float64)
-    if xn.ndim == 1:
-        xn = xn[:, None]
-    if standardize_data:
-        xn = standardize(xn)
-    if spec is None:
-        spec = KernelSpec("rbf", median_heuristic_width(xn, factor=width_factor))
-    if discrete:
-        m_d = count_distinct_rows(xn, m_max)
-        if m_d <= m_max:
-            lam, m_eff = discrete_lowrank(xn, spec, m_max=m_max)
-            return center_features(lam), int(m_eff), spec
-    lam, m_eff = incomplete_cholesky(xn, spec, m_max=m_max, eta=eta)
-    return center_features(lam), int(m_eff), spec
+def __dir__():
+    return sorted(set(globals()) | set(_MOVED))

@@ -64,12 +64,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.lowrank import lowrank_features
 from repro.core.spec import (
     DEFAULT_DEVICE_BANK_MB,
     DEFAULT_GRAM_CACHE_ENTRIES,
     EngineOptions,
 )
+from repro.features.bank import FeatureBank
+from repro.features.policy import FeaturePolicy
 from repro.kernels import fold_gram_strip, fold_gram_strip_banked
 from repro.core.score_common import (
     DeviceGramBank,
@@ -886,6 +887,7 @@ class CVLRScorer(ScorerBase):
         spec=None,
         options: EngineOptions | None = None,
         precision: str = _UNSET,
+        feature_bank: FeatureBank | None = None,
     ):
         """`spec` (a `repro.core.spec.DataSpec`) supersedes the legacy
         `dims`/`discrete` lists; `options` (a `repro.core.spec.
@@ -895,7 +897,15 @@ class CVLRScorer(ScorerBase):
         Either way the resolved policy is inspectable as `self.options`.
         Loose-kwarg defaults: batched=True,
         `DEFAULT_GRAM_CACHE_ENTRIES`, `DEFAULT_DEVICE_BANK_MB`,
-        precision="bitwise"."""
+        precision="bitwise".
+
+        `options.features` (a `repro.features.policy.FeaturePolicy`)
+        routes each variable set to a factorization backend; the default
+        reproduces the pre-PR-5 ICL / exact-discrete routing bitwise.
+        `feature_bank` (a `repro.features.bank.FeatureBank`) holds built
+        factors — pass the same bank to several scorers over the same
+        data (and fold layout) to skip rebuilding across sessions; by
+        default every scorer owns a fresh one."""
         loose = {
             "batched": batched,
             "gram_cache_entries": gram_cache_entries,
@@ -930,33 +940,95 @@ class CVLRScorer(ScorerBase):
         super().__init__(
             VariableView(data, dims, discrete, spec=spec), config
         )
-        self._feat_cache: dict = {}
         self.m_eff_log: dict = {}  # vars_key -> effective rank (diagnostics)
         self.options = options
         self.batched = batched  # False => ges() falls back to lazy local_score
         self.precision = precision
+        self.policy = (
+            options.features
+            if options.features is not None
+            else FeaturePolicy.default()
+        )
+        self.feature_bank = (
+            feature_bank if feature_bank is not None else FeatureBank()
+        )
         self.gram_cache = GramBlockCache(
             max_entries=gram_cache_entries, device_bank_mb=device_bank_mb
         )
 
+    def _feature_fingerprint(self, vars_key: tuple, choice) -> tuple:
+        """Bank-cache identity of a factor built for THIS scorer: the
+        resolved backend choice plus everything else that shapes the
+        factor — the whole routing policy (`FeaturePolicy.fingerprint`,
+        seed included), the spec-derived build inputs (known levels and
+        the per-column discreteness the stratified sampler keys on), the
+        build knobs, and the fold layout (q_folds + seed pick the row
+        permutation/truncation the factor is built on) — so sessions
+        sharing a bank over the same data can never collide across
+        configs or specs."""
+        known, mask = self._spec_build_inputs(vars_key)
+        return (
+            choice.backend,
+            choice.params,
+            self.policy.fingerprint(),
+            known,
+            mask,
+            self.config.m_max,
+            self.config.eta,
+            self.config.width_factor,
+            self.config.q_folds,
+            self.config.seed,
+        )
+
+    def _spec_build_inputs(self, vars_key: tuple):
+        """(known_levels, per-column discrete mask) for a variable set —
+        the DataSpec-derived inputs a backend build consumes."""
+        known = None
+        if len(vars_key) == 1:
+            # DataSpec.infer records the distinct-row count per variable;
+            # threading it through means the column is scanned once, ever
+            known = self.view.spec.variables[vars_key[0]].levels
+        mask = []
+        for v in vars_key:
+            mask.extend([bool(self.view.discrete[v])] * self.view.dims[v])
+        return known, tuple(mask)
+
+    def _build_features(self, vars_key: tuple, choice):
+        # Lazy import: repro.features.backends imports repro.core.kernel_fns,
+        # and this module is imported by repro.core's package __init__ — a
+        # module-level import here would make `import repro.features` cycle.
+        from repro.features.backends import BuildContext, build_features
+
+        cols = self.view.columns(vars_key)[self.perm]
+        known, mask = self._spec_build_inputs(vars_key)
+        ctx = BuildContext(
+            m_max=self.config.m_max,
+            eta=self.config.eta,
+            width_factor=self.config.width_factor,
+            known_levels=known,
+            discrete_mask=mask,
+            seed=self.policy.seed,
+            salt=tuple(vars_key),
+        )
+        return build_features(cols, choice, ctx)
+
     def features(self, vars_key: tuple) -> jnp.ndarray:
-        """Centered (n_eff, m_max) factor for a variable set (cached).
+        """Centered (n_eff, m_max) factor for a variable set, built by the
+        backend `self.policy` routes the set to and cached in
+        `self.feature_bank` (shared across sweeps, and across sessions
+        when a bank is passed in).
 
         The per-set factors double as the device-resident feature bank of
         the batched frontier engine (`prefetch`)."""
         vars_key = set_key(vars_key)
-        if vars_key not in self._feat_cache:
-            cols = self.view.columns(vars_key)[self.perm]
-            lam, m_eff, _ = lowrank_features(
-                cols,
-                discrete=self.view.is_discrete(vars_key),
-                m_max=self.config.m_max,
-                eta=self.config.eta,
-                width_factor=self.config.width_factor,
-            )
-            self._feat_cache[vars_key] = lam
-            self.m_eff_log[vars_key] = m_eff
-        return self._feat_cache[vars_key]
+        choice = self.policy.resolve(vars_key, self.view.spec)
+        res = self.feature_bank.get_or_build(
+            vars_key,
+            self._feature_fingerprint(vars_key, choice),
+            lambda: self._build_features(vars_key, choice),
+        )
+        self.m_eff_log[vars_key] = res.m_eff
+        return res.factor
 
     def _compute(self, i: int, parents: tuple) -> float:
         """Sequential single-config score — the oracle the batched engine is

@@ -49,12 +49,29 @@ PRECISIONS = ("bitwise", "f32_gram")
 
 @dataclasses.dataclass(frozen=True)
 class VariableSpec:
-    """One variable of the data matrix: `dim` contiguous columns, sampled
-    by the paper's Alg. 1 (continuous) or Alg. 2 (discrete) route."""
+    """One variable of the data matrix: `dim` contiguous columns, routed
+    to a factorization backend by its `kind` (Alg. 1 for continuous,
+    Alg. 2 for discrete under the default `repro.features.policy.
+    FeaturePolicy`).
+
+    levels: the variable's known distinct-row count, recorded by
+    `DataSpec.infer` so the discrete feature backend never re-scans the
+    column (None = unknown; `DataSpec.from_arrays` leaves it unknown and
+    the backend counts once at build time).
+
+    backend / backend_params: an optional per-variable feature-backend
+    override riding on the spec — e.g. ``backend="nystrom",
+    backend_params={"sampler": "stratified"}`` — consulted by
+    `FeaturePolicy.resolve` ahead of the kind routing (a set uses an
+    override when every member names the same one).
+    """
 
     name: str
     dim: int = 1
     kind: str = "continuous"
+    levels: int | None = None
+    backend: str | None = None
+    backend_params: tuple = ()
 
     def __post_init__(self):
         if not isinstance(self.name, str) or not self.name:
@@ -71,6 +88,30 @@ class VariableSpec:
                 f"VariableSpec {self.name!r}: kind must be one of "
                 f"{VARIABLE_KINDS}, got {self.kind!r}"
             )
+        if self.levels is not None:
+            if int(self.levels) < 1:
+                raise ValueError(
+                    f"VariableSpec {self.name!r}: levels must be >= 1 or "
+                    f"None, got {self.levels!r}"
+                )
+            object.__setattr__(self, "levels", int(self.levels))
+        if self.backend is not None and (
+            not isinstance(self.backend, str) or not self.backend
+        ):
+            raise ValueError(
+                f"VariableSpec {self.name!r}: backend must be a non-empty "
+                f"string or None, got {self.backend!r}"
+            )
+        params = self.backend_params
+        if isinstance(params, dict):
+            params = tuple(sorted(params.items()))
+        params = tuple((str(k), v) for k, v in params)
+        if params and self.backend is None:
+            raise ValueError(
+                f"VariableSpec {self.name!r}: backend_params given without "
+                "a backend override"
+            )
+        object.__setattr__(self, "backend_params", params)
 
     @property
     def discrete(self) -> bool:
@@ -198,7 +239,8 @@ class DataSpec:
             )
         if max_levels is None:
             max_levels = min(20, max(2, n // 10))
-        from repro.core.lowrank import count_distinct_rows
+        # lazy: repro.features imports back into the scorer stack
+        from repro.features.backends import count_distinct_rows
 
         variables = []
         offset = 0
@@ -208,10 +250,17 @@ class DataSpec:
             integral = bool(
                 np.all(np.isfinite(block)) and np.all(block == np.round(block))
             )
-            kind = "continuous"
-            if integral and count_distinct_rows(block, max_levels) <= max_levels:
-                kind = "discrete"
-            variables.append(VariableSpec(name=f"x{i}", dim=dm, kind=kind))
+            kind, levels = "continuous", None
+            if integral:
+                count = count_distinct_rows(block, max_levels)
+                if count <= max_levels:
+                    # exact count (the scan early-exits only past the cap):
+                    # recorded on the spec so the discrete feature backend
+                    # routes without scanning this column a second time
+                    kind, levels = "discrete", count
+            variables.append(
+                VariableSpec(name=f"x{i}", dim=dm, kind=kind, levels=levels)
+            )
         return cls(tuple(variables))
 
     # -- validation ------------------------------------------------------
@@ -302,12 +351,21 @@ class EngineOptions:
         ~2x cheaper cross-Gram contractions on the CPU/GPU paths.
         Downstream fold algebra (Cholesky solves, logdets) stays f64.
         Oracle-comparison tolerances must key off `oracle_rtol`.
+
+    features: a `repro.features.policy.FeaturePolicy` selecting the
+      factorization backend per variable kind (``icl`` /
+      ``discrete_exact`` / ``rff`` / ``nystrom`` — see
+      `repro.features.backends`), with per-variable overrides riding on
+      the `DataSpec`.  None (the default) means
+      `FeaturePolicy.default()`, which reproduces the pre-PR-5 ICL /
+      exact-discrete routing bitwise.
     """
 
     engine: str = "batched"
     gram_cache_entries: int | None = DEFAULT_GRAM_CACHE_ENTRIES
     device_bank_mb: float | None = DEFAULT_DEVICE_BANK_MB
     precision: str = "bitwise"
+    features: object | None = None
 
     def __post_init__(self):
         if self.engine not in ENGINES:
@@ -328,6 +386,16 @@ class EngineOptions:
             if math.isnan(mb) or mb < 0:
                 raise ValueError(
                     f"device_bank_mb must be >= 0 or None, got {self.device_bank_mb!r}"
+                )
+        if self.features is not None:
+            # lazy: policy objects are stdlib-only, but keep spec.py free
+            # of the repro.features import unless a policy is actually set
+            from repro.features.policy import FeaturePolicy
+
+            if not isinstance(self.features, FeaturePolicy):
+                raise ValueError(
+                    "features must be a repro.features.policy.FeaturePolicy "
+                    f"or None, got {type(self.features).__name__}"
                 )
 
     @property

@@ -1,0 +1,54 @@
+"""Pluggable feature-bank subsystem (PR 5): everything between raw data
+columns and the centered ``(n, m_max)`` low-rank factors the CV-LR
+scorer consumes.
+
+Three layers, consumed in order by `repro.core.score_lowrank.CVLRScorer`:
+
+* `repro.features.backends` — the factorization backend registry
+  (``icl`` / ``discrete_exact`` migrated from the old
+  ``repro.core.lowrank``, plus ``rff`` random Fourier features and
+  ``nystrom`` landmark sampling with uniform / leverage / stratified
+  samplers).  One contract: a centered, zero-padded fixed-width factor
+  (`FeatureResult`).
+* `repro.features.policy` — `FeaturePolicy`: variable-kind -> backend
+  routing with per-variable overrides riding on the `DataSpec`;
+  `FeaturePolicy.default()` reproduces the pre-PR-5 routing bitwise.
+* `repro.features.bank` — `FeatureBank`: the session-owned keyed cache
+  of built factors with rank / residual / hit-miss / build-time
+  telemetry, shared across sweeps and sessions.
+
+Select a policy through `repro.core.spec.EngineOptions(features=...)`.
+"""
+
+from repro.features.backends import (
+    BuildContext,
+    FeatureBackend,
+    FeatureResult,
+    available_backends,
+    build_features,
+    count_distinct_rows,
+    discrete_lowrank,
+    get_backend,
+    incomplete_cholesky,
+    lowrank_features,
+    register_backend,
+)
+from repro.features.bank import FeatureBank
+from repro.features.policy import BackendChoice, FeaturePolicy
+
+__all__ = [
+    "BackendChoice",
+    "BuildContext",
+    "FeatureBackend",
+    "FeatureBank",
+    "FeaturePolicy",
+    "FeatureResult",
+    "available_backends",
+    "build_features",
+    "count_distinct_rows",
+    "discrete_lowrank",
+    "get_backend",
+    "incomplete_cholesky",
+    "lowrank_features",
+    "register_backend",
+]

@@ -1,0 +1,698 @@
+"""Low-rank factorization backends — the paper's "sampling algorithms for
+different data types" made first-class.
+
+Everything between a variable set's raw columns and the centered
+``(n, m_max)`` factor the CV-LR scorer consumes lives here, behind one
+contract (:class:`FeatureBackend`) and a registry:
+
+* ``icl`` — Alg. 1 (incomplete Cholesky), the adaptive Nystroem variant:
+  greedy pivot selection maximizing the residual-diagonal bound,
+  restructured for accelerators as a `lax.fori_loop` whose per-step body
+  is a vectorized kernel-strip evaluation + rank-1 residual update
+  (O(n) per step; the eta stopping rule is carried as a flag and dead
+  columns are masked to zero — zero-padded columns leave every
+  downstream score identity exact, see score_lowrank.py).
+* ``discrete_exact`` — Alg. 2: for a variable (set) with m_d <= m_max
+  distinct rows the factorization Lambda = K_{XX'} L^{-T}
+  (K_{X'} = L L^T) is *exact* (Lemma 4.3; the paper prints L^{-1}, the
+  correct right factor is L^{-T} — tested to machine precision in
+  tests/test_lowrank.py).  Falls back to ``icl`` past the cap, exactly
+  like the pre-PR-5 hardwired router.
+* ``rff`` — random Fourier features (Rahimi-Recht) for the RBF kernel:
+  an O(n m) *sequential-free* factorization (no greedy pivot loop —
+  embarrassingly parallel, one matmul + trig away), width from the same
+  median heuristic, seeded through an explicit PRNG key (no wall-clock
+  nondeterminism).  Approximation is statistical, not eta-driven; the
+  documented tolerance is :meth:`RandomFourierBackend.gram_error_bound`.
+* ``nystrom`` — landmark Nystroem with pluggable landmark samplers:
+  ``uniform``, ``leverage`` (approximate ridge leverage scores) and
+  ``stratified`` (strata from the set's discrete columns — the
+  mixed-data composite sampler).  Same exact-on-the-landmarks algebra as
+  Alg. 2 with sampled landmarks instead of deduplicated rows.
+
+All backends return a :class:`FeatureResult` whose ``factor`` is a
+centered, zero-padded fixed-width ``(n, m_max)`` float64 array with live
+rank ``m_eff`` — the invariants every downstream engine stage relies on
+(fixed shapes keep the fold pipeline jit-cacheable; padding is provably
+score-neutral).  The (n, m) kernel-strip hot spot of the pivot/landmark
+backends dispatches through `repro.kernels.ops.feature_strip` (Pallas on
+TPU, single-jit strip elsewhere).
+
+Routing — which backend serves which variable set — is the job of
+`repro.features.policy.FeaturePolicy`; caching built factors across
+sweeps and sessions is `repro.features.bank.FeatureBank`.  The old
+`repro.core.lowrank` module is a one-release deprecation shim over the
+implementations here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.scipy.linalg import solve_triangular
+
+from repro.core.kernel_fns import (
+    KernelSpec,
+    center_features,
+    kernel_rows,
+    median_heuristic_width,
+    standardize,
+)
+from repro.kernels.ops import feature_strip
+
+
+# -- shared result / context types ----------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureResult:
+    """One built factor: the contract every backend returns.
+
+    factor: centered ``(n, m_max)`` float64 jnp array, exactly zero
+    beyond column ``m_eff`` (fixed width keeps downstream jits
+    shape-stable; the padding is score-neutral).
+    m_eff: live rank.  spec: the `repro.core.kernel_fns.KernelSpec` the
+    factor approximates.  backend: registry name that built it.  info:
+    telemetry (``gram_resid`` = trace residual tr(K) - ||factor||_F^2
+    where cheaply available, sampler/seed details, documented tolerance
+    for statistical backends) — surfaced by `repro.features.bank.
+    FeatureBank` and the `DiscoverySession` sweep log.
+    """
+
+    factor: jnp.ndarray
+    m_eff: int
+    spec: KernelSpec
+    backend: str
+    info: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildContext:
+    """Per-build parameters threaded from the scorer (ScoreConfig +
+    FeaturePolicy + DataSpec), identical across backends so a policy can
+    swap backends without renegotiating the call.
+
+    known_levels: the variable set's distinct-row count when the
+    `DataSpec` already established it (`DataSpec.infer` counts once; the
+    discrete backend must not scan the column again).  None = unknown.
+    discrete_mask: per-*column* discreteness of the concatenated set —
+    what the stratified landmark sampler stratifies on.
+    seed / salt: the explicit PRNG inputs of the randomized backends —
+    ``key = fold_in(PRNGKey(seed), *salt)`` with salt the variable-set
+    ids, so every set draws distinct, reproducible randomness.
+    """
+
+    m_max: int = 100
+    eta: float = 1e-6
+    width_factor: float = 2.0
+    spec: KernelSpec | None = None
+    standardize: bool = True
+    known_levels: int | None = None
+    discrete_mask: tuple = ()
+    seed: int = 0
+    salt: tuple = ()
+
+    def key(self) -> jax.Array:
+        """Deterministic PRNG key: seed folded with the salt ints."""
+        key = jax.random.PRNGKey(int(self.seed))
+        key = jax.random.fold_in(key, len(self.salt))
+        for s in self.salt:
+            key = jax.random.fold_in(key, int(s))
+        return key
+
+
+class FeatureBackend:
+    """Protocol of a registered factorization backend.
+
+    Subclasses set ``name`` and implement ``build(x, ctx, **params) ->
+    FeatureResult`` honoring the FeatureResult contract (centered,
+    zero-padded fixed-width factor).  ``params`` are the policy-supplied
+    knobs of a `repro.features.policy.BackendChoice` (e.g. the nystrom
+    ``sampler``); unknown params must raise, not pass silently.
+    """
+
+    name: str = ""
+
+    def build(self, x, ctx: BuildContext, **params) -> FeatureResult:
+        raise NotImplementedError
+
+
+_REGISTRY: dict = {}
+
+
+def register_backend(backend_cls):
+    """Class decorator: instantiate and register under ``cls.name``."""
+    inst = backend_cls()
+    if not inst.name:
+        raise ValueError(f"{backend_cls.__name__} must set a backend name")
+    _REGISTRY[inst.name] = inst
+    return backend_cls
+
+
+def get_backend(name: str) -> FeatureBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown feature backend {name!r}; registered backends: "
+            f"{available_backends()}"
+        ) from None
+
+
+def available_backends() -> list:
+    return sorted(_REGISTRY)
+
+
+def build_features(x, choice, ctx: BuildContext) -> FeatureResult:
+    """Build one variable set's factor through a policy's `BackendChoice`
+    (the single entry the scorer calls)."""
+    backend = get_backend(choice.backend)
+    try:
+        return backend.build(x, ctx, **choice.kwargs)
+    except TypeError as e:
+        raise ValueError(
+            f"feature backend {choice.backend!r} rejected params "
+            f"{dict(choice.params)!r}: {e}"
+        ) from e
+
+
+# -- shared helpers --------------------------------------------------------
+
+
+def _as_cols(x) -> np.ndarray:
+    xn = np.asarray(x, dtype=np.float64)
+    if xn.ndim == 1:
+        xn = xn[:, None]
+    return xn
+
+
+def _prepare(x, ctx: BuildContext):
+    """The shared front half of every backend: z-score the columns and
+    pick the RBF width by the median heuristic (unless an explicit
+    KernelSpec overrides) — identical op order to the pre-PR-5 router so
+    the default policy stays bitwise-compatible."""
+    xn = _as_cols(x)
+    if ctx.standardize:
+        xn = standardize(xn)
+    spec = ctx.spec
+    if spec is None:
+        spec = KernelSpec(
+            "rbf", median_heuristic_width(xn, factor=ctx.width_factor)
+        )
+    return xn, spec
+
+
+def _kernel_trace(xn: np.ndarray, spec: KernelSpec) -> float:
+    """tr(K) for the residual telemetry (k(x,x) = 1 for rbf/delta)."""
+    if spec.kind in ("rbf", "delta"):
+        return float(xn.shape[0])
+    return float(np.sum(xn * xn))
+
+
+def _finish(lam, m_eff, xn, spec, backend: str, info: dict) -> FeatureResult:
+    """Center, and attach the cheap trace-residual telemetry
+    tr(K) - ||Lambda||_F^2 (exact residual trace for the psd-dominated
+    pivot/landmark factorizations; a signed indicator for RFF)."""
+    resid = _kernel_trace(xn, spec) - float(jnp.sum(lam * lam))
+    info = dict(info)
+    info.setdefault("gram_resid", resid)
+    info.setdefault("m_eff", int(m_eff))
+    return FeatureResult(
+        factor=center_features(lam),
+        m_eff=int(m_eff),
+        spec=spec,
+        backend=backend,
+        info=info,
+    )
+
+
+# -- Alg. 1: incomplete Cholesky (migrated from repro.core.lowrank) --------
+
+
+@partial(jax.jit, static_argnames=("m_max", "kind"))
+def _icl_jax(x: jnp.ndarray, width, m_max: int, eta, kind: str):
+    """Jitted ICL. x: (n, d) data; returns (Lambda (n, m_max), m_eff)."""
+    n = x.shape[0]
+    dtype = x.dtype
+    diag0 = jnp.ones((n,), dtype) if kind in ("rbf", "delta") else jnp.sum(
+        x * x, axis=-1
+    )
+    spec_width = width
+
+    def krow(j):
+        # k(X, x_j): vectorized kernel strip — the hot spot (Pallas-served
+        # on TPU via repro.kernels.ops; jnp here).
+        pivot = jax.lax.dynamic_slice_in_dim(x, j, 1, axis=0)  # (1, d)
+        if kind == "rbf":
+            d2 = jnp.sum((x - pivot) ** 2, axis=-1)
+            return jnp.exp(-d2 / (2.0 * spec_width * spec_width))
+        if kind == "delta":
+            d2 = jnp.sum((x - pivot) ** 2, axis=-1)
+            return (d2 < 1e-18).astype(dtype)
+        return x @ pivot[0]
+
+    def body(i, carry):
+        lam, d_res, unselected, m_eff, active = carry
+        # Stopping rule (Alg. 1 line 6): residual trace below eta.
+        still = jnp.sum(jnp.maximum(d_res, 0.0) * unselected) >= eta
+        active = jnp.logical_and(active, still)
+        j_star = jnp.argmax(jnp.where(unselected > 0, d_res, -jnp.inf))
+        dj = jnp.maximum(d_res[j_star], 1e-30)
+        nu = jnp.sqrt(dj)
+        # Column i (Alg. 1 lines 11-12): columns >= i of lam are zero, so the
+        # full matvec equals the [:, :i] slice without dynamic shapes.
+        col = (krow(j_star) - lam @ lam[j_star]) / nu
+        col = jnp.where(active, col, jnp.zeros_like(col))
+        lam = lam.at[:, i].set(col)
+        d_res = jnp.maximum(d_res - col * col, 0.0)
+        d_res = jnp.where(active, d_res.at[j_star].set(0.0), d_res)
+        unselected = jnp.where(
+            active, unselected.at[j_star].set(0.0), unselected
+        )
+        m_eff = m_eff + jnp.where(active, 1, 0)
+        return lam, d_res, unselected, m_eff, active
+
+    lam0 = jnp.zeros((n, m_max), dtype)
+    carry = (
+        lam0,
+        diag0,
+        jnp.ones((n,), dtype),
+        jnp.asarray(0, jnp.int32),
+        jnp.asarray(True),
+    )
+    lam, _, _, m_eff, _ = jax.lax.fori_loop(0, m_max, body, carry)
+    return lam, m_eff
+
+
+def incomplete_cholesky(
+    x,
+    spec: KernelSpec,
+    m_max: int = 100,
+    eta: float = 1e-6,
+):
+    """Alg. 1.  Returns (Lambda (n, m_max) with ||Lam Lam^T - K|| <= eta
+    when m_eff < m_max, m_eff)."""
+    x = jnp.asarray(x, jnp.float64)
+    if x.ndim == 1:
+        x = x[:, None]
+    return _icl_jax(
+        x, jnp.asarray(spec.width, x.dtype), int(m_max), jnp.asarray(eta, x.dtype), spec.kind
+    )
+
+
+# -- Alg. 2: exact discrete decomposition (migrated from core.lowrank) -----
+
+
+def discrete_lowrank(
+    x,
+    spec: KernelSpec,
+    m_max: int = 100,
+    jitter: float = 1e-10,
+    backend: str = "jnp",
+):
+    """Alg. 2: exact factorization from deduplicated rows.
+
+    Host-side unique (data-dependent shape), jitted algebra.  Returns
+    (Lambda (n, m_max) zero-padded, m_d).  Requires m_d <= m_max.
+
+    backend="pallas" routes the (n x m_d) kernel strip — the hot spot —
+    through the tiled Pallas kernel (`repro.kernels.ops.feature_strip`
+    with the kernel forced on; on this CPU container it runs in interpret
+    mode, on TPU it lowers to Mosaic).  The Pallas strip serves RBF only:
+    forcing it for another kernel kind raises ValueError instead of the
+    pre-PR-5 behavior of silently falling back to the jnp strip.
+    """
+    xn = np.asarray(x, dtype=np.float64)
+    if xn.ndim == 1:
+        xn = xn[:, None]
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(
+            f"discrete_lowrank backend must be 'jnp' or 'pallas', got {backend!r}"
+        )
+    uniq = np.unique(xn, axis=0)
+    m_d = uniq.shape[0]
+    if m_d > m_max:
+        raise ValueError(f"m_d={m_d} exceeds m_max={m_max}; use ICL instead")
+    if backend == "pallas":
+        # raises ValueError for non-RBF kinds (the Pallas strip is RBF-only)
+        k_xu = feature_strip(
+            xn, uniq, spec.width, kind=spec.kind, use_pallas=True
+        ).astype(jnp.float64)
+    else:
+        k_xu = kernel_rows(xn, uniq, spec)  # (n, m_d)
+    k_uu = kernel_rows(uniq, uniq, spec)  # (m_d, m_d)
+    k_uu = k_uu + jitter * jnp.eye(m_d, dtype=k_uu.dtype)
+    chol = jnp.linalg.cholesky(k_uu)
+    # Lambda = K_{XX'} L^{-T}:  solve L Y^T = K_{XX'}^T  =>  Y = K L^{-T}.
+    lam = solve_triangular(chol, k_xu.T, lower=True).T
+    pad = jnp.zeros((lam.shape[0], m_max - m_d), lam.dtype)
+    return jnp.concatenate([lam, pad], axis=1), m_d
+
+
+def _row_codes(x: np.ndarray) -> np.ndarray:
+    """Rows as comparable byte codes: one void scalar per row (C-speed
+    equality through np.unique instead of per-row Python hashing).
+    Rounds to 12 decimals and normalizes -0.0 -> +0.0 so the byte view
+    matches == semantics — the ONE row-identity recipe shared by
+    `count_distinct_rows` and the stratified landmark sampler, so the
+    two can never disagree on which rows are equal."""
+    r = np.round(np.asarray(x, dtype=np.float64), 12)
+    r += 0.0
+    r = np.ascontiguousarray(r)
+    void = np.dtype((np.void, r.dtype.itemsize * r.shape[1]))
+    return r.view(void).ravel()
+
+
+def count_distinct_rows(x: np.ndarray, cap: int, chunk: int = 16384) -> int:
+    """Number of distinct rows, early-exiting once > cap.
+
+    Vectorized: rows are compared as raw bytes through a contiguous void
+    view (`_row_codes`; one np.unique per chunk, C speed) instead of a
+    per-row Python tuple()/hash loop.  The chunked scan keeps the
+    early-exit-at-cap semantics: counts <= cap are exact, and any count
+    beyond the cap is reported as cap + 1 (the value the incremental
+    loop stopped at).
+    """
+    xn = np.asarray(x)
+    if xn.ndim == 1:
+        xn = xn[:, None]
+    if xn.shape[0] == 0:
+        return 0
+    if xn.shape[1] == 0:
+        return 1  # every zero-width row is the same (empty) row
+    rows = _row_codes(xn)
+    uniq = None
+    for lo in range(0, rows.shape[0], chunk):
+        block = np.unique(rows[lo : lo + chunk])
+        uniq = block if uniq is None else np.unique(
+            np.concatenate([uniq, block])
+        )
+        if uniq.size > cap:
+            return int(cap) + 1
+    return int(uniq.size)
+
+
+# -- registered backends ---------------------------------------------------
+
+
+@register_backend
+class IclBackend(FeatureBackend):
+    """Alg. 1 (incomplete Cholesky) — the default continuous route."""
+
+    name = "icl"
+
+    def build(self, x, ctx: BuildContext) -> FeatureResult:
+        xn, spec = _prepare(x, ctx)
+        lam, m_eff = incomplete_cholesky(
+            xn, spec, m_max=ctx.m_max, eta=ctx.eta
+        )
+        return _finish(lam, int(m_eff), xn, spec, self.name, {"eta": ctx.eta})
+
+
+@register_backend
+class DiscreteExactBackend(FeatureBackend):
+    """Alg. 2 (exact decomposition) with the pre-PR-5 over-cap fallback to
+    ICL — the default discrete route.
+
+    Honors ``ctx.known_levels``: when the `DataSpec` already counted the
+    set's distinct rows (`DataSpec.infer` does), the routing decision is
+    made from that count and the column is **not** scanned again.
+    """
+
+    name = "discrete_exact"
+
+    def build(
+        self, x, ctx: BuildContext, kernel_backend: str = "jnp",
+        jitter: float = 1e-10,
+    ) -> FeatureResult:
+        xn, spec = _prepare(x, ctx)
+        m_d = ctx.known_levels
+        if m_d is None:
+            m_d = count_distinct_rows(xn, ctx.m_max)
+        if m_d > ctx.m_max:  # cardinality beyond the exact route: Alg. 1
+            lam, m_eff = incomplete_cholesky(
+                xn, spec, m_max=ctx.m_max, eta=ctx.eta
+            )
+            return _finish(
+                lam, int(m_eff), xn, spec, "icl",
+                {"eta": ctx.eta, "fallback_from": self.name},
+            )
+        lam, m_eff = discrete_lowrank(
+            xn, spec, m_max=ctx.m_max, jitter=jitter, backend=kernel_backend
+        )
+        return _finish(
+            lam, int(m_eff), xn, spec, self.name,
+            {"levels": int(m_eff), "counted": ctx.known_levels is None},
+        )
+
+
+@partial(jax.jit, static_argnames=("m_max",))
+def _rff_jax(x: jnp.ndarray, w: jnp.ndarray, m_max: int) -> jnp.ndarray:
+    """Fixed-shape (n, m_max) cos/sin random-Fourier factor: one matmul +
+    trig, no sequential pivot loop.  Columns beyond 2 * w.shape[1] are
+    exactly zero (the FeatureResult padding contract)."""
+    proj = x @ w  # (n, D)
+    d_pairs = w.shape[1]
+    feats = jnp.concatenate([jnp.cos(proj), jnp.sin(proj)], axis=1)
+    feats = feats * jnp.sqrt(1.0 / d_pairs).astype(x.dtype)
+    pad = m_max - 2 * d_pairs
+    if pad:
+        feats = jnp.concatenate(
+            [feats, jnp.zeros((x.shape[0], pad), x.dtype)], axis=1
+        )
+    return feats
+
+
+@register_backend
+class RandomFourierBackend(FeatureBackend):
+    """Random Fourier features for the RBF kernel (Rahimi-Recht).
+
+    phi(x) = sqrt(1/D) [cos(Wx); sin(Wx)] with W ~ N(0, I/sigma^2) and
+    D = m_max // 2 frequency pairs gives E[phi(x) phi(y)^T] = k(x, y)
+    exactly; the realized Gram error is statistical — documented by
+    :meth:`gram_error_bound` and measured per build into ``info``.
+    Unlike ICL there is no data-dependent pivot recursion: the factor is
+    one (n, d) x (d, D) matmul plus trig, embarrassingly parallel over
+    rows — the "sketch the n axis" shape (Ramsey, *Fourier Feature
+    Methods for Nonlinear Causal Discovery*).  Randomness is an explicit
+    PRNG key from ``BuildContext.seed``/``salt`` — reproducible, no
+    wall-clock entropy anywhere.
+    """
+
+    name = "rff"
+
+    @staticmethod
+    def gram_error_bound(d_pairs: int, n: int) -> float:
+        """Documented high-probability bound on the max entrywise Gram
+        error of D frequency pairs over an n-point set:
+        ~ 4 sqrt(log n / D) (Hoeffding + union over n^2 entries; loose
+        but honest — the property tests assert against it)."""
+        return 4.0 * math.sqrt(math.log(max(int(n), 3)) / max(int(d_pairs), 1))
+
+    def build(self, x, ctx: BuildContext) -> FeatureResult:
+        xn, spec = _prepare(x, ctx)
+        if spec.kind != "rbf":
+            raise ValueError(
+                f"rff approximates the RBF kernel only, got kind={spec.kind!r}"
+            )
+        d_pairs = ctx.m_max // 2
+        if d_pairs < 1:
+            raise ValueError(f"rff needs m_max >= 2, got {ctx.m_max}")
+        w = (
+            jax.random.normal(
+                ctx.key(), (xn.shape[1], d_pairs), dtype=jnp.float64
+            )
+            / spec.width
+        )
+        lam = _rff_jax(jnp.asarray(xn), w, ctx.m_max)
+        return _finish(
+            lam, 2 * d_pairs, xn, spec, self.name,
+            {
+                "pairs": d_pairs,
+                "seed": int(ctx.seed),
+                "gram_tol": self.gram_error_bound(d_pairs, xn.shape[0]),
+            },
+        )
+
+
+def _sample_uniform(xn, m, key, ctx):
+    return np.asarray(
+        jax.random.choice(key, xn.shape[0], shape=(m,), replace=False)
+    )
+
+
+def _sample_leverage(xn, m, key, ctx, spec, oversample=2.0, jitter=1e-10):
+    """Approximate ridge-leverage-score landmark sampling (Musco-Musco
+    style): score l_i = k_i^T (K_SS + lam I)^-1 k_i against a uniform
+    pilot subset S, then a Gumbel-top-m draw proportional to l."""
+    n = xn.shape[0]
+    k_pilot, k_gumbel = jax.random.split(key)
+    s = min(n, max(m + 1, int(math.ceil(oversample * m))))
+    idx0 = np.asarray(
+        jax.random.choice(k_pilot, n, shape=(s,), replace=False)
+    )
+    k_ns = np.asarray(
+        feature_strip(xn, xn[idx0], spec.width, kind=spec.kind)
+    )  # (n, s)
+    k_ss = k_ns[idx0]  # (s, s)
+    lam_reg = max(jitter, 1e-3 * float(np.trace(k_ss)) / s)
+    chol = np.linalg.cholesky(k_ss + lam_reg * np.eye(s))
+    y = np.linalg.solve(chol, k_ns.T)  # lower-triangular solve, (s, n)
+    lev = np.maximum(np.sum(y * y, axis=0), 1e-12)
+    gumbel = -jnp.log(
+        -jnp.log(jax.random.uniform(k_gumbel, (n,), dtype=jnp.float64))
+    )
+    scores = np.log(lev) + np.asarray(gumbel)
+    return np.argsort(-scores)[:m]
+
+
+def _sample_stratified(xn, m, key, ctx):
+    """Stratified landmark sampling for discrete/mixed sets: strata are
+    the distinct patterns of the set's *discrete* columns
+    (``ctx.discrete_mask``), landmarks allocated >= 1 per stratum (the m
+    largest strata when there are more strata than budget) with the
+    remainder proportional to stratum size, sampled uniformly within.
+    Sets with no discrete columns degrade to the uniform sampler."""
+    disc = [j for j, b in enumerate(ctx.discrete_mask) if b]
+    if not disc:
+        return _sample_uniform(xn, m, key, ctx)
+    rows = _row_codes(xn[:, disc])
+    _, inverse, counts = np.unique(rows, return_inverse=True, return_counts=True)
+    n_strata = counts.shape[0]
+    order = np.argsort(-counts, kind="stable")  # largest strata first
+    alloc = np.zeros(n_strata, dtype=np.int64)
+    if n_strata >= m:
+        alloc[order[:m]] = 1
+    else:
+        alloc[:] = 1
+        extra = m - n_strata
+        # largest-remainder proportional split of the leftover budget
+        quota = counts.astype(np.float64) * extra / counts.sum()
+        alloc += np.floor(quota).astype(np.int64)
+        rem = extra - int(np.floor(quota).sum())
+        if rem > 0:
+            alloc[np.argsort(-(quota - np.floor(quota)), kind="stable")[:rem]] += 1
+        alloc = np.minimum(alloc, counts)  # a stratum can't give more rows
+    picks = []
+    for si in range(n_strata):
+        if alloc[si] == 0:
+            continue
+        members = np.flatnonzero(inverse == si)
+        k_s = jax.random.fold_in(key, si)
+        take = min(int(alloc[si]), members.shape[0])
+        sel = np.asarray(
+            jax.random.choice(k_s, members.shape[0], shape=(take,), replace=False)
+        )
+        picks.append(members[sel])
+    return np.concatenate(picks)
+
+
+@register_backend
+class NystromBackend(FeatureBackend):
+    """Landmark Nystroem: Lambda = K_{XL} chol(K_{LL})^{-T} over sampled
+    landmark rows L — Alg. 2's algebra with the deduplicated-row set
+    replaced by a sampler, which is exactly how the paper's "sampling
+    algorithms for different data types" generalizes past discrete data.
+
+    samplers: ``uniform`` | ``leverage`` (approximate ridge leverage
+    scores — spends the budget where the kernel's effective dimension
+    is) | ``stratified`` (strata over the discrete columns; the
+    mixed-data composite).  Landmarks are deduplicated before the
+    factorization, so on truly discrete data a covering sample
+    reproduces the exact Alg.-2 decomposition.
+    """
+
+    name = "nystrom"
+
+    SAMPLERS = ("uniform", "leverage", "stratified")
+
+    def build(
+        self,
+        x,
+        ctx: BuildContext,
+        sampler: str = "uniform",
+        landmarks: int | None = None,
+        oversample: float = 2.0,
+        jitter: float = 1e-10,
+    ) -> FeatureResult:
+        if sampler not in self.SAMPLERS:
+            raise ValueError(
+                f"nystrom sampler must be one of {self.SAMPLERS}, got {sampler!r}"
+            )
+        xn, spec = _prepare(x, ctx)
+        n = xn.shape[0]
+        m = min(ctx.m_max, n)
+        if landmarks is not None:
+            m = min(int(landmarks), m)
+        if m < 1:
+            raise ValueError(f"nystrom needs >= 1 landmark, got {m}")
+        key = ctx.key()
+        if sampler == "uniform":
+            idx = _sample_uniform(xn, m, key, ctx)
+        elif sampler == "leverage":
+            idx = _sample_leverage(
+                xn, m, key, ctx, spec, oversample=oversample, jitter=jitter
+            )
+        else:
+            idx = _sample_stratified(xn, m, key, ctx)
+        pts = np.unique(xn[idx], axis=0)  # duplicate landmarks add no rank
+        m_d = pts.shape[0]
+        k_xu = feature_strip(xn, pts, spec.width, kind=spec.kind).astype(
+            jnp.float64
+        )
+        k_uu = kernel_rows(pts, pts, spec)
+        k_uu = k_uu + jitter * jnp.eye(m_d, dtype=k_uu.dtype)
+        chol = jnp.linalg.cholesky(k_uu)
+        lam = solve_triangular(chol, k_xu.T, lower=True).T
+        lam = jnp.concatenate(
+            [lam, jnp.zeros((n, ctx.m_max - m_d), lam.dtype)], axis=1
+        )
+        return _finish(
+            lam, m_d, xn, spec, self.name,
+            {"sampler": sampler, "landmarks": int(m_d), "seed": int(ctx.seed)},
+        )
+
+
+# -- the legacy end-to-end builder (pre-PR-5 public surface) ---------------
+
+
+def lowrank_features(
+    x,
+    *,
+    discrete: bool = False,
+    m_max: int = 100,
+    eta: float = 1e-6,
+    width_factor: float = 2.0,
+    spec: KernelSpec | None = None,
+    standardize_data: bool = True,
+    known_levels: int | None = None,
+):
+    """End-to-end feature builder used by the CV-LR scorer (paper Sec. 7.1):
+
+    - z-score the columns,
+    - pick the RBF width by the 2x-median heuristic (unless `spec` given),
+    - route: Alg. 2 when the variable is discrete with m_d <= m_max,
+      else Alg. 1 (ICL),
+    - center the factor (Lambda~ = H Lambda).
+
+    Returns (Lambda~ (n, m_max) float64, m_eff, spec).  This is exactly
+    the `FeaturePolicy.default()` routing as one call; `known_levels`
+    skips the distinct-row scan when the caller already counted
+    (`repro.core.spec.DataSpec.infer` records it per variable).
+    """
+    ctx = BuildContext(
+        m_max=m_max,
+        eta=eta,
+        width_factor=width_factor,
+        spec=spec,
+        standardize=standardize_data,
+        known_levels=known_levels,
+    )
+    backend = get_backend("discrete_exact" if discrete else "icl")
+    res = backend.build(x, ctx)
+    return res.factor, res.m_eff, res.spec

@@ -1,0 +1,121 @@
+"""FeatureBank: the session-owned cache of built low-rank factors.
+
+Building a variable set's factor is the expensive, sequential front of
+the CV-LR pipeline (ICL's greedy pivot loop is O(n m) *per pivot*); a
+GES run asks for the same sets sweep after sweep, and repeated sessions
+over the same data ask for them again.  The bank is a keyed LRU cache of
+`repro.features.backends.FeatureResult`s:
+
+    key = (canonical variable-set key, build fingerprint)
+
+where the fingerprint (composed by the scorer) pins everything that
+shapes the factor — the resolved `BackendChoice` (backend + params), the
+policy seed, and the score-config build knobs (m_max, eta, width_factor,
+fold layout).  Two scorers sharing a bank therefore can never serve each
+other a factor built under different routing; sharing a bank across
+*different data matrices* is the caller's contract to avoid (the bank is
+meant to be owned by a `repro.core.api.DiscoverySession` — or passed
+between sessions over the same dataset, which is exactly the multi-sweep
+rebuild-avoidance win).
+
+Telemetry: hit/miss/build counters plus cumulative build seconds
+(`stats`, surfaced per sweep by the session log) and per-entry
+rank/backend/residual records (`entry_log`).
+"""
+
+from __future__ import annotations
+
+import collections
+import time
+
+
+class FeatureBank:
+    """Keyed LRU cache of built factors with build/hit/miss telemetry."""
+
+    def __init__(self, max_entries: int | None = None):
+        if max_entries is not None and int(max_entries) < 1:
+            raise ValueError(
+                f"max_entries must be >= 1 or None, got {max_entries!r}"
+            )
+        self.max_entries = None if max_entries is None else int(max_entries)
+        self._store: collections.OrderedDict = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.builds = 0
+        self.evictions = 0
+        self.build_s = 0.0
+
+    # -- core interface ---------------------------------------------------
+    @staticmethod
+    def key(vars_key, fingerprint) -> tuple:
+        return (tuple(vars_key), tuple(fingerprint))
+
+    def lookup(self, vars_key, fingerprint):
+        """Counted lookup; returns the FeatureResult or None."""
+        key = self.key(vars_key, fingerprint)
+        res = self._store.get(key)
+        if res is None:
+            self.misses += 1
+            return None
+        self._store.move_to_end(key)
+        self.hits += 1
+        return res
+
+    def put(self, vars_key, fingerprint, result) -> None:
+        key = self.key(vars_key, fingerprint)
+        self._store[key] = result
+        self._store.move_to_end(key)
+        if self.max_entries is not None:
+            while len(self._store) > self.max_entries:
+                self._store.popitem(last=False)
+                self.evictions += 1
+
+    def get_or_build(self, vars_key, fingerprint, build_fn):
+        """The scorer's entry: counted lookup, else build (timed) + cache.
+        `build_fn` must return a `FeatureResult`."""
+        res = self.lookup(vars_key, fingerprint)
+        if res is not None:
+            return res
+        t0 = time.perf_counter()
+        res = build_fn()
+        self.build_s += time.perf_counter() - t0
+        self.builds += 1
+        self.put(vars_key, fingerprint, res)
+        return res
+
+    def clear(self) -> None:
+        self._store.clear()
+        self.hits = 0
+        self.misses = 0
+        self.builds = 0
+        self.evictions = 0
+        self.build_s = 0.0
+
+    # -- telemetry --------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._store)
+
+    @property
+    def stats(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "builds": self.builds,
+            "evictions": self.evictions,
+            "entries": len(self._store),
+            "build_s": round(self.build_s, 4),
+        }
+
+    def entry_log(self) -> list:
+        """Per-entry rank/error telemetry (insertion order): one record
+        per cached factor — which backend built which variable set at
+        what live rank and trace residual."""
+        return [
+            {
+                "vars": key[0],
+                "backend": res.backend,
+                "m_eff": res.m_eff,
+                "gram_resid": res.info.get("gram_resid"),
+            }
+            for key, res in self._store.items()
+        ]

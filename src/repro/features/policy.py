@@ -1,0 +1,143 @@
+"""Feature routing policy: which factorization backend serves which
+variable set.
+
+A `FeaturePolicy` maps variable *kinds* to registered backends
+(`repro.features.backends`) — continuous / discrete / mixed sets each get
+a `BackendChoice` (backend name + params) — and per-variable overrides
+ride on the `repro.core.spec.DataSpec` itself (`VariableSpec.backend` /
+`backend_params`), so a single column can opt into, say, stratified
+Nystroem while the rest of the graph keeps the defaults.
+
+`FeaturePolicy.default()` reproduces the pre-PR-5 hardwired routing
+bitwise: all-discrete sets -> ``discrete_exact`` (Alg. 2, with its
+over-cardinality fallback to ICL), everything else -> ``icl`` (Alg. 1).
+Tier-1 CPDAGs and scores are unchanged unless a user opts in.
+
+Resolution rule for a variable set (documented, deliberately simple):
+
+1. If **every** member variable carries the **same** explicit override,
+   the override wins (singleton sets — children and single parents, the
+   common case — always resolve their own override).
+2. Otherwise route by kind: all-discrete -> ``discrete``, all-continuous
+   -> ``continuous``, genuinely mixed -> ``mixed`` (which defaults to the
+   continuous choice, matching the old all-or-nothing discreteness test).
+
+This module is pure stdlib (no jax, no numpy) so policies can be
+constructed, fingerprinted and serialized anywhere; backend names are
+validated against the registry at build time
+(`repro.features.backends.get_backend` raises with the registered list).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendChoice:
+    """A backend name plus its policy-level params, in hashable form
+    (params normalize to a sorted tuple of ``(key, value)`` pairs — the
+    piece of the bank-cache fingerprint that identifies *how* a factor
+    was built)."""
+
+    backend: str
+    params: tuple = ()
+
+    def __post_init__(self):
+        if not isinstance(self.backend, str) or not self.backend:
+            raise ValueError(
+                f"BackendChoice.backend must be a non-empty string, got "
+                f"{self.backend!r}"
+            )
+        params = self.params
+        if isinstance(params, dict):
+            params = tuple(sorted(params.items()))
+        params = tuple((str(k), v) for k, v in params)
+        object.__setattr__(self, "params", params)
+
+    @classmethod
+    def of(cls, backend: str, **params) -> "BackendChoice":
+        return cls(backend, tuple(sorted(params.items())))
+
+    @property
+    def kwargs(self) -> dict:
+        return dict(self.params)
+
+
+def _as_choice(value) -> BackendChoice:
+    if isinstance(value, BackendChoice):
+        return value
+    if isinstance(value, str):
+        return BackendChoice(value)
+    raise ValueError(
+        f"expected a BackendChoice or backend name, got {value!r}"
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class FeaturePolicy:
+    """Kind -> backend routing + the PRNG seed of the randomized backends.
+
+    continuous / discrete / mixed: `BackendChoice` (or bare backend name)
+    per variable-set kind; ``mixed=None`` routes mixed sets through the
+    continuous choice.  seed: folded with the variable-set ids into the
+    PRNG key every randomized backend (rff, nystrom) draws from — explicit
+    and reproducible, never wall-clock.
+    """
+
+    continuous: BackendChoice = BackendChoice("icl")
+    discrete: BackendChoice = BackendChoice("discrete_exact")
+    mixed: BackendChoice | None = None
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "continuous", _as_choice(self.continuous))
+        object.__setattr__(self, "discrete", _as_choice(self.discrete))
+        if self.mixed is not None:
+            object.__setattr__(self, "mixed", _as_choice(self.mixed))
+        object.__setattr__(self, "seed", int(self.seed))
+
+    @classmethod
+    def default(cls) -> "FeaturePolicy":
+        """The pre-PR-5 routing, bitwise: Alg. 2 for all-discrete sets,
+        Alg. 1 for everything else."""
+        return cls()
+
+    def resolve(self, vars_key, data_spec) -> BackendChoice:
+        """The `BackendChoice` serving one variable set (see the module
+        doc for the override-then-kind resolution rule)."""
+        ids = sorted({int(v) for v in vars_key})
+        if not ids:
+            raise ValueError("cannot resolve a backend for an empty set")
+        members = [data_spec.variables[v] for v in ids]
+        overrides = {
+            (v.backend, tuple(v.backend_params)) for v in members
+        }
+        if len(overrides) == 1:
+            backend, params = next(iter(overrides))
+            if backend is not None:
+                return BackendChoice(backend, params)
+        kinds = {v.kind for v in members}
+        if kinds == {"discrete"}:
+            return self.discrete
+        if kinds == {"continuous"}:
+            return self.continuous
+        return self.mixed if self.mixed is not None else self.continuous
+
+    def fingerprint(self) -> tuple:
+        """Hashable identity of the routing (kind choices + seed) — part
+        of every `repro.features.bank.FeatureBank` cache key, so banks
+        shared across sessions can never serve a factor built under a
+        different policy."""
+        mixed = self.mixed
+        return (
+            "feature-policy",
+            (self.continuous.backend, self.continuous.params),
+            (self.discrete.backend, self.discrete.params),
+            None if mixed is None else (mixed.backend, mixed.params),
+            self.seed,
+        )
+
+    @property
+    def is_default(self) -> bool:
+        return self == FeaturePolicy()

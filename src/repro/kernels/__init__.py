@@ -2,6 +2,10 @@
 
 - rbf_gram:        tiled pairwise RBF strip K(X, pivots) — the ICL/Nystroem
                    feature evaluation hot loop.
+- feature_strip:   dispatcher over the (n, m) kernel strip for the
+                   factorization backends (repro.features.backends):
+                   the Pallas rbf_gram kernel on TPU, a single-jit strip
+                   at the input dtype elsewhere.
 - centered_gram:   fused mean-centering + Lam^T Lam Gram contraction — the
                    P/E/F/V/U/S block stage of the dumbbell-form score.
 - fold_gram_strip: fused bank-gather + fold-blocked Gram strip — the
@@ -23,6 +27,7 @@ single-jit gather+einsum unless the Pallas path is forced.
 
 from repro.kernels.ops import (
     centered_gram,
+    feature_strip,
     fold_gram_blocks,
     fold_gram_strip,
     fold_gram_strip_banked,
@@ -31,6 +36,7 @@ from repro.kernels.ops import (
 
 __all__ = [
     "centered_gram",
+    "feature_strip",
     "fold_gram_blocks",
     "fold_gram_strip",
     "fold_gram_strip_banked",

@@ -86,6 +86,77 @@ def rbf_gram(
     return out[:n, :m]
 
 
+@functools.partial(jax.jit, static_argnames=("kind",))
+def _feature_strip_jnp(x, pivots, width, kind: str):
+    """Non-TPU backend of the `feature_strip` dispatcher: one jit for the
+    (n, m) kernel strip at the input dtype (f64 on the scorer paths).
+    Identical algebra to `repro.core.kernel_fns._kernel_matrix` — the
+    expanded-sq-dist form with the -2<x,y> matmul — so routing existing
+    callers through the dispatcher is bitwise-neutral on CPU."""
+    if kind == "linear":
+        return x @ pivots.T
+    xn = jnp.sum(x * x, axis=-1, keepdims=True)
+    yn = jnp.sum(pivots * pivots, axis=-1, keepdims=True).T
+    d2 = jnp.maximum(xn + yn - 2.0 * (x @ pivots.T), 0.0)
+    if kind == "rbf":
+        return jnp.exp(-d2 / (2.0 * width * width))
+    if kind == "delta":
+        return (d2 < 1e-18).astype(x.dtype)
+    raise ValueError(f"unknown kernel kind {kind!r}")
+
+
+def feature_strip(
+    x,
+    pivots,
+    width,
+    *,
+    kind: str = "rbf",
+    block_n: int = 256,
+    block_m: int = 128,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """K(X, pivots): the (n, m) kernel strip — the factorization
+    backends' hot spot (ICL pivot evaluation, Alg.-2 deduplicated rows,
+    Nystroem landmarks; `repro.features.backends`).
+
+    Dispatch mirrors `fold_gram_strip`: on TPU (or when forced with
+    ``use_pallas=True``) the tiled Pallas kernel `repro.kernels.rbf_gram`
+    serves RBF strips — rows stream HBM->VMEM once, fused sq-dist + exp,
+    f32 accumulation cast back to the input dtype; elsewhere a single-jit
+    strip at the input dtype (f64 on the scorer paths, bit-identical to
+    the `repro.core.kernel_fns.kernel_rows` algebra).  The Pallas kernel
+    implements the RBF kernel only: auto-dispatch quietly uses the jnp
+    strip for other kinds, but *forcing* ``use_pallas=True`` with a
+    non-RBF ``kind`` raises ValueError — silently ignoring the requested
+    backend was the pre-PR-5 bug.  Oracle: `repro.kernels.ref.
+    feature_strip_ref`.
+    """
+    x = jnp.asarray(x)
+    pivots = jnp.asarray(pivots)
+    if x.ndim == 1:
+        x = x[:, None]
+    if pivots.ndim == 1:
+        pivots = pivots[:, None]
+    if use_pallas is None:
+        use_pallas = _on_tpu() and kind == "rbf"
+    elif use_pallas and kind != "rbf":
+        raise ValueError(
+            "feature_strip(use_pallas=True) serves only kind='rbf' strips "
+            f"(the Pallas kernel fuses sq-dist + exp); got kind={kind!r} — "
+            "drop use_pallas to use the jnp strip for this kernel"
+        )
+    if not use_pallas:
+        return _feature_strip_jnp(
+            x, pivots, jnp.asarray(width, x.dtype), kind
+        )
+    out = rbf_gram(
+        x, pivots, width, block_n=block_n, block_m=block_m,
+        interpret=interpret,
+    )
+    return out.astype(jnp.result_type(x.dtype, pivots.dtype))
+
+
 @functools.partial(jax.jit, static_argnames=("q", "precision"))
 def _fold_gram_jnp(bank_a, bank_b, ia, ib, q: int, precision: str = "bitwise"):
     """Gather+fold-Gram in one jit (the non-TPU backend of the dispatcher):

@@ -13,6 +13,27 @@ def rbf_gram_ref(x: jnp.ndarray, y: jnp.ndarray, width) -> jnp.ndarray:
     return jnp.exp(-d2 / (2.0 * width * width))
 
 
+def feature_strip_ref(x, pivots, width, kind: str = "rbf") -> jnp.ndarray:
+    """Direct (broadcast-difference) oracle for the feature_strip
+    dispatcher: K[i, j] = k(x_i, p_j) for the rbf / delta / linear kinds.
+    Deliberately uses the naive O(n m d) pairwise-difference form — a
+    different algebra from both fast paths."""
+    x = jnp.asarray(x)
+    pivots = jnp.asarray(pivots)
+    if x.ndim == 1:
+        x = x[:, None]
+    if pivots.ndim == 1:
+        pivots = pivots[:, None]
+    if kind == "linear":
+        return x @ pivots.T
+    d2 = jnp.sum((x[:, None, :] - pivots[None, :, :]) ** 2, axis=-1)
+    if kind == "rbf":
+        return jnp.exp(-d2 / (2.0 * width * width))
+    if kind == "delta":
+        return (d2 < 1e-18).astype(x.dtype)
+    raise ValueError(f"unknown kernel kind {kind!r}")
+
+
 def centered_gram_ref(lam: jnp.ndarray) -> jnp.ndarray:
     """C = (Lam - mean)^T (Lam - mean) over rows; lam (n, m) -> (m, m)."""
     lc = lam - jnp.mean(lam, axis=0, keepdims=True)

@@ -1,0 +1,385 @@
+"""FeaturePolicy routing + FeatureBank caching + the EngineOptions /
+DiscoverySession plumbing (PR 5).
+
+The two load-bearing guarantees:
+
+* `FeaturePolicy.default()` reproduces the pre-PR-5 hardwired routing
+  bitwise (same factors, same scores, same CPDAGs), so nothing changes
+  unless a user opts in;
+* whatever policy is selected, the batched frontier engine equals its
+  own sequential oracle (the engine is factor-agnostic), and the bank
+  shares built factors across sweeps and sessions with honest hit/miss
+  telemetry.
+"""
+
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401 — x64
+
+from repro.core.api import (
+    DataSpec,
+    DiscoverySession,
+    EngineOptions,
+    VariableSpec,
+    causal_discover,
+    make_scorer,
+)
+from repro.core.score_common import ScoreConfig, config_key
+from repro.data.synthetic import generate_scm_data
+from repro.features.backends import build_features, lowrank_features, BuildContext
+from repro.features.bank import FeatureBank
+from repro.features.policy import BackendChoice, FeaturePolicy
+
+
+def _mixed_ds(n=260, seed=4):
+    return generate_scm_data(d=4, n=n, density=0.4, kind="mixed", seed=seed)
+
+
+def _frontier(d):
+    configs = [(y, ()) for y in range(d)]
+    configs += [(y, (x,)) for x in range(d) for y in range(d) if x != y]
+    return configs
+
+
+# -- policy resolution -----------------------------------------------------
+
+
+def test_default_policy_routes_like_the_old_router():
+    spec = DataSpec(
+        (
+            VariableSpec("c0"),
+            VariableSpec("c1"),
+            VariableSpec("d0", kind="discrete"),
+            VariableSpec("d1", kind="discrete"),
+        )
+    )
+    pol = FeaturePolicy.default()
+    assert pol.is_default
+    assert pol.resolve((0,), spec).backend == "icl"
+    assert pol.resolve((2,), spec).backend == "discrete_exact"
+    assert pol.resolve((2, 3), spec).backend == "discrete_exact"
+    # mixed sets took the ICL route before (is_discrete = ALL discrete)
+    assert pol.resolve((0, 2), spec).backend == "icl"
+
+
+def test_per_variable_override_rides_on_the_dataspec():
+    spec = DataSpec(
+        (
+            VariableSpec("a", backend="rff"),
+            VariableSpec("b"),
+            VariableSpec(
+                "c",
+                kind="discrete",
+                backend="nystrom",
+                backend_params={"sampler": "stratified"},
+            ),
+        )
+    )
+    pol = FeaturePolicy.default()
+    assert pol.resolve((0,), spec).backend == "rff"
+    choice = pol.resolve((2,), spec)
+    assert choice.backend == "nystrom"
+    assert choice.kwargs == {"sampler": "stratified"}
+    # overrides apply to a set only when every member names the same one
+    assert pol.resolve((0, 1), spec).backend == "icl"
+    assert pol.resolve((0, 2), spec).backend == "icl"
+
+
+def test_policy_kind_choices_and_mixed_fallback():
+    spec = DataSpec(
+        (VariableSpec("c"), VariableSpec("d", kind="discrete"))
+    )
+    pol = FeaturePolicy(
+        continuous="rff",
+        discrete=BackendChoice.of("nystrom", sampler="stratified"),
+        seed=7,
+    )
+    assert pol.resolve((0,), spec).backend == "rff"
+    assert pol.resolve((1,), spec).backend == "nystrom"
+    assert pol.resolve((0, 1), spec).backend == "rff"  # mixed -> continuous
+    pol2 = FeaturePolicy(mixed=BackendChoice("nystrom"))
+    assert pol2.resolve((0, 1), spec).backend == "nystrom"
+    assert pol.fingerprint() != FeaturePolicy.default().fingerprint()
+    assert FeaturePolicy(seed=1).fingerprint() != FeaturePolicy().fingerprint()
+
+
+def test_variable_spec_override_validation():
+    with pytest.raises(ValueError, match="backend"):
+        VariableSpec("x", backend="")
+    with pytest.raises(ValueError, match="backend_params"):
+        VariableSpec("x", backend_params={"sampler": "uniform"})
+    with pytest.raises(ValueError, match="levels"):
+        VariableSpec("x", levels=0)
+
+
+def test_engine_options_features_validation():
+    with pytest.raises(ValueError, match="FeaturePolicy"):
+        EngineOptions(features="rff")
+    opts = EngineOptions(features=FeaturePolicy(continuous="rff"))
+    assert opts.features.continuous.backend == "rff"
+
+
+# -- default policy is bitwise-compatible ----------------------------------
+
+
+def test_default_policy_factors_match_legacy_builder_bitwise():
+    ds = _mixed_ds()
+    for cols, disc in ((ds.data[:, :1], False), (ds.data[:, 1:2], ds.discrete[1])):
+        legacy = lowrank_features(cols, discrete=bool(disc), m_max=48)
+        via_policy = build_features(
+            cols,
+            FeaturePolicy.default().discrete
+            if disc
+            else FeaturePolicy.default().continuous,
+            BuildContext(m_max=48),
+        )
+        assert legacy[1] == via_policy.m_eff
+        np.testing.assert_array_equal(
+            np.asarray(legacy[0]), np.asarray(via_policy.factor)
+        )
+
+
+def test_default_policy_discovery_identical_with_and_without_explicit_policy():
+    ds = _mixed_ds(seed=6)
+    spec = DataSpec.from_arrays(ds.data, dims=ds.dims, discrete=ds.discrete)
+    cfg = ScoreConfig(seed=2)
+    r_implicit = causal_discover(ds.data, spec=spec, config=cfg)
+    r_explicit = causal_discover(
+        ds.data,
+        spec=spec,
+        config=cfg,
+        options=EngineOptions(features=FeaturePolicy.default()),
+    )
+    np.testing.assert_array_equal(r_implicit.cpdag, r_explicit.cpdag)
+    assert r_implicit.score == r_explicit.score
+
+
+# -- engine == oracle under every policy -----------------------------------
+
+
+@pytest.mark.parametrize(
+    "policy",
+    [
+        FeaturePolicy(continuous="rff", discrete="rff", seed=3),
+        FeaturePolicy(
+            continuous=BackendChoice.of("nystrom", sampler="leverage"),
+            discrete=BackendChoice.of("nystrom", sampler="stratified"),
+            seed=5,
+        ),
+    ],
+    ids=["rff", "nystrom"],
+)
+def test_batched_engine_matches_sequential_oracle_under_policy(policy):
+    """The frontier engine shares factors with the sequential path through
+    the same bank, so engine == oracle must hold for ANY backend."""
+    ds = _mixed_ds(seed=8)
+    spec = DataSpec.from_arrays(ds.data, dims=ds.dims, discrete=ds.discrete)
+    cfg = ScoreConfig(seed=1)
+    opts = EngineOptions(features=policy)
+    s_bat = make_scorer(ds.data, spec=spec, config=cfg, options=opts)
+    s_seq = make_scorer(
+        ds.data,
+        spec=spec,
+        config=cfg,
+        options=EngineOptions(engine="sequential", features=policy),
+    )
+    configs = _frontier(4) + [(3, (0, 1))]
+    assert s_bat.prefetch(configs) == len(configs)
+    for i, ps in configs:
+        a = s_bat._score_cache[config_key(i, ps)]
+        b = s_seq.local_score(i, ps)
+        assert abs(a - b) <= 1e-8 * max(1.0, abs(b)), (i, ps, a, b)
+
+
+# -- FeatureBank -----------------------------------------------------------
+
+
+def test_bank_counts_hits_misses_builds_and_evicts():
+    bank = FeatureBank(max_entries=2)
+    calls = []
+
+    class _Res:
+        backend = "icl"
+        m_eff = 3
+        info = {"gram_resid": 0.0}
+
+    def build(tag):
+        calls.append(tag)
+        return _Res()
+
+    fp = ("icl", (), 0)
+    bank.get_or_build((0,), fp, lambda: build("a"))
+    bank.get_or_build((0,), fp, lambda: build("a2"))  # hit
+    bank.get_or_build((1,), fp, lambda: build("b"))
+    bank.get_or_build((2,), fp, lambda: build("c"))  # evicts (0,)
+    assert calls == ["a", "b", "c"]
+    st = bank.stats
+    assert (st["hits"], st["misses"], st["builds"]) == (1, 3, 3)
+    assert st["evictions"] == 1 and st["entries"] == 2
+    assert len(bank.entry_log()) == 2
+    # distinct fingerprints never collide
+    bank.get_or_build((2,), ("rff", (), 0), lambda: build("d"))
+    assert calls[-1] == "d"
+
+
+def test_shared_bank_avoids_rebuilds_across_scorers():
+    """The multi-sweep/multi-session rebuild-avoidance win: a second
+    scorer over the same data + config + policy reuses every factor."""
+    ds = _mixed_ds(seed=10)
+    spec = DataSpec.from_arrays(ds.data, dims=ds.dims, discrete=ds.discrete)
+    cfg = ScoreConfig(seed=3)
+    bank = FeatureBank()
+    s1 = make_scorer(ds.data, spec=spec, config=cfg, feature_bank=bank)
+    s1.prefetch(_frontier(4))
+    builds_after_first = bank.stats["builds"]
+    assert builds_after_first > 0
+
+    s2 = make_scorer(ds.data, spec=spec, config=cfg, feature_bank=bank)
+    s2.prefetch(_frontier(4))
+    assert bank.stats["builds"] == builds_after_first  # zero rebuilds
+    for key in s1._score_cache:
+        assert s1._score_cache[key] == s2._score_cache[key]
+
+    # a different fold layout must NOT share factors (fingerprint guards)
+    s3 = make_scorer(
+        ds.data, spec=spec, config=ScoreConfig(seed=4), feature_bank=bank
+    )
+    s3.features((0,))
+    assert bank.stats["builds"] == builds_after_first + 1
+
+
+def test_shared_bank_isolates_spec_derived_build_inputs():
+    """Same resolved BackendChoice, different DataSpec kind: the
+    stratified sampler keys on the spec's per-column discreteness, so
+    the bank fingerprint must separate the two builds instead of serving
+    one scorer the other's factor."""
+    rng = np.random.default_rng(21)
+    data = rng.integers(0, 3, (200, 2)).astype(float)
+    bank = FeatureBank()
+    cfg = ScoreConfig(seed=0)
+
+    def _spec(kind):
+        return DataSpec(
+            tuple(
+                VariableSpec(
+                    f"x{i}",
+                    kind=kind,
+                    backend="nystrom",
+                    backend_params={"sampler": "stratified"},
+                )
+                for i in range(2)
+            )
+        )
+
+    s_disc = make_scorer(data, spec=_spec("discrete"), config=cfg, feature_bank=bank)
+    s_cont = make_scorer(data, spec=_spec("continuous"), config=cfg, feature_bank=bank)
+    s_disc.features((0,))
+    s_cont.features((0,))
+    assert bank.stats["builds"] == 2  # one per spec, never shared
+    assert s_disc.m_eff_log[(0,)] == 3  # stratified covered the 3 levels
+
+
+def test_bank_rejects_bad_bounds_and_cv_scorer():
+    with pytest.raises(ValueError, match="max_entries"):
+        FeatureBank(max_entries=0)
+    data = np.random.default_rng(0).standard_normal((60, 3))
+    with pytest.raises(ValueError, match='method="cvlr"'):
+        make_scorer(data, method="cv", feature_bank=FeatureBank())
+
+
+# -- DiscoverySession integration ------------------------------------------
+
+
+def test_session_sweep_log_surfaces_feature_bank_telemetry():
+    ds = _mixed_ds(seed=12)
+    spec = DataSpec.from_arrays(ds.data, dims=ds.dims, discrete=ds.discrete)
+    session = DiscoverySession(ds.data, spec=spec, config=ScoreConfig(seed=5))
+    session.run()
+    assert session.feature_bank is session.scorer.feature_bank
+    assert len(session.sweep_log) >= 2
+    for rec in session.sweep_log:
+        assert set(rec["feature_bank"]) == {"hits", "misses", "builds", "build_s"}
+    # sweep 1 builds factors; later sweeps mostly reuse them
+    assert session.sweep_log[0]["feature_bank"]["builds"] > 0
+    total_builds = sum(r["feature_bank"]["builds"] for r in session.sweep_log)
+    assert total_builds == session.feature_bank.stats["builds"]
+
+    # a second session sharing the bank rebuilds nothing on its first sweep
+    session2 = DiscoverySession(
+        ds.data,
+        spec=spec,
+        config=ScoreConfig(seed=5),
+        feature_bank=session.feature_bank,
+    )
+    session2.run()
+    assert session2.sweep_log[0]["feature_bank"]["builds"] == 0
+    assert session2.sweep_log[0]["feature_bank"]["hits"] > 0
+    np.testing.assert_array_equal(
+        session.result.cpdag, session2.result.cpdag
+    )
+
+
+def test_rff_policy_discovery_runs_end_to_end():
+    ds = _mixed_ds(seed=14)
+    spec = DataSpec.from_arrays(ds.data, dims=ds.dims, discrete=ds.discrete)
+    res = causal_discover(
+        ds.data,
+        spec=spec,
+        config=ScoreConfig(seed=6),
+        options=EngineOptions(
+            features=FeaturePolicy(continuous="rff", discrete="discrete_exact")
+        ),
+    )
+    assert res.cpdag.shape == (4, 4)
+
+
+# -- satellite: the distinct-row count happens once per column -------------
+
+
+def test_count_distinct_rows_runs_once_per_variable(monkeypatch):
+    """`DataSpec.infer` counts each variable's levels; the discrete
+    backend must consume that count instead of re-scanning the column."""
+    import repro.features.backends as backends_mod
+
+    real = backends_mod.count_distinct_rows
+    calls = []
+
+    def counting(x, cap, **kw):
+        calls.append(np.asarray(x).shape)
+        return real(x, cap, **kw)
+
+    monkeypatch.setattr(backends_mod, "count_distinct_rows", counting)
+
+    rng = np.random.default_rng(0)
+    data = np.stack(
+        [
+            rng.integers(0, 3, 300).astype(float),
+            rng.integers(0, 4, 300).astype(float),
+            rng.standard_normal(300),
+        ],
+        axis=1,
+    )
+    spec = DataSpec.infer(data)
+    assert [v.kind for v in spec.variables] == ["discrete", "discrete", "continuous"]
+    n_infer = len(calls)
+    assert n_infer == 2  # the continuous column fails the integrality gate
+
+    scorer = make_scorer(data, spec=spec, config=ScoreConfig(seed=0))
+    scorer.features((0,))
+    scorer.features((1,))
+    scorer.features((2,))
+    assert len(calls) == n_infer  # single-variable builds never re-count
+
+    # a multi-variable discrete set has no precomputed joint count: one
+    # (and only one) scan is the documented cost
+    scorer.features((0, 1))
+    assert len(calls) == n_infer + 1
+
+    # without infer (from_arrays leaves levels unknown) the build itself
+    # counts exactly once per set
+    calls.clear()
+    spec2 = DataSpec.from_arrays(data, discrete=[True, True, False])
+    scorer2 = make_scorer(data, spec=spec2, config=ScoreConfig(seed=0))
+    scorer2.features((0,))
+    assert len(calls) == 1

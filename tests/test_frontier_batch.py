@@ -14,7 +14,7 @@ import pytest
 
 from repro.core.api import EngineOptions, causal_discover, make_scorer
 from repro.core.ges import ges
-from repro.core.lowrank import lowrank_features
+from repro.features.backends import lowrank_features
 from repro.core.score_common import GramBlockCache, ScoreConfig, config_key
 from repro.core.score_lowrank import (
     CVLRScorer,

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core.kernel_fns import KernelSpec
-from repro.core.lowrank import discrete_lowrank
+from repro.features.backends import discrete_lowrank
 
 
 def test_discrete_lowrank_pallas_backend_matches_jnp():

@@ -19,6 +19,7 @@ import repro.core  # noqa: F401 — enables x64: the fold-Gram strip kernel
 
 from repro.kernels.ops import (
     centered_gram,
+    feature_strip,
     fold_gram_blocks,
     fold_gram_strip,
     fold_gram_strip_banked,
@@ -26,10 +27,53 @@ from repro.kernels.ops import (
 )
 from repro.kernels.ref import (
     centered_gram_ref,
+    feature_strip_ref,
     fold_gram_strip_banked_ref,
     fold_gram_strip_ref,
     rbf_gram_ref,
 )
+
+
+@pytest.mark.parametrize("kind", ["rbf", "delta", "linear"])
+@pytest.mark.parametrize("n,m,d", [(37, 5, 1), (130, 33, 3)])
+def test_feature_strip_jnp_matches_ref(kind, n, m, d):
+    """The dispatcher's non-TPU backend (single-jit strip at the input
+    dtype) against the naive broadcast-difference oracle."""
+    rng = np.random.default_rng(n + m)
+    x = rng.standard_normal((n, d))
+    if kind == "delta":
+        x = np.round(x)  # give delta genuine collisions
+    p = x[rng.choice(n, size=m, replace=False)]
+    out = feature_strip(x, p, 1.3, kind=kind)
+    assert out.dtype == jnp.float64
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(feature_strip_ref(x, p, 1.3, kind=kind)),
+        atol=1e-12,
+    )
+
+
+def test_feature_strip_pallas_path_matches_ref():
+    """use_pallas=True runs the tiled rbf_gram kernel (interpret mode on
+    CPU) and casts back to the input dtype: f32-accurate vs the oracle."""
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((97, 2))
+    p = rng.standard_normal((13, 2))
+    out = feature_strip(x, p, 0.9, kind="rbf", use_pallas=True, interpret=True)
+    assert out.shape == (97, 13) and out.dtype == jnp.float64
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(feature_strip_ref(x, p, 0.9, kind="rbf")),
+        atol=1e-5,
+    )
+
+
+def test_feature_strip_forced_pallas_rejects_non_rbf():
+    x = np.zeros((4, 1))
+    with pytest.raises(ValueError, match="rbf"):
+        feature_strip(x, x, 1.0, kind="delta", use_pallas=True)
+    with pytest.raises(ValueError, match="kernel kind"):
+        feature_strip(x, x, 1.0, kind="matern")
 
 
 @pytest.mark.parametrize("n", [7, 128, 300, 513])

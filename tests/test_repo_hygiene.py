@@ -198,6 +198,53 @@ def test_repo_code_never_calls_its_own_deprecated_surface():
     )
 
 
+def test_repo_code_never_imports_deprecated_lowrank_location():
+    """`repro.core.lowrank` is a one-release shim over
+    `repro.features.backends`; repo-internal code must import the new
+    location.  The pytest.ini gate catches dynamic use (the shim's
+    DeprecationWarning, attributed to repro modules, becomes an error) —
+    this mirrors it statically so the failure names file:line even for
+    code the suite never executes."""
+    import ast
+
+    offenders = []
+    roots = [
+        os.path.join(_ROOT, "src", "repro"),
+        os.path.join(_ROOT, "examples"),
+        os.path.join(_ROOT, "benchmarks"),
+    ]
+    for root in roots:
+        for dirpath, _, files in os.walk(root):
+            if "__pycache__" in dirpath:
+                continue
+            for fn in files:
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                if path.endswith(os.path.join("core", "lowrank.py")):
+                    continue  # the shim itself
+                with open(path) as f:
+                    tree = ast.parse(f.read(), filename=path)
+                for node in ast.walk(tree):
+                    bad = None
+                    if isinstance(node, ast.ImportFrom):
+                        if node.module and node.module.startswith(
+                            "repro.core.lowrank"
+                        ):
+                            bad = node.module
+                    elif isinstance(node, ast.Import):
+                        for alias in node.names:
+                            if alias.name.startswith("repro.core.lowrank"):
+                                bad = alias.name
+                    if bad:
+                        rel = os.path.relpath(path, _ROOT)
+                        offenders.append(f"{rel}:{node.lineno} {bad}")
+    assert offenders == [], (
+        "repo code imports the deprecated repro.core.lowrank shim "
+        f"(use repro.features.backends): {offenders}"
+    )
+
+
 def test_collection_guard_purges_stale_and_orphaned_pyc(tmp_path):
     """The conftest guard must drop (a) orphaned .pyc whose source is gone
     and (b) .pyc not strictly newer than their source, while keeping a
