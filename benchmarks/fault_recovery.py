@@ -1,0 +1,218 @@
+"""Fault-tolerance overhead + recovery fidelity (PR 6).
+
+Three measured claims, each with the correctness side *asserted* (a
+recovery that returns the wrong CPDAG is a failure, not a data point):
+
+* **checkpoint overhead** — full discovery with sweep-granular
+  `RunState` checkpointing (`EngineOptions(checkpoint_dir=...)`,
+  ``checkpoint_every=1``) vs the same run without, so the cost of
+  survivability is a number per sweep, not a claim;
+* **kill + resume** — `FaultPlan(kill_at_sweep=k)` preempts the run at a
+  sweep boundary; a ``resume="auto"`` session restores the newest
+  committed checkpoint and replays the rest.  Reports restore latency
+  and replay time, asserts the resumed CPDAG/trace/score equal the
+  uninterrupted run's exactly;
+* **shard death** — sharded engine with one worker killed from sweep 0
+  (`FaultPlan(kill_shard=...)`) vs an undisturbed sharded run: survivor
+  re-shard overhead, with bitwise-equal CPDAG asserted.
+
+Emits BENCH_recovery.json at the repo root.
+
+``python -m benchmarks.fault_recovery``            — full sizes
+``python -m benchmarks.fault_recovery --quick``    — CI smoke
+Never run concurrently with the test suite (2-vCPU box; see
+EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_recovery.json")
+
+
+def _chain_data(n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    cols = [rng.standard_normal(n)]
+    for _ in range(d - 1):
+        cols.append(np.tanh(cols[-1]) + 0.4 * rng.standard_normal(n))
+    return np.stack(cols, axis=1)
+
+
+def _session(data, cfg, **kw):
+    from repro.core.api import DiscoverySession
+
+    return DiscoverySession(data, config=cfg, **kw)
+
+
+def _assert_equal_runs(res, ref, label):
+    if not np.array_equal(res.cpdag, ref.cpdag):
+        raise AssertionError(f"{label}: recovered CPDAG differs from reference")
+    if [tuple(s) for s in res.trace] != [tuple(s) for s in ref.trace]:
+        raise AssertionError(f"{label}: recovered trace differs from reference")
+    if res.score != ref.score:
+        raise AssertionError(f"{label}: recovered score differs from reference")
+
+
+def bench_checkpoint_overhead(data, cfg) -> dict:
+    from repro.core.spec import EngineOptions
+
+    t0 = time.perf_counter()
+    sess = _session(data, cfg, options=EngineOptions())
+    ref = sess.run()
+    plain_s = time.perf_counter() - t0
+    sweeps = len(sess.sweep_log)
+
+    ckpt_dir = tempfile.mkdtemp(prefix="bench_ckpt_")
+    try:
+        t0 = time.perf_counter()
+        sess2 = _session(
+            data, cfg,
+            options=EngineOptions(checkpoint_dir=ckpt_dir, checkpoint_every=1),
+        )
+        res = sess2.run()
+        ckpt_s = time.perf_counter() - t0
+        n_ckpts = len(os.listdir(ckpt_dir))
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+    _assert_equal_runs(res, ref, "checkpointed run")
+    row = {
+        "sweeps": sweeps,
+        "plain_s": round(plain_s, 4),
+        "checkpointed_s": round(ckpt_s, 4),
+        "n_checkpoints": n_ckpts,
+        "overhead_s_per_sweep": round((ckpt_s - plain_s) / max(sweeps, 1), 5),
+        "overhead_pct": round((ckpt_s / plain_s - 1.0) * 100, 2),
+    }
+    print(f"recovery,checkpoint_overhead,{json.dumps(row)}")
+    return row
+
+
+def bench_kill_resume(data, cfg, kill_at=2) -> dict:
+    from repro.core.api import causal_discover
+    from repro.core.runstate import FaultPlan, InjectedFault
+    from repro.core.spec import EngineOptions
+
+    t0 = time.perf_counter()
+    ref = causal_discover(data, config=cfg)
+    uninterrupted_s = time.perf_counter() - t0
+
+    ckpt_dir = tempfile.mkdtemp(prefix="bench_resume_")
+    try:
+        opts = EngineOptions(checkpoint_dir=ckpt_dir, checkpoint_every=1)
+        t0 = time.perf_counter()
+        try:
+            causal_discover(
+                data, config=cfg, options=opts,
+                fault_plan=FaultPlan(kill_at_sweep=kill_at),
+            )
+            raise AssertionError("FaultPlan kill did not fire")
+        except InjectedFault:
+            pass
+        killed_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        sess = _session(data, cfg, options=opts, resume="auto")
+        restore_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res = sess.run()
+        replay_s = time.perf_counter() - t0
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+    _assert_equal_runs(res, ref, "resumed run")
+    row = {
+        "kill_at_sweep": kill_at,
+        "resumed_from": sess.resumed_from,
+        "uninterrupted_s": round(uninterrupted_s, 4),
+        "killed_partial_s": round(killed_s, 4),
+        "restore_s": round(restore_s, 4),
+        "replay_s": round(replay_s, 4),
+        "recovery_vs_uninterrupted_pct": round(
+            ((killed_s + restore_s + replay_s) / uninterrupted_s - 1.0) * 100, 2
+        ),
+        # the resumed run's first frontier scores every config cold, a
+        # batch shape the warmup never compiled — a real resumed process
+        # pays that jit anyway, so it stays in the measurement
+        "replay_includes_fresh_shape_jit": True,
+    }
+    print(f"recovery,kill_resume,{json.dumps(row)}")
+    return row
+
+
+def bench_shard_death(data, cfg, workers=3) -> dict:
+    from repro.core.runstate import FaultPlan
+    from repro.core.spec import EngineOptions
+
+    t0 = time.perf_counter()
+    sess = _session(
+        data, cfg, options=EngineOptions(engine="sharded",
+                                         shard_workers=workers),
+    )
+    ref = sess.run()
+    healthy_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    sess2 = _session(
+        data, cfg,
+        options=EngineOptions(engine="sharded", shard_workers=workers,
+                              shard_retries=1),
+        fault_plan=FaultPlan(kill_shard=(workers - 1, 0)),
+    )
+    res = sess2.run()
+    degraded_s = time.perf_counter() - t0
+    _assert_equal_runs(res, ref, "survivor re-shard run")
+    shard_recs = [r["shards"] for r in sess2.sweep_log if "shards" in r]
+    row = {
+        "workers": workers,
+        "healthy_s": round(healthy_s, 4),
+        "one_dead_s": round(degraded_s, 4),
+        "reshard_overhead_pct": round((degraded_s / healthy_s - 1.0) * 100, 2),
+        "resharded_slices": sum(r["resharded"] for r in shard_recs),
+        "sweeps_with_reshard": len(shard_recs),
+    }
+    print(f"recovery,shard_death,{json.dumps(row)}")
+    return row
+
+
+def run(quick=False, out=OUT_PATH):
+    from repro.core.score_common import ScoreConfig
+    from repro.core.spec import EngineOptions
+
+    n, d = (120, 4) if quick else (400, 6)
+    cfg = ScoreConfig(q_folds=5, m_max=40) if quick else ScoreConfig()
+    data = _chain_data(n, d, seed=0)
+    # untimed warmup: pay one-time jit compilation for both engines here,
+    # so the timed sections compare steady-state runs, not compile noise
+    _session(data, cfg, options=EngineOptions()).run()
+    _session(
+        data, cfg, options=EngineOptions(engine="sharded", shard_workers=3)
+    ).run()
+    report = {
+        "quick": quick,
+        "n": n,
+        "d": d,
+        "checkpoint_overhead": bench_checkpoint_overhead(data, cfg),
+        "kill_resume": bench_kill_resume(data, cfg),
+        "shard_death": bench_shard_death(data, cfg),
+    }
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"recovery,report={out}")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI smoke sizes")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    run(quick=args.quick, out=args.out)

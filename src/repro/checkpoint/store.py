@@ -5,9 +5,14 @@
   count (elastic scaling; restore takes an optional `sharding_fn`).
 - Atomic commit: write to `<dir>/tmp.<step>`, fsync, then rename to
   `step_<n>` — a crash mid-write never corrupts the latest checkpoint.
+  Re-committing an already-committed step is idempotent (a resumed run
+  re-saving the step it restored from is a no-op, not a FileExistsError),
+  and `sweep_orphaned_tmp` drops `tmp.*` litter a crashed writer left.
 - Async: AsyncCheckpointer snapshots device arrays (device_get) on the
   caller thread (cheap; off critical path once donated) and serializes on
   a background thread; `wait()` joins before the next save or at exit.
+  A background-write failure is never swallowed: the captured exception
+  re-raises on the next `wait()` (and therefore on the next `save()`).
 - Format: .npz per checkpoint + a JSON manifest with the treedef/step.
 """
 
@@ -15,6 +20,7 @@ from __future__ import annotations
 
 import json
 import os
+import shutil
 import threading
 
 import jax
@@ -26,10 +32,59 @@ def _flatten_with_paths(tree):
     return flat, treedef
 
 
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:010d}")
+
+
+def _is_committed(path: str) -> bool:
+    """A committed checkpoint always has its manifest: the manifest is
+    fsynced before the atomic rename, so its presence == a complete write."""
+    return os.path.isdir(path) and os.path.exists(
+        os.path.join(path, "manifest.json")
+    )
+
+
+def sweep_orphaned_tmp(directory: str) -> list:
+    """Remove `tmp.*` dirs left by writers that crashed mid-checkpoint.
+
+    Called on checkpointer startup (and harmless any time): an orphaned
+    tmp dir is never visible to `latest_step`/restore, but it leaks disk
+    and — before same-step commits were idempotent — could collide with a
+    resumed run re-writing the same step.  Returns the removed paths.
+    """
+    removed = []
+    if not os.path.isdir(directory):
+        return removed
+    for name in os.listdir(directory):
+        if not name.startswith("tmp."):
+            continue
+        path = os.path.join(directory, name)
+        if os.path.isdir(path):
+            shutil.rmtree(path, ignore_errors=True)
+            removed.append(path)
+    return removed
+
+
 def save_checkpoint(directory: str, step: int, tree) -> str:
+    """Atomically commit `tree` as step `step`; returns the step dir.
+
+    Idempotent per step: if the step is already committed (manifest
+    present), the existing checkpoint is kept untouched and returned —
+    a resumed run re-saving the step it restored from must not crash
+    with FileExistsError.  A stale `tmp.<step>` from a crashed writer is
+    replaced, never reused.
+    """
     os.makedirs(directory, exist_ok=True)
     tmp = os.path.join(directory, f"tmp.{step}")
-    final = os.path.join(directory, f"step_{step:010d}")
+    final = _step_dir(directory, step)
+    if _is_committed(final):
+        return final  # same-step re-commit: already durable, keep it
+    if os.path.isdir(final):
+        # a directory without a manifest can only be pre-atomic-commit
+        # litter (the rename is atomic after the manifest fsync) — replace
+        shutil.rmtree(final)
+    if os.path.isdir(tmp):
+        shutil.rmtree(tmp)  # crashed writer's partial tmp: start clean
     flat, treedef = _flatten_with_paths(tree)
     arrays = {}
     for i, x in enumerate(flat):
@@ -48,21 +103,24 @@ def save_checkpoint(directory: str, step: int, tree) -> str:
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
-    if os.path.exists(final):
-        raise FileExistsError(final)
     os.rename(tmp, final)  # atomic commit
     return final
 
 
-def latest_step(directory: str):
+def list_steps(directory: str) -> list:
+    """Sorted (ascending) committed step numbers in `directory`."""
     if not os.path.isdir(directory):
-        return None
-    steps = [
+        return []
+    return sorted(
         int(name.split("_")[1])
         for name in os.listdir(directory)
         if name.startswith("step_")
-    ]
-    return max(steps) if steps else None
+    )
+
+
+def latest_step(directory: str):
+    steps = list_steps(directory)
+    return steps[-1] if steps else None
 
 
 def restore_checkpoint(directory: str, step: int, like_tree, sharding_fn=None):
@@ -71,7 +129,7 @@ def restore_checkpoint(directory: str, step: int, like_tree, sharding_fn=None):
     sharding_fn(leaf_path_index, np_array) -> jax.Array lets the caller
     re-place arrays under a NEW mesh (elastic restart on a different
     device count)."""
-    path = os.path.join(directory, f"step_{step:010d}")
+    path = _step_dir(directory, step)
     with np.load(os.path.join(path, "arrays.npz")) as data:
         flat_like, treedef = jax.tree.flatten(like_tree)
         if len(flat_like) != len(data.files):
@@ -91,25 +149,47 @@ def restore_checkpoint(directory: str, step: int, like_tree, sharding_fn=None):
 
 
 class AsyncCheckpointer:
-    """Overlaps checkpoint serialization with training compute."""
+    """Overlaps checkpoint serialization with training compute.
+
+    Failure contract: the background write thread never swallows an
+    exception — a failed write is captured and re-raised on the next
+    `wait()` (and `save()` begins with `wait()`, so at the latest the
+    next save attempt fails loudly instead of silently dropping
+    checkpoints forever).  `saved` appends are lock-guarded: the list is
+    mutated by the writer thread and read by the caller.
+    """
 
     def __init__(self, directory: str):
         self.directory = directory
         self._thread: threading.Thread | None = None
+        self._lock = threading.Lock()
+        self._pending_exc: BaseException | None = None
         self.saved: list = []
+        sweep_orphaned_tmp(directory)
 
     def save(self, step: int, tree):
-        self.wait()
+        self.wait()  # joins the previous write and re-raises its failure
         snapshot = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
         def _write():
-            path = save_checkpoint(self.directory, step, snapshot)
-            self.saved.append(path)
+            try:
+                path = save_checkpoint(self.directory, step, snapshot)
+            except BaseException as e:  # surfaced by the next wait()/save()
+                with self._lock:
+                    self._pending_exc = e
+                return
+            with self._lock:
+                self.saved.append(path)
 
         self._thread = threading.Thread(target=_write, daemon=True)
         self._thread.start()
 
     def wait(self):
+        """Join any in-flight write; re-raise a captured write failure."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        with self._lock:
+            exc, self._pending_exc = self._pending_exc, None
+        if exc is not None:
+            raise exc

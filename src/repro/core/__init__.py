@@ -27,6 +27,8 @@ from repro.core.score_exact import CVScorer  # noqa: E402
 from repro.core.score_lowrank import CVLRScorer  # noqa: E402
 from repro.core.api import (  # noqa: E402
     DiscoverySession,
+    FaultPlan,
+    RunState,
     causal_discover,
     make_scorer,
 )
@@ -71,6 +73,8 @@ __all__ = [
     "VariableSpec",
     "EngineOptions",
     "DiscoverySession",
+    "FaultPlan",
+    "RunState",
     "CVScorer",
     "CVLRScorer",
     "causal_discover",

@@ -26,7 +26,17 @@ from __future__ import annotations
 
 import warnings
 
+import numpy as np
+
+from repro.checkpoint.store import AsyncCheckpointer
 from repro.core.ges import ges, GESResult
+from repro.core.runstate import (
+    FaultPlan,
+    InjectedFault,
+    RunState,
+    _norm_step,
+    load_latest_runstate,
+)
 from repro.core.score_common import ScoreConfig
 from repro.core.score_exact import CVScorer
 from repro.core.score_lowrank import CVLRScorer
@@ -37,9 +47,13 @@ __all__ = [
     "VariableSpec",
     "EngineOptions",
     "DiscoverySession",
+    "FaultPlan",
+    "RunState",
     "make_scorer",
     "causal_discover",
 ]
+
+RESUME_MODES = ("never", "auto")
 
 _UNSET = object()  # distinguishes "not passed" from an explicit None
 
@@ -195,6 +209,22 @@ class DiscoverySession:
     rebuilding entirely — the sweep log's ``feature_bank`` deltas show
     the hits.
 
+    **Survivability**: the session keeps a `repro.core.runstate.RunState`
+    (`run_state`) — CPDAG, GES phase, applied-step log, the sweep log
+    itself, FeatureBank metadata, degradation counters — updated on the
+    `end_sweep` seam.  With `EngineOptions(checkpoint_dir=...)` the state
+    is committed through the atomic `repro.checkpoint.store.
+    AsyncCheckpointer` every `checkpoint_every` completed sweeps, and
+    `resume="auto"` restores the newest loadable checkpoint (falling
+    back past corrupted steps), re-verifies every recorded factor
+    fingerprint against this session's build policy, and replays the
+    remaining sweeps — reproducing the uninterrupted run's CPDAG and
+    applied-step sequence exactly (GES is deterministic given the
+    restored state).  `fault_plan` (a `repro.core.runstate.FaultPlan`)
+    injects deterministic failures — session kill, shard death,
+    checkpoint corruption, NaN scores — for tests and recovery
+    benchmarks.
+
     Typical use is through `causal_discover`; instantiate directly when
     you want the scorer, the per-sweep log, or custom search parameters:
 
@@ -215,6 +245,8 @@ class DiscoverySession:
         max_subset: int | None = None,
         verbose: bool = False,
         feature_bank=None,
+        fault_plan: FaultPlan | None = None,
+        resume: str = "never",
     ):
         self.options = options if options is not None else EngineOptions()
         self.scorer = make_scorer(
@@ -235,13 +267,83 @@ class DiscoverySession:
             self._sharded_hook = sharded_batch_hook
         else:
             self._sharded_hook = None
+        if fault_plan is not None and not isinstance(fault_plan, FaultPlan):
+            raise ValueError(
+                f"fault_plan must be a repro.core.runstate.FaultPlan or "
+                f"None, got {type(fault_plan).__name__}"
+            )
+        self.fault_plan = fault_plan
+        if fault_plan is not None:
+            self.scorer.fault_plan = fault_plan
+        if resume not in RESUME_MODES:
+            raise ValueError(
+                f"resume must be one of {RESUME_MODES}, got {resume!r}"
+            )
+        ckpt_dir = self.options.checkpoint_dir
+        if resume == "auto" and ckpt_dir is None:
+            raise ValueError(
+                'resume="auto" needs EngineOptions(checkpoint_dir=...) to '
+                "know where the checkpoints live"
+            )
+        self._checkpointer = (
+            AsyncCheckpointer(ckpt_dir) if ckpt_dir is not None else None
+        )
+        self._last_ckpt: int | None = None
+        d = self.spec.num_vars
+        restored = (
+            load_latest_runstate(ckpt_dir) if resume == "auto" else None
+        )
+        if restored is not None:
+            step, state = restored
+            if state.cpdag.shape != (d, d):
+                raise ValueError(
+                    f"resume: checkpoint step {step} carries a "
+                    f"{state.cpdag.shape} CPDAG but this session's data has "
+                    f"{d} variables"
+                )
+            self._verify_bank_meta(state)
+            self.run_state = state
+            self.sweep_log = state.sweep_log  # aliased: appends persist
+            self._last_ckpt = step
+            self.resumed_from: int | None = step
+        else:
+            self.run_state = RunState.fresh(d)
+            self.run_state.sweep_log = self.sweep_log  # aliased
+            self.resumed_from = None
+
+    def _verify_bank_meta(self, state: RunState) -> None:
+        """Re-admit checkpointed FeatureBank entries by *fingerprint*, not
+        by trusting stale device state: every recorded (variable set,
+        build fingerprint) must match what THIS session's policy/config
+        would build, else resuming would silently mix factor families."""
+        fp_fn = getattr(self.scorer, "_feature_fingerprint", None)
+        policy = getattr(self.scorer, "policy", None)
+        if fp_fn is None or policy is None:
+            return
+        for vars_list, fp_repr in state.bank_meta:
+            vk = tuple(int(v) for v in vars_list)
+            choice = policy.resolve(vk, self.scorer.view.spec)
+            if repr(fp_fn(vk, choice)) != fp_repr:
+                raise ValueError(
+                    f"resume: the checkpointed factor fingerprint for "
+                    f"variable set {vk} does not match this session's build "
+                    "policy/config — the checkpoint was written by a "
+                    "different configuration; refusing to mix factor "
+                    "families"
+                )
 
     # -- sweep lifecycle (driven by repro.core.ges.ges) -------------------
     def begin_sweep(self, phase: str) -> None:
+        sweep_idx = len(self.sweep_log)
+        if self.fault_plan is not None:
+            if self.fault_plan.should_kill(sweep_idx):
+                raise InjectedFault(f"injected kill at sweep {sweep_idx}")
+            self.scorer.fault_sweep = sweep_idx
         stats = getattr(self.scorer, "gram_cache", None)
+        deg = getattr(self.scorer, "degradations", None)
         self._active = {
             "phase": phase,
-            "sweep": len(self.sweep_log),
+            "sweep": sweep_idx,
             "n_configs": 0,
             "n_scored": 0,
             "step": None,
@@ -249,6 +351,7 @@ class DiscoverySession:
             "_bank0": dict(self.feature_bank.stats)
             if self.feature_bank is not None
             else None,
+            "_deg0": dict(deg) if deg is not None else None,
         }
 
     def score_frontier(self, configs) -> int:
@@ -259,7 +362,20 @@ class DiscoverySession:
             self.begin_sweep("adhoc")
         self._active["n_configs"] = len(configs)
         if self._sharded_hook is not None:
-            n = self._sharded_hook(self.scorer, configs)
+            tel: dict = {}
+            n = self._sharded_hook(
+                self.scorer,
+                configs,
+                options=self.options,
+                fault_plan=self.fault_plan,
+                sweep=self._active["sweep"],
+                telemetry=tel,
+            )
+            if any(
+                tel.get(k)
+                for k in ("retries", "resharded", "dead_workers", "fallback_keys")
+            ):
+                self._active["shards"] = tel
         elif self.options.batched:
             prefetch = getattr(self.scorer, "prefetch", None)
             n = prefetch(configs) if prefetch is not None else 0
@@ -268,11 +384,11 @@ class DiscoverySession:
         self._active["n_scored"] = int(n)
         return int(n)
 
-    def end_sweep(self, step=None) -> None:
+    def end_sweep(self, step=None, cpdag=None) -> None:
         rec, self._active = self._active, None
         if rec is None:
             return
-        rec["step"] = step
+        rec["step"] = _norm_step(step)
         stats0 = rec.pop("_stats0")
         cache = getattr(self.scorer, "gram_cache", None)
         if cache is not None and stats0 is not None:
@@ -289,18 +405,87 @@ class DiscoverySession:
                 k: round(self.feature_bank.stats[k] - bank0[k], 4)
                 for k in ("hits", "misses", "builds", "build_s")
             }
+        deg0 = rec.pop("_deg0", None)
+        deg = getattr(self.scorer, "degradations", None)
+        if deg is not None and deg0 is not None:
+            delta = {k: deg[k] - deg0.get(k, 0) for k in deg}
+            if any(delta.values()):
+                rec["degradations"] = delta
         self.sweep_log.append(rec)
+        self._advance_run_state(rec, cpdag)
+
+    def _advance_run_state(self, rec: dict, cpdag) -> None:
+        """Fold one completed sweep into `run_state` and checkpoint on
+        schedule.  A null step closes the phase (forward -> backward ->
+        done), mirroring the GES control flow the resume replays."""
+        rs = self.run_state
+        step = rec["step"]
+        if cpdag is not None:
+            rs.cpdag = np.asarray(cpdag, dtype=np.int8).copy()
+        rs.sweep = len(self.sweep_log)
+        if step is not None:
+            rs.trace.append(step)
+            if rec["phase"] == "forward":
+                rs.forward_steps += 1
+            elif rec["phase"] == "backward":
+                rs.backward_steps += 1
+        elif rec["phase"] == "forward":
+            rs.phase = "backward"
+        elif rec["phase"] == "backward":
+            rs.phase = "done"
+        deg = getattr(self.scorer, "degradations", None)
+        if deg is not None:
+            rs.degradations = dict(deg)
+        if self.feature_bank is not None:
+            rs.bank_meta = [
+                [list(vk), repr(fp)]
+                for vk, fp in self.feature_bank.metadata()
+            ]
+        if (
+            self._checkpointer is not None
+            and rs.sweep % self.options.checkpoint_every == 0
+        ):
+            self._checkpoint(rs.sweep)
+
+    def _checkpoint(self, step: int) -> None:
+        self._checkpointer.save(step, self.run_state.to_tree())
+        self._last_ckpt = step
+        if (
+            self.fault_plan is not None
+            and self.fault_plan.corrupt_checkpoint == step
+        ):
+            # injection: let the write commit, then trash it on disk
+            self._checkpointer.wait()
+            self.fault_plan.maybe_corrupt_checkpoint(
+                self.options.checkpoint_dir, step
+            )
 
     # -- the run ----------------------------------------------------------
     def run(self) -> GESResult:
         """GES end to end; returns (and retains as `self.result`) the
-        `GESResult` whose `cpdag` is the estimated equivalence class."""
-        self.result = ges(
-            self.scorer,
-            max_subset=self.max_subset,
-            verbose=self.verbose,
-            session=self,
-        )
+        `GESResult` whose `cpdag` is the estimated equivalence class.
+        Resumes from the restored `run_state` when the session was built
+        with `resume="auto"` (a fresh state replays from scratch, which
+        is the ordinary run)."""
+        try:
+            self.result = ges(
+                self.scorer,
+                max_subset=self.max_subset,
+                verbose=self.verbose,
+                session=self,
+                state=self.run_state,
+            )
+        finally:
+            if self._checkpointer is not None:
+                # drain the in-flight write even on a crash, so the last
+                # committed checkpoint is never half-written at restart
+                self._checkpointer.wait()
+        rs = self.run_state
+        rs.phase = "done"
+        rs.cpdag = np.asarray(self.result.cpdag, dtype=np.int8).copy()
+        if self._checkpointer is not None and self._last_ckpt != rs.sweep:
+            self._checkpoint(rs.sweep)
+            self._checkpointer.wait()
         return self.result
 
 
@@ -312,6 +497,8 @@ def causal_discover(
     config: ScoreConfig | None = None,
     max_subset: int | None = None,
     verbose: bool = False,
+    resume: str = "never",
+    fault_plan: FaultPlan | None = None,
     # -- deprecated (one release): the pre-PR-4 loose kwargs -------------
     dims=_UNSET,
     discrete=_UNSET,
@@ -334,6 +521,13 @@ def causal_discover(
     per-sweep log) is one `DiscoverySession(...).run()` away when you
     need it.
 
+    resume: ``"never"`` (default) or ``"auto"`` — with
+    `EngineOptions(checkpoint_dir=...)`, ``"auto"`` restores the newest
+    loadable checkpoint and replays the remaining sweeps, reproducing the
+    uninterrupted run's CPDAG exactly.  fault_plan: a
+    `repro.core.runstate.FaultPlan` injecting deterministic failures
+    (tests/benchmarks).
+
     The legacy kwargs are deprecated shims: `dims`/`discrete` fold into
     `spec`, `batched`/`gram_cache_entries`/`device_bank_mb` into
     `options`, and `batch_hook=` is replaced by
@@ -346,6 +540,11 @@ def causal_discover(
     # an explicit batch_hook=None was the old default ("no hook") — treat
     # it as not passed rather than warning about a no-op value
     if batch_hook is not _UNSET and batch_hook is not None:
+        if resume != "never" or fault_plan is not None:
+            raise ValueError(
+                "resume=/fault_plan= require the session engine — drop the "
+                'deprecated batch_hook= (use EngineOptions(engine="sharded"))'
+            )
         _deprecated(
             "causal_discover(batch_hook=...)",
             'select options=EngineOptions(engine="sharded") instead',
@@ -364,4 +563,6 @@ def causal_discover(
         config=config,
         max_subset=max_subset,
         verbose=verbose,
+        resume=resume,
+        fault_plan=fault_plan,
     ).run()

@@ -31,13 +31,18 @@ already device-resident shards with no cross-candidate sharing to cache.)
 
 from __future__ import annotations
 
+import concurrent.futures
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.runstate import InjectedFault
 from repro.core.score_common import config_key
 from repro.core.score_lowrank import scores_from_fold_blocks
+from repro.distributed.fault_tolerance import HeartbeatMonitor
 from repro.kernels import fold_gram_blocks
 
 try:  # jax >= 0.5 exports shard_map at top level
@@ -154,32 +159,171 @@ def ges_batch_hook(scorer, configs, lmbda=None, gamma=None, precision=None):
         return scorer.prefetch(configs)
     lmbda = cfg.lmbda if lmbda is None else lmbda
     gamma = cfg.gamma if gamma is None else gamma
-    todo = []
-    for node, parents in configs:
-        key = config_key(node, parents)
-        if key not in scorer._score_cache:
-            todo.append(key)
+    todo = _uncached_keys(scorer, configs)
     if not todo:
         return 0
-    q = cfg.q_folds
+    scores = _stacked_scores_for_keys(scorer, todo, lmbda, gamma, precision)
+    return _finalize_scores(scorer, todo, scores)
+
+
+def _uncached_keys(scorer, configs) -> list:
+    """Deduplicated canonical keys of a frontier's uncached configs."""
+    todo, seen = [], set()
+    for node, parents in configs:
+        key = config_key(node, parents)
+        if key not in scorer._score_cache and key not in seen:
+            seen.add(key)
+            todo.append(key)
+    return todo
+
+
+def _stacked_scores_for_keys(scorer, keys, lmbda, gamma, precision):
+    """(len(keys),) scores through the stacked pipeline.  Per-candidate
+    algebra is batch-independent (vmapped), so any partition of a frontier
+    into shards produces bitwise-identical per-key scores — the invariant
+    the fault-tolerant runner's re-shard relies on."""
+    q = scorer.config.q_folds
     lxs, lzs = [], []
-    for node, parents in todo:
+    for node, parents in keys:
         lam_x = scorer.features((node,))
         lam_z = (
             scorer.features(parents) if parents else jnp.zeros_like(lam_x)
         )
         lxs.append(block_folds(lam_x, q))
         lzs.append(block_folds(lam_z, q))
-    scores = cvlr_scores_stacked(
-        jnp.stack(lxs), jnp.stack(lzs), lmbda=lmbda, gamma=gamma,
-        precision=precision,
+    return np.asarray(
+        cvlr_scores_stacked(
+            jnp.stack(lxs), jnp.stack(lzs), lmbda=lmbda, gamma=gamma,
+            precision=precision,
+        ),
+        dtype=np.float64,
     )
-    for key, s in zip(todo, np.asarray(scores)):
-        scorer._score_cache[key] = float(s)
-    return len(todo)
 
 
-def sharded_batch_hook(scorer, configs) -> int:
+def _finalize_scores(scorer, keys, scores, sweep=None) -> int:
+    """Inject (FaultPlan NaN poisoning), recover (the scorer's numerical
+    degradation ladder), and commit scores to the scorer cache."""
+    scores = np.asarray(scores, dtype=np.float64)
+    plan = getattr(scorer, "fault_plan", None)
+    if plan is not None:
+        if sweep is None:
+            sweep = getattr(scorer, "fault_sweep", None)
+        scores = plan.corrupt_scores(scores, sweep)
+    recover = getattr(scorer, "_recover_score", None)
+    for key, s in zip(keys, scores):
+        val = float(s)
+        if not np.isfinite(val) and recover is not None:
+            val = float(recover(key[0], key[1]))
+        scorer._score_cache[key] = val
+    return len(keys)
+
+
+_BACKOFF_S = 0.05  # base of the exponential retry backoff
+_DEFAULT_HB_TIMEOUT_S = 10.0  # heartbeat window when no per-shard timeout
+
+
+def _partition(items: list, k: int) -> list:
+    """k near-equal contiguous slices (some possibly empty)."""
+    n = len(items)
+    base, extra = divmod(n, k)
+    out, lo = [], 0
+    for w in range(k):
+        hi = lo + base + (1 if w < extra else 0)
+        out.append(items[lo:hi])
+        lo = hi
+    return out
+
+
+def _run_resharding(
+    scorer, todo, lmbda, gamma, precision,
+    workers, retries, timeout_s, fault_plan, sweep, telemetry,
+):
+    """Score `todo` across logical shard workers with bounded retry and
+    heartbeat-driven survivor re-shard; returns {key: score} for every
+    key a live worker completed (missing keys => caller falls back).
+
+    Liveness policy: a worker that *raises* is retried with exponential
+    backoff and declared dead after `retries` + 1 failed attempts; a
+    worker that *times out* (per-shard `timeout_s`) is judged by the
+    `HeartbeatMonitor` — it beats only on successful completion, so each
+    timed-out attempt advances its missed-deadline epochs, and grace =
+    retries + 1 windows declares it dead.  A dead worker's remaining
+    slice is re-partitioned across the survivors mid-sweep; per-candidate
+    scores are partition-independent (see `_stacked_scores_for_keys`), so
+    the re-sharded sweep's scores are bitwise-identical to an undisturbed
+    one."""
+    hb_timeout = timeout_s if timeout_s is not None else _DEFAULT_HB_TIMEOUT_S
+    monitor = HeartbeatMonitor(
+        num_workers=workers, timeout=hb_timeout, grace=retries + 1
+    )
+    pending = {
+        w: part
+        for w, part in enumerate(_partition(todo, workers))
+        if part
+    }
+    live = set(range(workers))
+    attempts = {w: 0 for w in range(workers)}
+    results: dict = {}
+
+    def job(w, keys):
+        if fault_plan is not None and fault_plan.shard_faulted(w, sweep):
+            if fault_plan.shard_fault == "hang":
+                time.sleep(fault_plan.shard_hang_s)  # straggler: trips the
+                # per-shard timeout; the raise below keeps the late result
+                # from ever landing
+            raise InjectedFault(f"injected shard fault: worker {w}")
+        return _stacked_scores_for_keys(scorer, keys, lmbda, gamma, precision)
+
+    # +2 headroom: a timed-out attempt's thread cannot be interrupted, so
+    # its retry must not have to wait for the straggler to release a slot
+    with concurrent.futures.ThreadPoolExecutor(max_workers=workers + 2) as pool:
+        while pending and live:
+            futs = {
+                w: pool.submit(job, w, keys)
+                for w, keys in pending.items()
+                if w in live
+            }
+            for w, fut in futs.items():
+                dead_now = False
+                try:
+                    scores = fut.result(timeout=timeout_s)
+                except concurrent.futures.TimeoutError:
+                    attempts[w] += 1
+                    fut.cancel()
+                    # no beat since dispatch: the monitor's missed epochs
+                    # have genuinely advanced by this attempt's window
+                    _, _, dead = monitor.check()
+                    dead_now = w in dead
+                except Exception:
+                    attempts[w] += 1
+                    dead_now = attempts[w] > retries
+                else:
+                    monitor.beat(w)
+                    results.update(zip(pending.pop(w), scores))
+                    continue
+                telemetry["retries"] += 0 if dead_now else 1
+                if dead_now:
+                    live.discard(w)
+                    telemetry["dead_workers"].append(w)
+                else:
+                    time.sleep(_BACKOFF_S * (2 ** (attempts[w] - 1)))
+            # survivor-set re-shard: dead workers' unfinished slices are
+            # re-partitioned across the live workers mid-sweep
+            orphaned = [w for w in pending if w not in live]
+            if orphaned and live:
+                strays = [k for w in orphaned for k in pending.pop(w)]
+                telemetry["resharded"] += len(strays)
+                survivors = sorted(live)
+                for lw, extra in zip(survivors, _partition(strays, len(survivors))):
+                    if extra:
+                        pending[lw] = pending.get(lw, []) + extra
+    return results
+
+
+def sharded_batch_hook(
+    scorer, configs, *, options=None, fault_plan=None, sweep=None,
+    telemetry=None,
+) -> int:
     """The ``EngineOptions(engine="sharded")`` frontier path: score a GES
     sweep through the *stacked* distributed pipeline (`cvlr_scores_stacked`
     — fold-blocked factors, candidate axis vmapped locally / shardable over
@@ -187,18 +331,71 @@ def sharded_batch_hook(scorer, configs) -> int:
 
     `repro.core.api.DiscoverySession` routes frontiers here when the
     options select the sharded engine, so user code never threads a raw
-    ``batch_hook`` callable again; passing the scorer's own
-    hyperparameters explicitly is what pins `ges_batch_hook` to the
-    stacked path instead of delegating back to the local prefetch engine.
-    The scorer's `precision` policy rides along, so
-    ``EngineOptions(engine="sharded", precision="f32_gram")`` accumulates
-    the stacked pipeline's Grams at f32 exactly like the local engine.
+    ``batch_hook`` callable again.  The scorer's `precision` policy rides
+    along, so ``EngineOptions(engine="sharded", precision="f32_gram")``
+    accumulates the stacked pipeline's Grams at f32 exactly like the
+    local engine.
+
+    Fault tolerance (``options.shard_workers > 1``, or any `fault_plan`):
+    the frontier's uncached keys are partitioned across logical shard
+    workers (`_run_resharding`) with per-shard timeout
+    (``options.shard_timeout_s``), bounded exponential-backoff retry
+    (``options.shard_retries``), `HeartbeatMonitor`-driven survivor-set
+    re-shard, and — when every worker is lost — a terminal fallback that
+    scores the stranded keys in-process through the same stacked
+    pipeline, so a discovery never fails outright from shard loss.  Per-candidate
+    scores are partition-independent, so every recovery path produces
+    the same numbers as an undisturbed sweep.  The default options
+    (1 worker, no plan) keep the original single-dispatch pipeline.
+
+    telemetry: optional dict accumulating ``retries`` / ``resharded`` /
+    ``dead_workers`` / ``fallback_keys`` for the session sweep log.
+    `fault_plan` / `sweep` are the injection context
+    (`repro.core.runstate.FaultPlan`).
     """
     cfg = scorer.config
-    return ges_batch_hook(
-        scorer,
-        configs,
-        lmbda=cfg.lmbda,
-        gamma=cfg.gamma,
-        precision=getattr(scorer, "precision", "bitwise"),
+    precision = getattr(scorer, "precision", "bitwise")
+    workers = int(getattr(options, "shard_workers", 1) or 1) if options else 1
+    if workers <= 1 and fault_plan is None:
+        return ges_batch_hook(
+            scorer, configs, lmbda=cfg.lmbda, gamma=cfg.gamma,
+            precision=precision,
+        )
+    retries = int(getattr(options, "shard_retries", 2)) if options else 2
+    timeout_s = getattr(options, "shard_timeout_s", None) if options else None
+    todo = _uncached_keys(scorer, configs)
+    if not todo:
+        return 0
+    tel = telemetry if telemetry is not None else {}
+    tel.setdefault("workers", workers)
+    tel.setdefault("retries", 0)
+    tel.setdefault("resharded", 0)
+    tel.setdefault("dead_workers", [])
+    tel.setdefault("fallback_keys", 0)
+    # factors are built once, on this thread, before shards dispatch:
+    # worker threads then only read the feature bank (no concurrent builds)
+    for node, parents in todo:
+        scorer.features((node,))
+        if parents:
+            scorer.features(parents)
+    results = _run_resharding(
+        scorer, todo, cfg.lmbda, cfg.gamma, precision,
+        workers, retries, timeout_s, fault_plan, sweep, tel,
     )
+    scored = [k for k in todo if k in results]
+    _finalize_scores(
+        scorer, scored, [results[k] for k in scored], sweep=sweep
+    )
+    stranded = [k for k in todo if k not in results]
+    if stranded:
+        # terminal fallback: every worker died — score the stranded keys
+        # in-process through the SAME stacked pipeline the shards run
+        # (not the chunked prefetch engine, whose reduction order differs
+        # at the last ulp), so recovery stays bitwise-identical to an
+        # undisturbed sweep
+        tel["fallback_keys"] += len(stranded)
+        scores = _stacked_scores_for_keys(
+            scorer, stranded, cfg.lmbda, cfg.gamma, precision
+        )
+        _finalize_scores(scorer, stranded, scores, sweep=sweep)
+    return len(todo)

@@ -136,6 +136,7 @@ def ges(
     batch_hook=None,
     verbose: bool = False,
     session=None,
+    state=None,
 ) -> GESResult:
     """Run GES with the given local scorer (CVScorer / CVLRScorer / ...).
 
@@ -145,6 +146,15 @@ def ges(
     `repro.core.api.DiscoverySession` that owns the sweep lifecycle and
     routes frontier scoring by its `EngineOptions` (mutually exclusive
     with the low-level `batch_hook`).
+
+    state: a `repro.core.runstate.RunState` to resume from.  GES is
+    replayable: candidate enumeration is a pure function of the CPDAG
+    and scoring is deterministic, so re-entering the search with the
+    restored CPDAG / phase / applied-step log reproduces the
+    uninterrupted run's remaining sweeps exactly — a completed forward
+    phase is skipped, `phase == "done"` skips straight to the final
+    score.  The returned trace and step counters include the restored
+    prefix, so resumed and uninterrupted results compare equal.
     """
     num_vars = getattr(getattr(scorer, "view", None), "num_vars", None)
     if d is None:
@@ -162,9 +172,21 @@ def ges(
     d = int(d)
     if session is not None and batch_hook is not None:
         raise ValueError("pass either session= or batch_hook=, not both")
-    a = np.zeros((d, d), dtype=np.int8)
-    trace = []
-    fwd = bwd = 0
+    if state is None:
+        a = np.zeros((d, d), dtype=np.int8)
+        trace = []
+        fwd = bwd = 0
+        start_phase = "forward"
+    else:
+        if state.cpdag.shape != (d, d):
+            raise ValueError(
+                f"resume state carries a {state.cpdag.shape} CPDAG but the "
+                f"scorer views {d} variables"
+            )
+        a = np.asarray(state.cpdag, dtype=np.int8).copy()
+        trace = list(state.trace)
+        fwd, bwd = int(state.forward_steps), int(state.backward_steps)
+        start_phase = state.phase
 
     def sweep(phase):
         nonlocal a
@@ -214,12 +236,15 @@ def ges(
                     print(f"[GES/{phase}] {op}({x},{y},{tuple(sorted(sub))}) "
                           f"delta={best_delta:.4f}")
             if session is not None:
-                session.end_sweep(step)
+                session.end_sweep(step, cpdag=a)
             if best is None:
                 break
         return steps
 
-    fwd = sweep("forward")
-    bwd = sweep("backward")
+    if start_phase == "forward":
+        fwd += sweep("forward")
+    if start_phase in ("forward", "backward"):
+        bwd += sweep("backward")
+    # start_phase == "done": a finished run re-entered — score and return
     total = scorer.score_graph(g.pdag_to_dag(a)) if a.any() else scorer.score_graph(a)
     return GESResult(cpdag=a, score=total, forward_steps=fwd, backward_steps=bwd, trace=trace)

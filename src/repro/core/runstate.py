@@ -1,0 +1,250 @@
+"""Survivable discovery runs: RunState checkpointing + FaultPlan injection.
+
+GES is a deterministic replayable search: candidate enumeration is a pure
+function of the current CPDAG, fold layouts and feature builds are seeded,
+and every applied Insert/Delete is logged.  That makes sweep-granular
+checkpoint/resume exact — restoring the CPDAG, phase, and applied-step
+log after sweep k and re-entering the search reproduces the uninterrupted
+run's remaining sweeps bit-for-bit (same frontiers, same scores, same
+argmax).  `RunState` is the object that crosses the crash:
+
+* ``cpdag`` — the (d, d) int8 adjacency after the last completed sweep;
+* ``phase`` / ``sweep`` — where the search is (``"forward"`` /
+  ``"backward"`` / ``"done"``; sweep == completed-sweep count);
+* ``forward_steps`` / ``backward_steps`` / ``trace`` — the applied-step
+  log (op, x, y, subset, delta), so a resumed run's final trace equals
+  the uninterrupted one;
+* ``sweep_log`` — the session's per-sweep telemetry as recorded so far;
+* ``bank_meta`` — FeatureBank *metadata* (variable-set keys + build
+  fingerprints).  Factors themselves are cheap to rebuild and device
+  state cannot be trusted across a crash, so resume re-admits factors by
+  re-verifying each recorded fingerprint against the new scorer's policy
+  instead of restoring arrays;
+* ``degradations`` — cumulative numerical-degradation counters.
+
+Serialization rides the existing atomic checkpoint store
+(`repro.checkpoint.store.save_checkpoint` / `AsyncCheckpointer`): the
+state becomes a two-leaf pytree — the int8 CPDAG plus a uint8 JSON
+payload — so the commit inherits the tmp+fsync+rename atomicity and the
+idempotent same-step re-save.  `load_latest_runstate` walks committed
+steps newest-first and falls back past a corrupted checkpoint.
+
+`FaultPlan` is the injection side: deterministic, declarative failures
+(kill the session at sweep s; kill shard k from sweep s by raise or
+hang; corrupt the checkpoint written at sweep s; force NaN scores into a
+sweep; force degradation-ladder rungs to fail) threaded through
+`repro.core.api.DiscoverySession` and the sharded runner so every
+recovery path is exercisable in CI without monkeypatching internals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.checkpoint.store import list_steps, save_checkpoint
+
+
+class InjectedFault(RuntimeError):
+    """Raised by FaultPlan injection points (a simulated crash)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Declarative fault injection for tests and recovery benchmarks.
+
+    kill_at_sweep: raise `InjectedFault` from the session's `begin_sweep`
+      when the global sweep counter reaches this value — a preemption at
+      a sweep boundary.
+    kill_shard: ``(worker, sweep)`` — from sweep `sweep` on, shard
+      `worker` of the sharded runner fails every attempt.
+    shard_fault: how the killed shard fails — ``"raise"`` (worker raises
+      immediately: a crashed process) or ``"hang"`` (worker sleeps
+      `shard_hang_s` then raises: a straggler that trips the per-shard
+      timeout + heartbeat path).
+    corrupt_checkpoint: after the checkpoint for this completed-sweep
+      count commits, overwrite its arrays file with garbage — resume must
+      fall back to the previous committed step.
+    nan_scores: ``(sweep, count)`` — poison the first `count` frontier
+      scores of sweep `sweep` with NaN before they reach the cache,
+      driving the numerical degradation ladder.
+    fail_rungs: pretend the first `fail_rungs` rungs of the degradation
+      ladder (jittered retry, f64 re-solve) also fail, so tests can force
+      escalation all the way to the exact-score fallback.
+    """
+
+    kill_at_sweep: int | None = None
+    kill_shard: tuple | None = None
+    shard_fault: str = "raise"
+    shard_hang_s: float = 1.0
+    corrupt_checkpoint: int | None = None
+    nan_scores: tuple | None = None
+    fail_rungs: int = 0
+
+    def __post_init__(self):
+        if self.shard_fault not in ("raise", "hang"):
+            raise ValueError(
+                f'shard_fault must be "raise" or "hang", got {self.shard_fault!r}'
+            )
+        if self.kill_shard is not None:
+            w, s = self.kill_shard
+            object.__setattr__(self, "kill_shard", (int(w), int(s)))
+        if self.nan_scores is not None:
+            s, c = self.nan_scores
+            object.__setattr__(self, "nan_scores", (int(s), int(c)))
+
+    # -- injection predicates (all no-ops on a default plan) --------------
+    def should_kill(self, sweep: int) -> bool:
+        return self.kill_at_sweep is not None and sweep == self.kill_at_sweep
+
+    def shard_faulted(self, worker: int, sweep) -> bool:
+        """Persistent from the kill sweep on: a dead worker stays dead."""
+        if self.kill_shard is None or sweep is None:
+            return False
+        w, s = self.kill_shard
+        return worker == w and int(sweep) >= s
+
+    def corrupt_scores(self, scores: np.ndarray, sweep) -> np.ndarray:
+        """Poison the sweep's first `count` scores with NaN (copy)."""
+        if self.nan_scores is None or sweep is None:
+            return scores
+        s, count = self.nan_scores
+        if int(sweep) != s or count <= 0:
+            return scores
+        out = np.array(scores, dtype=np.float64, copy=True)
+        out[: min(count, out.shape[0])] = np.nan
+        return out
+
+    def maybe_corrupt_checkpoint(self, directory: str, step: int) -> bool:
+        if self.corrupt_checkpoint is None or step != self.corrupt_checkpoint:
+            return False
+        corrupt_checkpoint_file(directory, step)
+        return True
+
+
+def corrupt_checkpoint_file(directory: str, step: int) -> str:
+    """Overwrite a committed checkpoint's arrays file with garbage —
+    the FaultPlan's simulated disk corruption.  Returns the path."""
+    path = os.path.join(directory, f"step_{step:010d}", "arrays.npz")
+    with open(path, "wb") as f:
+        f.write(b"\x00corrupted-by-faultplan")
+    return path
+
+
+def _norm_step(step):
+    """Canonical plain-python form of a GES trace step — identical whether
+    it came straight from the search or through a JSON round-trip."""
+    if step is None:
+        return None
+    op, x, y, sub, delta = step
+    return (str(op), int(x), int(y), tuple(int(v) for v in sub), float(delta))
+
+
+def _norm_sweep_rec(rec: dict) -> dict:
+    rec = dict(rec)
+    if "step" in rec:
+        rec["step"] = _norm_step(rec["step"])
+    return rec
+
+
+@dataclasses.dataclass
+class RunState:
+    """Everything a discovery run needs to cross a crash (module doc)."""
+
+    cpdag: np.ndarray
+    phase: str = "forward"
+    sweep: int = 0
+    forward_steps: int = 0
+    backward_steps: int = 0
+    trace: list = dataclasses.field(default_factory=list)
+    sweep_log: list = dataclasses.field(default_factory=list)
+    bank_meta: list = dataclasses.field(default_factory=list)
+    degradations: dict = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def fresh(cls, d: int) -> "RunState":
+        return cls(cpdag=np.zeros((int(d), int(d)), dtype=np.int8))
+
+    # -- serialization ----------------------------------------------------
+    def to_tree(self) -> dict:
+        """Two-leaf pytree for the atomic checkpoint store: the int8
+        CPDAG plus a uint8 JSON payload.  Fresh arrays every call, so an
+        async writer can serialize while the live state keeps mutating."""
+        payload = {
+            "format": "repro.runstate.v1",
+            "phase": self.phase,
+            "sweep": int(self.sweep),
+            "forward_steps": int(self.forward_steps),
+            "backward_steps": int(self.backward_steps),
+            "trace": [list(s[:3]) + [list(s[3]), s[4]] for s in self.trace],
+            "sweep_log": self.sweep_log,
+            "bank_meta": self.bank_meta,
+            "degradations": self.degradations,
+        }
+        raw = np.frombuffer(
+            json.dumps(payload).encode("utf-8"), dtype=np.uint8
+        ).copy()
+        return {
+            "cpdag": np.asarray(self.cpdag, dtype=np.int8).copy(),
+            "payload": raw,
+        }
+
+    @classmethod
+    def from_tree(cls, cpdag: np.ndarray, payload_bytes: np.ndarray) -> "RunState":
+        payload = json.loads(bytes(payload_bytes).decode("utf-8"))
+        if payload.get("format") != "repro.runstate.v1":
+            raise ValueError(
+                f"not a RunState checkpoint payload: {payload.get('format')!r}"
+            )
+        trace = [
+            _norm_step((op, x, y, sub, delta))
+            for op, x, y, sub, delta in payload["trace"]
+        ]
+        return cls(
+            cpdag=np.asarray(cpdag, dtype=np.int8).copy(),
+            phase=str(payload["phase"]),
+            sweep=int(payload["sweep"]),
+            forward_steps=int(payload["forward_steps"]),
+            backward_steps=int(payload["backward_steps"]),
+            trace=trace,
+            sweep_log=[_norm_sweep_rec(r) for r in payload["sweep_log"]],
+            bank_meta=[list(e) for e in payload["bank_meta"]],
+            degradations=dict(payload["degradations"]),
+        )
+
+    def save(self, directory: str, step: int) -> str:
+        """Synchronous atomic commit (the async path goes through
+        `AsyncCheckpointer.save(step, state.to_tree())`)."""
+        return save_checkpoint(directory, step, self.to_tree())
+
+
+def load_runstate(directory: str, step: int) -> RunState:
+    """Load one committed step; raises on a missing/corrupt checkpoint."""
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    if manifest.get("num_arrays") != 2:
+        raise ValueError(
+            f"step {step}: expected the 2-leaf RunState tree, manifest says "
+            f"{manifest.get('num_arrays')} arrays"
+        )
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        # jax.tree flattens dicts in sorted-key order: "cpdag" < "payload"
+        cpdag, payload = data["a0"], data["a1"]
+    if cpdag.ndim != 2 or payload.ndim != 1:
+        raise ValueError(f"step {step}: unexpected RunState array shapes")
+    return RunState.from_tree(cpdag, payload)
+
+
+def load_latest_runstate(directory: str):
+    """Newest loadable (step, RunState), falling back past corrupted
+    checkpoints; None when no committed step loads."""
+    for step in sorted(list_steps(directory), reverse=True):
+        try:
+            return step, load_runstate(directory, step)
+        except Exception:
+            continue  # corrupted/foreign step: fall back to the previous
+    return None

@@ -83,7 +83,7 @@ from repro.core.score_common import (
 )
 
 
-def _candidate_fold_scores(v, u, s, f, chol_f, n0, n1, lmbda, gamma):
+def _candidate_fold_scores(v, u, s, f, chol_f, n0, n1, lmbda, gamma, jitter=0.0):
     """Mean CV-LR score over all folds of ONE candidate — the single copy
     of the dumbbell-form fold algebra.
 
@@ -105,6 +105,12 @@ def _candidate_fold_scores(v, u, s, f, chol_f, n0, n1, lmbda, gamma):
     O(mx^3) piece — is factored for all q folds in ONE batched call
     (between the two fold vmaps below), so a score chunk of B candidates
     issues a single (B, q, mx, mx) batched factorization.
+
+    jitter: an extra Tikhonov term on the Qm factorization (and, threaded
+    by the callers, on the z-side core) for the numerical degradation
+    ladder — a *Python* float, branched at trace time, so the default
+    jitter=0.0 path emits exactly the pre-ladder jaxpr (bitwise identity
+    preserved).
     """
     mx = v.shape[-1]
     dtype = v.dtype
@@ -126,6 +132,8 @@ def _candidate_fold_scores(v, u, s, f, chol_f, n0, n1, lmbda, gamma):
 
     Jt, M = jax.vmap(pre)(p, e, f, chol_f)
     Qm = eye_x + (n1 * beta) * M  # (q, mx, mx)
+    if jitter:
+        Qm = Qm + jitter * eye_x
     chol_q = jnp.linalg.cholesky(Qm)  # one batched factorization, all folds
 
     def post(m, ch, jt, v_f, u_f, s_f):
@@ -155,20 +163,23 @@ def _candidate_fold_scores(v, u, s, f, chol_f, n0, n1, lmbda, gamma):
     return jnp.mean(jax.vmap(post)(M, chol_q, Jt, v, u, s))
 
 
-def _z_cores_one(s, n1l):
+def _z_cores_one(s, n1l, jitter=0.0):
     """z-side fold cores of one parent set from its per-fold test Grams
     s (q, mz, mz): the train Gram F_q = G_zz - S_q (cross-fold trick) and
     the Cholesky factor of (F_q + n1 l I) — the O(mz^3) piece of the fold
     algebra that does NOT depend on the child.  An all-zero s (the |Z|=0
-    specialization) yields chol_f = sqrt(n1 l) I exactly."""
+    specialization) yields chol_f = sqrt(n1 l) I exactly.  `jitter` (a
+    Python float; trace-time branch, default path unchanged) strengthens
+    the regularizer for the degradation ladder's re-solves."""
     gzz = jnp.sum(s, axis=0, keepdims=True)
     f = gzz - s
     eye_z = jnp.eye(s.shape[-1], dtype=s.dtype)
-    return f, jnp.linalg.cholesky(f + n1l * eye_z)
+    reg = n1l + jitter if jitter else n1l
+    return f, jnp.linalg.cholesky(f + reg * eye_z)
 
 
-@partial(jax.jit, static_argnames=("q",))
-def cvlr_score_from_features(lam_x, lam_z, q: int, lmbda, gamma):
+@partial(jax.jit, static_argnames=("q", "jitter"))
+def cvlr_score_from_features(lam_x, lam_z, q: int, lmbda, gamma, *, jitter=0.0):
     """Mean CV-LR score over Q contiguous-block folds.
 
     lam_x, lam_z: centered factors, shape (n_eff, m) with n_eff = q * n0.
@@ -177,6 +188,8 @@ def cvlr_score_from_features(lam_x, lam_z, q: int, lmbda, gamma):
     per-fold *test* Grams are one reshape+einsum each, and the full-data
     Grams / train blocks fall out of the fold axis by sum + subtraction
     inside `scores_from_fold_blocks` (exact; no separate full-Gram einsum).
+    `jitter` (static, default 0.0 = the unchanged bitwise path) is the
+    degradation ladder's extra Tikhonov term on both Cholesky stages.
     """
     n_eff, mx = lam_x.shape
     mz = lam_z.shape[1]
@@ -189,11 +202,11 @@ def cvlr_score_from_features(lam_x, lam_z, q: int, lmbda, gamma):
     U = jnp.einsum("qni,qnj->qij", zb, xb)
     S = jnp.einsum("qni,qnj->qij", zb, zb)
     return scores_from_fold_blocks(
-        V[None], U[None], S[None], n0, n1, lmbda, gamma
+        V[None], U[None], S[None], n0, n1, lmbda, gamma, jitter=jitter
     )[0]
 
 
-def scores_from_fold_blocks(V, U, S, n0, n1, lmbda, gamma):
+def scores_from_fold_blocks(V, U, S, n0, n1, lmbda, gamma, jitter=0.0):
     """Batched CV-LR scores from per-fold *test* Gram blocks.
 
     V: (B, q, mx, mx)  X_q^T X_q       U: (B, q, mz, mx)  Z_q^T X_q
@@ -205,13 +218,17 @@ def scores_from_fold_blocks(V, U, S, n0, n1, lmbda, gamma):
     cores computed inline per candidate) — the sequential scorer, the
     batched frontier engine and the shard_map distributed scorer all share
     that core, so the paths can never drift apart numerically.  Traceable
-    (no jit) so it composes under shard_map/vmap.
+    (no jit) so it composes under shard_map/vmap.  `jitter` (Python
+    float; trace-time branch) is the degradation ladder's extra Tikhonov
+    term — 0.0 keeps the default path bitwise-unchanged.
     """
     n1l = n1 * lmbda
 
     def one(v, u, s):
-        f, chol_f = _z_cores_one(s, n1l)
-        return _candidate_fold_scores(v, u, s, f, chol_f, n0, n1, lmbda, gamma)
+        f, chol_f = _z_cores_one(s, n1l, jitter)
+        return _candidate_fold_scores(
+            v, u, s, f, chol_f, n0, n1, lmbda, gamma, jitter
+        )
 
     return jax.vmap(one)(V, U, S)
 
@@ -955,6 +972,18 @@ class CVLRScorer(ScorerBase):
         self.gram_cache = GramBlockCache(
             max_entries=gram_cache_entries, device_bank_mb=device_bank_mb
         )
+        # Numerical graceful degradation (the jitter -> f64 -> exact
+        # escalation ladder in `_recover_score`): cumulative counters,
+        # surfaced per sweep by the session log.  fault_plan / fault_sweep
+        # are the injection context a DiscoverySession threads in
+        # (`repro.core.runstate.FaultPlan`); None => no injection.
+        self.degradations = {
+            "jittered": 0, "f64_resolve": 0, "exact_fallback": 0,
+            "unrecovered": 0,
+        }
+        self.fault_plan = None
+        self.fault_sweep = None
+        self._exact_fallback = None
 
     def _feature_fingerprint(self, vars_key: tuple, choice) -> tuple:
         """Bank-cache identity of a factor built for THIS scorer: the
@@ -1038,7 +1067,7 @@ class CVLRScorer(ScorerBase):
             lam_z = self.features(tuple(parents))
         else:
             lam_z = jnp.zeros_like(lam_x)  # exact |Z|=0 specialization
-        return float(
+        s = float(
             cvlr_score_from_features(
                 lam_x,
                 lam_z,
@@ -1047,6 +1076,89 @@ class CVLRScorer(ScorerBase):
                 jnp.asarray(self.config.gamma, lam_x.dtype),
             )
         )
+        if not np.isfinite(s):
+            s = self._recover_score(i, tuple(parents))
+        return s
+
+    def _exact_fallback_scorer(self):
+        """Lazily-built exact O(n^3) oracle (`repro.core.score_exact.
+        CVScorer`) over the same view/config — the degradation ladder's
+        terminal rung.  Built at most once per scorer; a run that never
+        degrades never pays for it."""
+        if self._exact_fallback is None:
+            from repro.core.score_exact import CVScorer  # avoid import cycle
+
+            self._exact_fallback = CVScorer(
+                self.view.data, spec=self.view.spec, config=self.config
+            )
+        return self._exact_fallback
+
+    def _recover_score(self, i: int, parents: tuple) -> float:
+        """Condition-triggered escalation ladder for a non-finite CV-LR
+        score (on CPU/GPU an ill-conditioned fold Cholesky yields NaNs,
+        not exceptions — every engine path funnels non-finite scores
+        here instead of silently caching them):
+
+          rung 1 — jittered retry: re-solve with a small extra Tikhonov
+            term on both Cholesky stages (native dtype);
+          rung 2 — f64 re-solve: factors upcast to float64 (a no-op
+            upcast under the default f64 builds, where the rung's value
+            is the 100x stronger jitter) with a 100x jitter;
+          rung 3 — per-candidate exact score: the O(n^3) `CVScorer`
+            oracle, which never factorizes a near-singular m x m core.
+
+        The first finite rung wins and is counted in `self.degradations`
+        (surfaced per sweep by the session log); if everything fails the
+        candidate scores -inf — GES simply never applies it — and
+        `unrecovered` is counted.  A `FaultPlan.fail_rungs` injection
+        pretends the first k rungs failed, so tests drive escalation
+        deterministically."""
+        plan = self.fault_plan
+        fail_rungs = int(plan.fail_rungs) if plan is not None else 0
+        parents = tuple(parents)
+        lam_x = self.features((i,))
+        lam_z = (
+            self.features(parents) if parents else jnp.zeros_like(lam_x)
+        )
+        q = self.config.q_folds
+        n_eff = lam_x.shape[0]
+        n1 = n_eff - n_eff // q
+        base_jitter = 1e-8 * max(n1 * self.config.lmbda, 1.0)
+        ladder = [
+            ("jittered", lam_x, lam_z, base_jitter),
+            (
+                "f64_resolve",
+                lam_x.astype(jnp.float64),
+                lam_z.astype(jnp.float64),
+                100.0 * base_jitter,
+            ),
+        ]
+        for rung, (name, lx, lz, jit_term) in enumerate(ladder, start=1):
+            if fail_rungs >= rung:
+                continue  # injected: pretend this rung also failed
+            s = float(
+                cvlr_score_from_features(
+                    lx, lz, q,
+                    jnp.asarray(self.config.lmbda, lx.dtype),
+                    jnp.asarray(self.config.gamma, lx.dtype),
+                    jitter=float(jit_term),
+                )
+            )
+            if np.isfinite(s):
+                self.degradations[name] += 1
+                return s
+        if fail_rungs < 3:
+            try:
+                s = float(
+                    self._exact_fallback_scorer().local_score(i, parents)
+                )
+            except Exception:
+                s = float("nan")
+            if np.isfinite(s):
+                self.degradations["exact_fallback"] += 1
+                return s
+        self.degradations["unrecovered"] += 1
+        return float("-inf")
 
     def prefetch(self, configs, timings: dict | None = None) -> int:
         """Batched frontier engine: evaluate every uncached (node, parents)
@@ -1090,6 +1202,11 @@ class CVLRScorer(ScorerBase):
             timings=timings,
             precision=self.precision,
         )
+        if self.fault_plan is not None:
+            scores = self.fault_plan.corrupt_scores(scores, self.fault_sweep)
         for key, s in zip(todo, scores):
-            self._score_cache[key] = float(s)
+            val = float(s)
+            if not np.isfinite(val):
+                val = self._recover_score(key[0], key[1])
+            self._score_cache[key] = val
         return len(todo)

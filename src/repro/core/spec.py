@@ -359,6 +359,27 @@ class EngineOptions:
       the `DataSpec`.  None (the default) means
       `FeaturePolicy.default()`, which reproduces the pre-PR-5 ICL /
       exact-discrete routing bitwise.
+
+    checkpoint_dir / checkpoint_every: sweep-granular checkpointing.
+      When `checkpoint_dir` is set, the `DiscoverySession` commits its
+      `repro.core.runstate.RunState` (CPDAG, phase, applied-step log,
+      sweep telemetry, FeatureBank metadata) through the atomic async
+      checkpoint store every `checkpoint_every` completed sweeps;
+      `causal_discover(..., resume="auto")` restores from the newest
+      loadable step and reproduces the uninterrupted run bit-for-bit.
+      None (the default) disables checkpointing.
+
+    shard_workers / shard_retries / shard_timeout_s: the sharded
+      engine's fault-tolerance shape.  The frontier is partitioned
+      across `shard_workers` logical workers; a failed shard attempt is
+      retried with exponential backoff up to `shard_retries` times, a
+      worker whose heartbeat misses `shard_retries + 1` deadline windows
+      (each `shard_timeout_s` long; None = no per-shard timeout) is
+      declared dead and its remaining slice is re-partitioned across the
+      survivors, and a sweep with no survivors scores its stranded keys
+      in-process through the same stacked pipeline the shards run (so
+      recovery stays score-bitwise-identical).  The default (1 worker)
+      keeps the pre-fault-tolerance single-dispatch stacked pipeline.
     """
 
     engine: str = "batched"
@@ -366,6 +387,11 @@ class EngineOptions:
     device_bank_mb: float | None = DEFAULT_DEVICE_BANK_MB
     precision: str = "bitwise"
     features: object | None = None
+    checkpoint_dir: str | None = None
+    checkpoint_every: int = 1
+    shard_workers: int = 1
+    shard_retries: int = 2
+    shard_timeout_s: float | None = None
 
     def __post_init__(self):
         if self.engine not in ENGINES:
@@ -397,6 +423,36 @@ class EngineOptions:
                     "features must be a repro.features.policy.FeaturePolicy "
                     f"or None, got {type(self.features).__name__}"
                 )
+        if self.checkpoint_dir is not None and not isinstance(
+            self.checkpoint_dir, str
+        ):
+            raise ValueError(
+                f"checkpoint_dir must be a path string or None, got "
+                f"{self.checkpoint_dir!r}"
+            )
+        if int(self.checkpoint_every) < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1, got {self.checkpoint_every!r}"
+            )
+        object.__setattr__(self, "checkpoint_every", int(self.checkpoint_every))
+        if int(self.shard_workers) < 1:
+            raise ValueError(
+                f"shard_workers must be >= 1, got {self.shard_workers!r}"
+            )
+        object.__setattr__(self, "shard_workers", int(self.shard_workers))
+        if int(self.shard_retries) < 0:
+            raise ValueError(
+                f"shard_retries must be >= 0, got {self.shard_retries!r}"
+            )
+        object.__setattr__(self, "shard_retries", int(self.shard_retries))
+        if self.shard_timeout_s is not None:
+            t = float(self.shard_timeout_s)
+            if math.isnan(t) or t <= 0:
+                raise ValueError(
+                    f"shard_timeout_s must be > 0 or None, got "
+                    f"{self.shard_timeout_s!r}"
+                )
+            object.__setattr__(self, "shard_timeout_s", t)
 
     @property
     def batched(self) -> bool:

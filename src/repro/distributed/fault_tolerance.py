@@ -1,7 +1,9 @@
 """Fault tolerance & elasticity for the training runtime.
 
-Mechanisms (exercised by tests/test_fault_tolerance.py and
-launch/train.py --resume auto):
+Mechanisms (exercised by tests/test_substrate.py and
+tests/test_fault_tolerance_discovery.py, and consumed by the sharded
+discovery runner in repro.core.distributed_score and launch/train.py
+--resume auto):
 
 1. **Checkpoint/restart** — periodic async checkpoints (atomic-rename
    commit), restart resumes from `latest_step`; the data pipeline is
@@ -37,7 +39,13 @@ from repro.checkpoint.store import (
 @dataclasses.dataclass
 class HeartbeatMonitor:
     """Deadline-based liveness: worker w is suspect after `timeout` without
-    a beat and dead after `grace` consecutive misses."""
+    a beat and dead after `grace` missed deadline *windows*.
+
+    Misses are keyed to deadline epochs — `int(elapsed // timeout)` since
+    the last beat — never to `check()` call counts.  (An earlier version
+    incremented a counter per call, so two rapid `check()`s could declare
+    a worker dead without `grace` real timeouts elapsing; `check` must be
+    safe to call at any frequency.)"""
 
     num_workers: int
     timeout: float = 10.0
@@ -53,14 +61,17 @@ class HeartbeatMonitor:
         self.misses[worker] = 0
 
     def check(self, at: float | None = None):
-        """Returns (alive, suspect, dead) worker id lists."""
+        """Returns (alive, suspect, dead) worker id lists.  Idempotent for
+        a fixed `at`: misses count elapsed deadline windows, not calls."""
         now = time.monotonic() if at is None else at
         alive, suspect, dead = [], [], []
         for w in range(self.num_workers):
-            if now - self.last_beat[w] <= self.timeout:
+            elapsed = now - self.last_beat[w]
+            if elapsed <= self.timeout:
+                self.misses[w] = 0
                 alive.append(w)
                 continue
-            self.misses[w] += 1
+            self.misses[w] = int(elapsed // self.timeout)
             (dead if self.misses[w] >= self.grace else suspect).append(w)
         return alive, suspect, dead
 

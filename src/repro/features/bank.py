@@ -91,6 +91,14 @@ class FeatureBank:
         self.evictions = 0
         self.build_s = 0.0
 
+    def metadata(self) -> list:
+        """Checkpointable identity of every cached entry: ``(vars_key,
+        fingerprint)`` pairs, insertion order.  This is what a
+        `repro.core.runstate.RunState` records — factors are cheap to
+        rebuild, so resume verifies fingerprints instead of restoring
+        device arrays."""
+        return list(self._store.keys())
+
     # -- telemetry --------------------------------------------------------
     def __len__(self) -> int:
         return len(self._store)

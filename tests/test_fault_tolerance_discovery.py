@@ -1,0 +1,434 @@
+"""Fault tolerance for discovery runs (PR 6): checkpoint/resume
+equivalence, shard death + survivor re-shard, the numerical degradation
+ladder, and the checkpoint store's failure contract.
+
+The load-bearing property everything here leans on: GES is a
+deterministic replayable search (candidate enumeration is a pure function
+of the CPDAG, fold layouts and feature builds are seeded), so killing a
+run at an arbitrary sweep boundary and resuming from the last committed
+`RunState` must reproduce the uninterrupted run's CPDAG *bit-for-bit* and
+its applied-step sequence exactly — on the batched and the sharded
+engine, on continuous, discrete, and mixed-data fixtures, and even when
+the newest checkpoint on disk is corrupted (resume falls back one step
+and replays one extra sweep).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import (
+    AsyncCheckpointer,
+    latest_step,
+    list_steps,
+    save_checkpoint,
+    sweep_orphaned_tmp,
+)
+from repro.core.api import DiscoverySession, causal_discover
+from repro.core.distributed_score import sharded_batch_hook
+from repro.core.runstate import (
+    FaultPlan,
+    InjectedFault,
+    RunState,
+    load_latest_runstate,
+    load_runstate,
+)
+from repro.core.score_common import ScoreConfig, config_key
+from repro.core.spec import DataSpec, EngineOptions
+from repro.data.synthetic import generate_scm_data
+
+_CFG = ScoreConfig(q_folds=5, m_max=40)
+
+
+def _chain_data(n=80, seed=0):
+    rng = np.random.default_rng(seed)
+    x0 = rng.standard_normal(n)
+    x1 = 0.9 * x0 + 0.4 * rng.standard_normal(n)
+    x2 = np.tanh(x1) + 0.4 * rng.standard_normal(n)
+    x3 = rng.standard_normal(n)
+    return np.stack([x0, x1, x2, x3], axis=1)
+
+
+def _discrete_data(n=80, seed=0):
+    """The chain fixture, equal-frequency discretized to 3 levels."""
+    x = _chain_data(n, seed)
+    out = np.empty_like(x)
+    for j in range(x.shape[1]):
+        ranks = np.argsort(np.argsort(x[:, j]))
+        out[:, j] = ranks * 3 // n
+    return out
+
+
+def _mixed_fixture(n=80, seed=2):
+    ds = generate_scm_data(d=4, n=n, kind="mixed", seed=seed)
+    spec = DataSpec.from_arrays(ds.data, dims=ds.dims, discrete=ds.discrete)
+    return ds.data, spec
+
+
+def _semantic_log(sweep_log):
+    """The per-sweep fields that must survive kill/resume exactly (cache
+    counters legitimately differ: a resumed run's scorer starts cold)."""
+    return [
+        (r["phase"], r["sweep"], r["n_configs"], r["step"]) for r in sweep_log
+    ]
+
+
+def _run(data, spec=None, config=_CFG, **kw):
+    sess = DiscoverySession(data, spec=spec, config=config, **kw)
+    return sess, sess.run()
+
+
+# -- checkpoint store: the failure contract ------------------------------
+
+
+def test_async_checkpointer_reraises_background_failure(tmp_path, monkeypatch):
+    """A background-write exception must surface on the next wait()/save(),
+    never be swallowed (the pre-fix behavior dropped checkpoints forever)."""
+    ck = AsyncCheckpointer(str(tmp_path))
+    import repro.checkpoint.store as store
+
+    def _boom(directory, step, tree):
+        raise OSError("disk on fire")
+
+    monkeypatch.setattr(store, "save_checkpoint", _boom)
+    ck.save(0, {"a": np.zeros(3)})
+    with pytest.raises(OSError, match="disk on fire"):
+        ck.wait()
+    # the failure was drained: the checkpointer is usable again
+    monkeypatch.undo()
+    ck.save(1, {"a": np.zeros(3)})
+    ck.wait()
+    assert ck.saved and ck.saved[0].endswith("step_0000000001")
+
+
+def test_same_step_resave_is_idempotent(tmp_path):
+    """Re-committing the step a resumed run restored from must be a no-op,
+    not a FileExistsError."""
+    d = str(tmp_path)
+    p1 = save_checkpoint(d, 3, {"a": np.arange(4)})
+    before = os.path.getmtime(os.path.join(p1, "arrays.npz"))
+    p2 = save_checkpoint(d, 3, {"a": np.arange(4) + 100})  # ignored
+    assert p1 == p2
+    assert os.path.getmtime(os.path.join(p2, "arrays.npz")) == before
+    with np.load(os.path.join(p2, "arrays.npz")) as data:
+        np.testing.assert_array_equal(data["a0"], np.arange(4))
+
+
+def test_orphaned_tmp_swept_on_startup(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"a": np.zeros(2)})
+    orphan = os.path.join(d, "tmp.7")
+    os.makedirs(orphan)
+    with open(os.path.join(orphan, "arrays.npz"), "wb") as f:
+        f.write(b"partial")
+    removed = sweep_orphaned_tmp(d)
+    assert removed == [orphan]
+    assert not os.path.exists(orphan)
+    assert latest_step(d) == 1  # committed steps untouched
+    AsyncCheckpointer(d)  # startup sweep is harmless when there's nothing
+
+
+def test_manifestless_final_dir_is_replaced(tmp_path):
+    """A step dir without a manifest is pre-commit litter, not a
+    checkpoint — a re-save must replace it and commit for real."""
+    d = str(tmp_path)
+    litter = os.path.join(d, "step_0000000002")
+    os.makedirs(litter)
+    save_checkpoint(d, 2, {"a": np.ones(2)})
+    assert list_steps(d) == [2]
+    np.testing.assert_array_equal(load_runstate_arrays(d, 2), np.ones(2))
+
+
+def load_runstate_arrays(directory, step):
+    path = os.path.join(directory, f"step_{step:010d}", "arrays.npz")
+    with np.load(path) as data:
+        return data["a0"]
+
+
+# -- RunState serialization ----------------------------------------------
+
+
+def test_runstate_roundtrip(tmp_path):
+    rs = RunState.fresh(3)
+    rs.cpdag[0, 1] = 1
+    rs.phase = "backward"
+    rs.sweep = 4
+    rs.forward_steps = 2
+    rs.trace = [("insert", 0, 1, (2,), 1.5), ("delete", 1, 2, (), 0.25)]
+    rs.sweep_log = [{"phase": "forward", "sweep": 0, "n_configs": 9,
+                     "n_scored": 9, "step": ("insert", 0, 1, (2,), 1.5)}]
+    rs.bank_meta = [[[0], "('icl', 40)"]]
+    rs.degradations = {"jittered": 1}
+    rs.save(str(tmp_path), 4)
+    step, back = (4, load_runstate(str(tmp_path), 4))
+    assert np.array_equal(back.cpdag, rs.cpdag)
+    assert back.cpdag.dtype == np.int8
+    assert (back.phase, back.sweep, back.forward_steps) == ("backward", 4, 2)
+    assert back.trace == rs.trace  # tuples restored, not JSON lists
+    assert _semantic_log(back.sweep_log) == _semantic_log(rs.sweep_log)
+    assert back.bank_meta == rs.bank_meta
+    assert back.degradations == rs.degradations
+    assert load_latest_runstate(str(tmp_path))[0] == step
+
+
+def test_load_latest_skips_corrupt_and_foreign(tmp_path):
+    d = str(tmp_path)
+    RunState.fresh(3).save(d, 1)
+    rs2 = RunState.fresh(3)
+    rs2.sweep = 2
+    rs2.save(d, 2)
+    # step 3: a foreign (non-RunState) checkpoint must be skipped, not crash
+    save_checkpoint(d, 3, {"w": np.zeros((2, 2)), "b": np.zeros(2), "x": np.zeros(1)})
+    step, state = load_latest_runstate(d)
+    assert step == 2 and state.sweep == 2
+    # corrupt step 2 as well: falls back to step 1
+    from repro.core.runstate import corrupt_checkpoint_file
+
+    corrupt_checkpoint_file(d, 2)
+    step, state = load_latest_runstate(d)
+    assert step == 1 and state.sweep == 0
+
+
+# -- kill + resume == uninterrupted --------------------------------------
+
+
+def _assert_resume_equivalent(tmp_path, data, spec=None, engine_kw=None,
+                              kill_at=1, config=_CFG):
+    engine_kw = engine_kw or {}
+    ref_sess, ref = _run(data, spec=spec, config=config,
+                         options=EngineOptions(**engine_kw))
+    opts = EngineOptions(checkpoint_dir=str(tmp_path), checkpoint_every=1,
+                        **engine_kw)
+    with pytest.raises(InjectedFault):
+        _run(data, spec=spec, config=config, options=opts,
+             fault_plan=FaultPlan(kill_at_sweep=kill_at))
+    assert latest_step(str(tmp_path)) == kill_at
+    sess = DiscoverySession(data, spec=spec, config=config, options=opts,
+                            resume="auto")
+    assert sess.resumed_from == kill_at
+    res = sess.run()
+    np.testing.assert_array_equal(res.cpdag, ref.cpdag)  # bitwise
+    assert res.trace == [tuple(s) for s in ref.trace]
+    assert res.forward_steps == ref.forward_steps
+    assert res.backward_steps == ref.backward_steps
+    assert res.score == ref.score
+    assert _semantic_log(sess.sweep_log) == _semantic_log(ref_sess.sweep_log)
+    return sess
+
+
+def test_resume_equivalence_continuous_batched(tmp_path):
+    _assert_resume_equivalent(tmp_path, _chain_data(), kill_at=2)
+
+
+def test_resume_equivalence_continuous_sharded(tmp_path):
+    _assert_resume_equivalent(tmp_path, _chain_data(),
+                              engine_kw={"engine": "sharded",
+                                         "shard_workers": 2}, kill_at=1)
+
+
+def test_resume_equivalence_discrete(tmp_path):
+    data = _discrete_data()
+    spec = DataSpec.from_arrays(data, discrete=[True] * 4)
+    _assert_resume_equivalent(tmp_path, data, spec=spec, kill_at=1)
+
+
+def test_resume_equivalence_mixed(tmp_path):
+    data, spec = _mixed_fixture()
+    _assert_resume_equivalent(tmp_path, data, spec=spec, kill_at=1)
+
+
+def test_resume_falls_back_past_corrupted_latest(tmp_path):
+    """Corrupt the newest checkpoint on disk: resume restores the
+    previous committed step, replays one extra sweep, and still matches."""
+    data = _chain_data()
+    _, ref = _run(data, options=EngineOptions())
+    opts = EngineOptions(checkpoint_dir=str(tmp_path), checkpoint_every=1)
+    with pytest.raises(InjectedFault):
+        _run(data, options=opts,
+             fault_plan=FaultPlan(kill_at_sweep=3, corrupt_checkpoint=3))
+    assert latest_step(str(tmp_path)) == 3  # committed, then trashed
+    sess = DiscoverySession(data, config=_CFG, options=opts, resume="auto")
+    assert sess.resumed_from == 2  # fell back one step
+    res = sess.run()
+    np.testing.assert_array_equal(res.cpdag, ref.cpdag)
+    assert res.trace == [tuple(s) for s in ref.trace]
+    assert res.score == ref.score
+
+
+def test_resume_on_finished_run_skips_to_score(tmp_path):
+    data = _chain_data()
+    opts = EngineOptions(checkpoint_dir=str(tmp_path), checkpoint_every=1)
+    _, ref = _run(data, options=opts)
+    sess = DiscoverySession(data, config=_CFG, options=opts, resume="auto")
+    assert sess.run_state.phase == "done"
+    res = sess.run()
+    np.testing.assert_array_equal(res.cpdag, ref.cpdag)
+    assert res.score == ref.score
+    assert sess.sweep_log == sess.run_state.sweep_log  # aliased, no growth
+
+
+def test_checkpoint_every_throttles_writes(tmp_path):
+    data = _chain_data()
+    opts = EngineOptions(checkpoint_dir=str(tmp_path), checkpoint_every=2)
+    sess, _ = _run(data, options=opts)
+    steps = list_steps(str(tmp_path))
+    total = len(sess.sweep_log)
+    expected = sorted({s for s in range(2, total + 1, 2)} | {total})
+    assert steps == expected  # every 2nd sweep + the final state
+
+
+def test_resume_auto_requires_checkpoint_dir():
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        DiscoverySession(_chain_data(), resume="auto")
+    with pytest.raises(ValueError, match="resume must be"):
+        DiscoverySession(_chain_data(), resume="always")
+
+
+def test_resume_rejects_mismatched_bank_fingerprints(tmp_path):
+    """A checkpoint written under a different build config must be refused
+    — resuming would silently mix factor families."""
+    data = _chain_data()
+    opts = EngineOptions(checkpoint_dir=str(tmp_path), checkpoint_every=1)
+    with pytest.raises(InjectedFault):
+        _run(data, options=opts, fault_plan=FaultPlan(kill_at_sweep=1))
+    other = ScoreConfig(q_folds=5, m_max=40, width_factor=3.0)
+    with pytest.raises(ValueError, match="fingerprint"):
+        DiscoverySession(data, config=other, options=opts, resume="auto")
+
+
+# -- shard fault tolerance ------------------------------------------------
+
+
+def _frontier(d):
+    configs = [config_key(y, ()) for y in range(d)]
+    configs += [config_key(y, (x,)) for x in range(d) for y in range(d) if x != y]
+    return sorted(set(configs), key=lambda c: (c[1], c[0]))
+
+
+def _warm_scorer(data, **opt_kw):
+    from repro.core.api import make_scorer
+
+    opts = EngineOptions(engine="sharded", **opt_kw)
+    scorer = make_scorer(data, options=opts, config=_CFG)
+    configs = _frontier(4)
+    sharded_batch_hook(scorer, configs, options=opts)
+    ref = dict(scorer._score_cache)
+    scorer._score_cache.clear()
+    return scorer, configs, ref, opts
+
+
+def test_sharded_survivor_reshard_identical_scores():
+    """Kill one worker (raise mode): its frontier slice re-partitions
+    across survivors and every score is bitwise-identical (per-candidate
+    scoring is partition-independent)."""
+    data = _chain_data()
+    scorer, configs, ref, opts = _warm_scorer(
+        data, shard_workers=3, shard_retries=1)
+    tel = {}
+    n = sharded_batch_hook(scorer, configs, options=opts,
+                           fault_plan=FaultPlan(kill_shard=(1, 0)),
+                           sweep=0, telemetry=tel)
+    assert n == len(ref)
+    assert tel["dead_workers"] == [1]
+    assert tel["resharded"] > 0
+    assert scorer._score_cache == ref  # bitwise-identical floats
+
+
+def test_sharded_hang_trips_timeout_then_reshards():
+    """Hang mode: the straggler trips the per-shard timeout + heartbeat
+    path (not the exception path) and the sweep still completes exactly."""
+    data = _chain_data()
+    scorer, configs, ref, opts = _warm_scorer(
+        data, shard_workers=2, shard_retries=1, shard_timeout_s=0.5)
+    tel = {}
+    plan = FaultPlan(kill_shard=(0, 0), shard_fault="hang", shard_hang_s=1.5)
+    sharded_batch_hook(scorer, configs, options=opts, fault_plan=plan,
+                       sweep=0, telemetry=tel)
+    assert 0 in tel["dead_workers"]
+    assert scorer._score_cache == ref
+
+
+def test_sharded_all_dead_falls_back_in_process():
+    """Every worker dead: the stranded frontier lands on the in-process
+    batched engine and the sweep still completes with identical scores."""
+    data = _chain_data()
+    scorer, configs, ref, opts = _warm_scorer(
+        data, shard_workers=1, shard_retries=0)
+    tel = {}
+    sharded_batch_hook(scorer, configs, options=opts,
+                       fault_plan=FaultPlan(kill_shard=(0, 0)),
+                       sweep=0, telemetry=tel)
+    assert tel["dead_workers"] == [0]
+    assert tel["fallback_keys"] == len(ref)
+    assert scorer._score_cache == ref
+
+
+def test_sharded_full_discovery_with_dead_worker_matches_reference():
+    data = _chain_data()
+    _, ref = _run(data, options=EngineOptions())
+    sess, res = _run(
+        data,
+        options=EngineOptions(engine="sharded", shard_workers=3,
+                              shard_retries=1),
+        fault_plan=FaultPlan(kill_shard=(2, 0)),
+    )
+    np.testing.assert_array_equal(res.cpdag, ref.cpdag)
+    assert res.score == ref.score
+    shard_recs = [r["shards"] for r in sess.sweep_log if "shards" in r]
+    assert shard_recs and all(2 in r["dead_workers"] for r in shard_recs)
+
+
+def test_sharded_default_single_worker_unchanged():
+    """shard_workers=1 with no fault plan takes the original single-
+    dispatch path — the seed behavior, no thread pool."""
+    data = _chain_data()
+    _, ref = _run(data, options=EngineOptions())
+    sess, res = _run(data, options=EngineOptions(engine="sharded"))
+    np.testing.assert_array_equal(res.cpdag, ref.cpdag)
+    assert res.score == ref.score
+    assert not any("shards" in r for r in sess.sweep_log)
+
+
+# -- numerical degradation ladder ----------------------------------------
+
+
+def test_nan_scores_recover_via_jittered_retry():
+    data = _chain_data()
+    _, ref = _run(data, options=EngineOptions())
+    sess, res = _run(data, options=EngineOptions(),
+                     fault_plan=FaultPlan(nan_scores=(0, 3)))
+    np.testing.assert_array_equal(res.cpdag, ref.cpdag)
+    degs = [r["degradations"] for r in sess.sweep_log if "degradations" in r]
+    assert degs == [{"jittered": 3, "f64_resolve": 0,
+                     "exact_fallback": 0, "unrecovered": 0}]
+    assert sess.run_state.degradations["jittered"] == 3
+
+
+def test_degradation_escalates_to_f64_then_exact():
+    data = _chain_data()
+    sess, _ = _run(data, options=EngineOptions(),
+                   fault_plan=FaultPlan(nan_scores=(0, 2), fail_rungs=1))
+    assert sess.scorer.degradations["f64_resolve"] == 2
+    sess, _ = _run(data, options=EngineOptions(),
+                   fault_plan=FaultPlan(nan_scores=(0, 2), fail_rungs=2))
+    assert sess.scorer.degradations["exact_fallback"] == 2
+    assert sess.scorer.degradations["jittered"] == 0
+
+
+def test_degradation_unrecovered_is_counted_and_run_completes():
+    data = _chain_data()
+    sess, res = _run(data, options=EngineOptions(),
+                     fault_plan=FaultPlan(nan_scores=(0, 2), fail_rungs=3))
+    assert sess.scorer.degradations["unrecovered"] == 2
+    assert res.cpdag.shape == (4, 4)  # search still terminated
+
+
+def test_degradation_ladder_on_sharded_engine():
+    data = _chain_data()
+    _, ref = _run(data, options=EngineOptions())
+    sess, res = _run(data,
+                     options=EngineOptions(engine="sharded", shard_workers=2),
+                     fault_plan=FaultPlan(nan_scores=(0, 2)))
+    np.testing.assert_array_equal(res.cpdag, ref.cpdag)
+    assert sess.scorer.degradations["jittered"] == 2

@@ -161,11 +161,18 @@ def test_heartbeat_monitor():
         mon.beat(w, at=t0)
     alive, suspect, dead = mon.check(at=t0 + 0.5)
     assert alive == [0, 1, 2]
-    mon.beat(0, at=t0 + 2.0)
+    mon.beat(0, at=t0 + 1.2)
+    alive, suspect, dead = mon.check(at=t0 + 1.5)
+    assert alive == [0] and set(suspect) == {1, 2}  # one missed window
+    # misses are keyed to deadline epochs, not check() calls: re-checking
+    # at the same instant must NOT escalate suspect -> dead
+    alive, suspect, dead = mon.check(at=t0 + 1.5)
+    assert alive == [0] and set(suspect) == {1, 2} and dead == []
     alive, suspect, dead = mon.check(at=t0 + 2.5)
-    assert alive == [0] and set(suspect) == {1, 2}
-    alive, suspect, dead = mon.check(at=t0 + 2.5)
-    assert set(dead) == {1, 2}  # grace exhausted
+    assert set(dead) == {1, 2}  # grace (2 windows) actually elapsed
+    mon.beat(1, at=t0 + 2.6)
+    alive, suspect, dead = mon.check(at=t0 + 2.7)
+    assert 1 in alive  # a beat resurrects a suspect/dead worker
 
 
 def test_fault_tolerant_runner_recovers_exactly(tmp_path):
