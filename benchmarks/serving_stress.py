@@ -1,0 +1,212 @@
+"""Multi-tenant serving stress: latency, shedding, shared-bank sharing.
+
+Grid over (tenants x shared-bank) cells, each cell a burst of discovery
+requests through one `repro.serving.SessionManager`:
+
+* **latency** — p50/p95 wall-clock per completed request, measured under
+  contention (worker pool + shared-cache sweep serialization);
+* **shed rate** — requests rejected by the bounded admission queue
+  (structured `RequestShed`), never wedged;
+* **sharing** — with a shared bank, identical-fingerprint tenants must
+  trigger ZERO duplicate factor builds (single-flight + LRU; asserted,
+  not just reported) vs the unshared column where every tenant rebuilds.
+
+Every completed request's CPDAG/score is asserted bitwise-equal to the
+solo uninterrupted reference — a fast wrong answer is a failure, not a
+data point.
+
+Emits BENCH_serving.json at the repo root.
+
+``python -m benchmarks.serving_stress``            — full sizes
+``python -m benchmarks.serving_stress --quick``    — CI smoke
+Never run concurrently with the test suite (2-vCPU box; see
+EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_serving.json")
+
+
+def _chain_data(n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    cols = [rng.standard_normal(n)]
+    for _ in range(d - 1):
+        cols.append(np.tanh(cols[-1]) + 0.4 * rng.standard_normal(n))
+    return np.stack(cols, axis=1)
+
+
+def _solo_reference(data, cfg):
+    from repro.core.api import DiscoverySession
+
+    return DiscoverySession(data, config=cfg).run()
+
+
+def bench_cell(data, cfg, tenants, shared_bank, ref, max_concurrent=4):
+    from repro.serving import (
+        DiscoveryRequest,
+        RequestShed,
+        ServingOptions,
+        SessionManager,
+    )
+
+    completed = shed = 0
+    t0 = time.perf_counter()
+    if shared_bank:
+        # one manager, one bank: tenants share factors through it
+        managers = [
+            SessionManager(
+                data,
+                config=cfg,
+                serving=ServingOptions(
+                    max_concurrent=max_concurrent,
+                    queue_limit=max(tenants, 4),
+                ),
+            )
+        ]
+        submit_to = [managers[0]] * tenants
+    else:
+        # no-sharing baseline: one manager (and one private bank) per
+        # tenant, all in flight concurrently — every tenant rebuilds
+        managers = [
+            SessionManager(
+                data, config=cfg, serving=ServingOptions(max_concurrent=1)
+            )
+            for _ in range(tenants)
+        ]
+        submit_to = managers
+    try:
+        tickets = []
+        for i, mgr in enumerate(submit_to):
+            try:
+                tickets.append(mgr.submit(DiscoveryRequest(tenant=f"t{i}")))
+            except RequestShed:
+                shed += 1
+        for t in tickets:
+            res = t.result(timeout=600)
+            completed += 1
+            if not np.array_equal(res.cpdag, ref.cpdag) or res.score != ref.score:
+                raise AssertionError(
+                    f"tenant {t.tenant}: result differs from the solo "
+                    "reference run under contention"
+                )
+        latencies = sorted(t.latency_s for t in tickets)
+        builds = sum(m.feature_bank.stats["builds"] for m in managers)
+        entries = sum(m.feature_bank.stats["entries"] for m in managers)
+    finally:
+        for m in managers:
+            m.shutdown()
+    wall_s = time.perf_counter() - t0
+
+    def _pct(p):
+        i = min(len(latencies) - 1, int(round(p * (len(latencies) - 1))))
+        return round(latencies[i], 4)
+
+    duplicate_builds = builds - entries
+    if shared_bank and duplicate_builds != 0:
+        raise AssertionError(
+            f"shared bank saw {duplicate_builds} duplicate builds — "
+            "single-flight dedup is broken"
+        )
+    row = {
+        "tenants": tenants,
+        "shared_bank": shared_bank,
+        "completed": completed,
+        "shed": shed,
+        "shed_rate": round(shed / tenants, 3),
+        "latency_p50_s": _pct(0.50),
+        "latency_p95_s": _pct(0.95),
+        "wall_s": round(wall_s, 3),
+        "builds": builds,
+        "duplicate_builds": int(duplicate_builds),
+    }
+    print(f"serving,cell,{json.dumps(row)}")
+    return row
+
+
+def bench_shed(data, cfg) -> dict:
+    """Overload cell: more requests than pool+queue; the excess must shed
+    with retry-after instead of queueing unboundedly."""
+    from repro.core.runstate import FaultPlan
+    from repro.serving import (
+        DiscoveryRequest,
+        RequestShed,
+        ServingOptions,
+        SessionManager,
+    )
+
+    serving = ServingOptions(max_concurrent=1, queue_limit=1)
+    shed = []
+    mgr = SessionManager(data, config=cfg, serving=serving)
+    try:
+        hog = mgr.submit(
+            DiscoveryRequest(
+                tenant="hog", fault_plan=FaultPlan(stall_sweep=(0, 1.0))
+            )
+        )
+        time.sleep(0.2)
+        tickets = []
+        for i in range(6):
+            try:
+                tickets.append(mgr.submit(DiscoveryRequest(tenant=f"x{i}")))
+            except RequestShed as exc:
+                shed.append(exc.to_dict())
+        hog.result(timeout=600)
+        for t in tickets:
+            t.result(timeout=600)
+    finally:
+        mgr.shutdown()
+    if not shed:
+        raise AssertionError("overload burst was never shed")
+    row = {
+        "offered": 7,
+        "shed": len(shed),
+        "retry_after_s_max": max(s["retry_after_s"] for s in shed),
+    }
+    print(f"serving,shed,{json.dumps(row)}")
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI smoke sizes")
+    ap.add_argument("--out", default=OUT_PATH, help="output JSON path")
+    args = ap.parse_args()
+
+    from repro.core.score_common import ScoreConfig
+
+    n, d = (120, 4) if args.quick else (400, 6)
+    tenant_grid = (2, 4) if args.quick else (2, 4, 8)
+    data = _chain_data(n, d)
+    cfg = ScoreConfig(seed=0)
+    ref = _solo_reference(data, cfg)  # also warms the jit caches
+
+    cells = []
+    for tenants in tenant_grid:
+        for shared in (True, False):
+            cells.append(bench_cell(data, cfg, tenants, shared, ref))
+    shed_row = bench_shed(data, cfg)
+
+    payload = {
+        "quick": bool(args.quick),
+        "n": n,
+        "d": d,
+        "cells": cells,
+        "shed": shed_row,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -32,47 +32,27 @@ from repro.core.api import (  # noqa: E402
     causal_discover,
     make_scorer,
 )
-
-# The factorization layer moved to repro.features (PR 5).  The names stay
-# reachable from repro.core for one release through this lazy re-export —
-# lazy both for the deprecation window and because an eager import would
-# cycle (repro.features.backends imports repro.core.kernel_fns).
-_MOVED_TO_FEATURES = (
-    "incomplete_cholesky",
-    "discrete_lowrank",
-    "lowrank_features",
+from repro.core.runstate import (  # noqa: E402
+    DeadlineExceeded,
+    SessionCancelled,
 )
 
-
-def __getattr__(name):
-    if name in _MOVED_TO_FEATURES:
-        import warnings
-
-        warnings.warn(
-            f"repro.core.{name} is deprecated; import it from "
-            "repro.features.backends (the old location keeps working for "
-            "one release and re-exports the identical implementation)",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        from repro.features import backends
-
-        return getattr(backends, name)
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
-
+# The factorization layer lives in repro.features (PR 5); its one-release
+# `repro.core.lowrank` deprecation shim is gone — import
+# incomplete_cholesky / discrete_lowrank / lowrank_features from
+# repro.features.backends.
 
 __all__ = [
     "KernelSpec",
     "median_heuristic_width",
     "kernel_matrix",
     "kernel_rows",
-    "incomplete_cholesky",
-    "discrete_lowrank",
-    "lowrank_features",
     "DataSpec",
     "VariableSpec",
     "EngineOptions",
     "DiscoverySession",
+    "DeadlineExceeded",
+    "SessionCancelled",
     "FaultPlan",
     "RunState",
     "CVScorer",

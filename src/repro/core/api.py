@@ -15,25 +15,27 @@ The surface is three objects plus two functions:
   paper's O(n) method, or `CVScorer`, the exact O(n^3) baseline).
 * `causal_discover` — session + GES in one call; returns the CPDAG.
 
-The pre-PR-4 kwargs (`dims=`, `discrete=`, `batched=`,
-`gram_cache_entries=`, `device_bank_mb=`, `batch_hook=`) keep working for
-one release through a deprecation shim — they emit `DeprecationWarning`
-and produce identical results.  See README.md §Migration for the old →
-new mapping and docs/ARCHITECTURE.md for the engine behind the options.
+The pre-PR-4 loose kwargs (`dims=`, `discrete=`, `batched=`,
+`gram_cache_entries=`, `device_bank_mb=`, `batch_hook=`) finished their
+one-release deprecation window and are gone — passing them now raises
+`TypeError`.  See README.md §Migration for the old → new mapping and
+docs/ARCHITECTURE.md for the engine behind the options.
 """
 
 from __future__ import annotations
 
-import warnings
+import time
 
 import numpy as np
 
 from repro.checkpoint.store import AsyncCheckpointer
 from repro.core.ges import ges, GESResult
 from repro.core.runstate import (
+    DeadlineExceeded,
     FaultPlan,
     InjectedFault,
     RunState,
+    SessionCancelled,
     _norm_step,
     load_latest_runstate,
 )
@@ -55,78 +57,15 @@ __all__ = [
 
 RESUME_MODES = ("never", "auto")
 
-_UNSET = object()  # distinguishes "not passed" from an explicit None
 
-
-def _deprecated(old: str, new: str, stacklevel: int = 3) -> None:
-    # stacklevel must land on the *caller of the public API*, not on this
-    # module: the CI gate runs the suite with -W error::DeprecationWarning
-    # filtered to repro.*, so repo code calling its own deprecated surface
-    # fails loudly while user/test code merely sees the warning.
-    warnings.warn(
-        f"{old} is deprecated; {new} (the old form keeps working for one "
-        "release and produces identical results)",
-        DeprecationWarning,
-        stacklevel=stacklevel,
-    )
-
-
-def _resolve_legacy_spec(data, spec, dims, discrete):
-    """Fold the deprecated dims=/discrete= lists into a DataSpec."""
-    if dims is not _UNSET:
-        _deprecated(
-            "the dims= list",
-            "describe variables with spec=DataSpec.from_arrays(...)",
-            stacklevel=4,
+def _resolve_options(options) -> EngineOptions:
+    if options is None:
+        return EngineOptions()
+    if not isinstance(options, EngineOptions):
+        raise ValueError(
+            f"options must be an EngineOptions, got {type(options).__name__}"
         )
-    if discrete is not _UNSET:
-        _deprecated(
-            "the discrete= list",
-            "describe variables with spec=DataSpec.from_arrays(...)",
-            stacklevel=4,
-        )
-    return resolve_spec(
-        data,
-        spec=spec,
-        dims=None if dims is _UNSET else dims,
-        discrete=None if discrete is _UNSET else discrete,
-    )
-
-
-def _resolve_legacy_options(options, batched, gram_cache_entries, device_bank_mb):
-    """Fold the deprecated loose engine kwargs into an EngineOptions."""
-    legacy = {
-        "batched=": batched,
-        "gram_cache_entries=": gram_cache_entries,
-        "device_bank_mb=": device_bank_mb,
-    }
-    passed = {k: v for k, v in legacy.items() if v is not _UNSET}
-    if options is not None:
-        if passed:
-            raise ValueError(
-                f"pass either options=EngineOptions(...) or the legacy "
-                f"kwargs {sorted(passed)}, not both"
-            )
-        if not isinstance(options, EngineOptions):
-            raise ValueError(
-                f"options must be an EngineOptions, got {type(options).__name__}"
-            )
-        return options
-    for name in sorted(passed):
-        field = {
-            "batched=": 'engine="batched"/"sequential"',
-            "gram_cache_entries=": "gram_cache_entries=",
-            "device_bank_mb=": "device_bank_mb=",
-        }[name]
-        _deprecated(name, f"set {field} on options=EngineOptions(...)", stacklevel=4)
-    kw = {}
-    if batched is not _UNSET:
-        kw["engine"] = "batched" if batched else "sequential"
-    if gram_cache_entries is not _UNSET:
-        kw["gram_cache_entries"] = gram_cache_entries
-    if device_bank_mb is not _UNSET:
-        kw["device_bank_mb"] = device_bank_mb
-    return EngineOptions(**kw)
+    return options
 
 
 def make_scorer(
@@ -136,12 +75,7 @@ def make_scorer(
     options: EngineOptions | None = None,
     config: ScoreConfig | None = None,
     feature_bank=None,
-    # -- deprecated (one release): the pre-PR-4 loose kwargs -------------
-    dims=_UNSET,
-    discrete=_UNSET,
-    batched=_UNSET,
-    gram_cache_entries=_UNSET,
-    device_bank_mb=_UNSET,
+    gram_cache=None,
 ):
     """Build a local scorer over an (n, cols) data matrix.
 
@@ -155,22 +89,20 @@ def make_scorer(
     (`repro.features.policy.FeaturePolicy`); every field is documented
     there.  feature_bank: a `repro.features.bank.FeatureBank` to reuse
     built factors across scorers/sessions over the same data (CV-LR
-    only — passing one with method='cv' raises).  The exact scorer
-    ignores the engine options except that `engine="sharded"` is
+    only — passing one with method='cv' raises).  gram_cache: a
+    `repro.core.score_common.GramBlockCache` to share frontier Gram
+    blocks across sessions with identical build fingerprints (CV-LR
+    only; the serving layer's job — see `repro.serving`).  The exact
+    scorer ignores the engine options except that `engine="sharded"` is
     rejected (the distributed pipeline is CV-LR only).  config: score
     hyperparameters (`ScoreConfig`; paper defaults).
-
-    The legacy kwargs (`dims`/`discrete`/`batched`/`gram_cache_entries`/
-    `device_bank_mb`) are deprecated shims over the two objects.
     """
-    spec = _resolve_legacy_spec(data, spec, dims, discrete)
-    options = _resolve_legacy_options(
-        options, batched, gram_cache_entries, device_bank_mb
-    )
+    spec = resolve_spec(data, spec=spec)
+    options = _resolve_options(options)
     if method == "cvlr":
         return CVLRScorer(
             data, spec=spec, config=config, options=options,
-            feature_bank=feature_bank,
+            feature_bank=feature_bank, gram_cache=gram_cache,
         )
     if method == "cv":
         if options.engine == "sharded":
@@ -182,6 +114,11 @@ def make_scorer(
             raise ValueError(
                 'feature_bank= requires method="cvlr" — the exact scorer '
                 "builds no low-rank factors"
+            )
+        if gram_cache is not None:
+            raise ValueError(
+                'gram_cache= requires method="cvlr" — the exact scorer '
+                "caches kernel matrices internally"
             )
         return CVScorer(data, spec=spec, config=config)
     raise ValueError(f"unknown scoring method {method!r}")
@@ -225,6 +162,17 @@ class DiscoverySession:
     checkpoint corruption, NaN scores — for tests and recovery
     benchmarks.
 
+    **Serving** (`repro.serving.SessionManager` threads these in; they
+    are inert by default): `tenant` labels the session in structured
+    errors; `EngineOptions(deadline_s=...)` (or an absolute monotonic
+    `deadline_at`) bounds the run's wall clock, checked at every sweep
+    seam and raised as `repro.core.runstate.DeadlineExceeded`;
+    `cancel_event` (a `threading.Event`) cancels the run at the next
+    seam (`repro.core.runstate.SessionCancelled`); `gram_cache` injects
+    a shared Gram-block cache; `serving_info` is a live dict of the
+    admission controller's degradation counters, recorded into every
+    sweep-log entry under ``"serving"``.
+
     Typical use is through `causal_discover`; instantiate directly when
     you want the scorer, the per-sweep log, or custom search parameters:
 
@@ -245,13 +193,24 @@ class DiscoverySession:
         max_subset: int | None = None,
         verbose: bool = False,
         feature_bank=None,
+        gram_cache=None,
         fault_plan: FaultPlan | None = None,
         resume: str = "never",
+        tenant: str | None = None,
+        cancel_event=None,
+        deadline_at: float | None = None,
+        serving_info: dict | None = None,
     ):
-        self.options = options if options is not None else EngineOptions()
+        self.options = _resolve_options(options)
+        self.tenant = tenant
+        self._cancel_event = cancel_event
+        self._deadline_at = deadline_at  # absolute time.monotonic() stamp
+        self._deadline_s = self.options.deadline_s
+        self._t_start: float | None = None
+        self.serving_info = serving_info
         self.scorer = make_scorer(
             data, method=method, spec=spec, options=self.options,
-            config=config, feature_bank=feature_bank,
+            config=config, feature_bank=feature_bank, gram_cache=gram_cache,
         )
         self.spec = self.scorer.view.spec
         self.feature_bank = getattr(self.scorer, "feature_bank", None)
@@ -332,12 +291,41 @@ class DiscoverySession:
                     "families"
                 )
 
+    # -- serving seam: deadline + cancellation -----------------------------
+    def _check_interrupt(self, sweep_idx: int) -> None:
+        """Deadline/cancellation gate, hit at every sweep seam.  Cheap
+        (two comparisons) when neither is configured."""
+        if self._cancel_event is not None and self._cancel_event.is_set():
+            raise SessionCancelled(self.tenant, sweep_idx)
+        now = time.monotonic()
+        if self._t_start is None:
+            self._t_start = now
+        deadline_at = self._deadline_at
+        if deadline_at is None and self._deadline_s is not None:
+            deadline_at = self._t_start + self._deadline_s
+        if deadline_at is not None and now > deadline_at:
+            elapsed = now - self._t_start
+            budget = (
+                self._deadline_s
+                if self._deadline_s is not None
+                else elapsed - (now - deadline_at)
+            )
+            raise DeadlineExceeded(self.tenant, sweep_idx, elapsed, budget)
+
     # -- sweep lifecycle (driven by repro.core.ges.ges) -------------------
     def begin_sweep(self, phase: str) -> None:
         sweep_idx = len(self.sweep_log)
+        self._check_interrupt(sweep_idx)
         if self.fault_plan is not None:
+            stall = self.fault_plan.stall_seconds(sweep_idx)
+            if stall > 0:
+                time.sleep(stall)  # injected slow tenant
             if self.fault_plan.should_kill(sweep_idx):
                 raise InjectedFault(f"injected kill at sweep {sweep_idx}")
+            if self.fault_plan.evict_storm:
+                cache = getattr(self.scorer, "gram_cache", None)
+                if cache is not None:
+                    cache.spill_device()  # injected eviction storm
             self.scorer.fault_sweep = sweep_idx
         stats = getattr(self.scorer, "gram_cache", None)
         deg = getattr(self.scorer, "degradations", None)
@@ -360,6 +348,7 @@ class DiscoverySession:
         actually computed (cached configurations cost nothing)."""
         if self._active is None:
             self.begin_sweep("adhoc")
+        self._check_interrupt(self._active["sweep"])
         self._active["n_configs"] = len(configs)
         if self._sharded_hook is not None:
             tel: dict = {}
@@ -388,6 +377,7 @@ class DiscoverySession:
         rec, self._active = self._active, None
         if rec is None:
             return
+        self._check_interrupt(rec["sweep"])
         rec["step"] = _norm_step(step)
         stats0 = rec.pop("_stats0")
         cache = getattr(self.scorer, "gram_cache", None)
@@ -411,6 +401,10 @@ class DiscoverySession:
             delta = {k: deg[k] - deg0.get(k, 0) for k in deg}
             if any(delta.values()):
                 rec["degradations"] = delta
+        if self.serving_info:
+            # admission-controller degradation counters (live dict shared
+            # with the SessionManager): snapshot per sweep
+            rec["serving"] = dict(self.serving_info)
         self.sweep_log.append(rec)
         self._advance_run_state(rec, cpdag)
 
@@ -440,12 +434,29 @@ class DiscoverySession:
             rs.bank_meta = [
                 [list(vk), repr(fp)]
                 for vk, fp in self.feature_bank.metadata()
+                if self._owns_bank_entry(vk, fp)
             ]
         if (
             self._checkpointer is not None
             and rs.sweep % self.options.checkpoint_every == 0
         ):
             self._checkpoint(rs.sweep)
+
+    def _owns_bank_entry(self, vars_key, fp) -> bool:
+        """Fingerprint isolation on a *shared* bank: a checkpoint must
+        record only THIS session's factor family.  Another tenant's
+        entries (different seed/policy/config -> different fingerprint)
+        would poison this tenant's resume — `_verify_bank_meta` rightly
+        refuses foreign fingerprints."""
+        fp_fn = getattr(self.scorer, "_feature_fingerprint", None)
+        policy = getattr(self.scorer, "policy", None)
+        if fp_fn is None or policy is None:
+            return True
+        try:
+            choice = policy.resolve(tuple(vars_key), self.scorer.view.spec)
+            return fp_fn(tuple(vars_key), choice) == fp
+        except Exception:
+            return False  # e.g. a foreign tenant's out-of-range vars_key
 
     def _checkpoint(self, step: int) -> None:
         self._checkpointer.save(step, self.run_state.to_tree())
@@ -499,13 +510,6 @@ def causal_discover(
     verbose: bool = False,
     resume: str = "never",
     fault_plan: FaultPlan | None = None,
-    # -- deprecated (one release): the pre-PR-4 loose kwargs -------------
-    dims=_UNSET,
-    discrete=_UNSET,
-    batched=_UNSET,
-    gram_cache_entries=_UNSET,
-    device_bank_mb=_UNSET,
-    batch_hook=_UNSET,
 ) -> GESResult:
     """GES + (CV-LR | CV) generalized score on an (n, cols) data matrix.
 
@@ -528,33 +532,13 @@ def causal_discover(
     `repro.core.runstate.FaultPlan` injecting deterministic failures
     (tests/benchmarks).
 
-    The legacy kwargs are deprecated shims: `dims`/`discrete` fold into
-    `spec`, `batched`/`gram_cache_entries`/`device_bank_mb` into
-    `options`, and `batch_hook=` is replaced by
-    `EngineOptions(engine="sharded")` for the supported paths.
+    The pre-PR-4 loose kwargs (`dims`/`discrete`/`batched`/
+    `gram_cache_entries`/`device_bank_mb`/`batch_hook`) are gone after
+    their deprecation release: `dims`/`discrete` fold into `spec`, the
+    engine knobs into `options`, and `batch_hook=` is
+    `EngineOptions(engine="sharded")` (the low-level `repro.core.ges.ges`
+    still accepts a raw hook for custom pipelines).
     """
-    spec = _resolve_legacy_spec(data, spec, dims, discrete)
-    options = _resolve_legacy_options(
-        options, batched, gram_cache_entries, device_bank_mb
-    )
-    # an explicit batch_hook=None was the old default ("no hook") — treat
-    # it as not passed rather than warning about a no-op value
-    if batch_hook is not _UNSET and batch_hook is not None:
-        if resume != "never" or fault_plan is not None:
-            raise ValueError(
-                "resume=/fault_plan= require the session engine — drop the "
-                'deprecated batch_hook= (use EngineOptions(engine="sharded"))'
-            )
-        _deprecated(
-            "causal_discover(batch_hook=...)",
-            'select options=EngineOptions(engine="sharded") instead',
-        )
-        scorer = make_scorer(
-            data, method=method, spec=spec, options=options, config=config
-        )
-        return ges(
-            scorer, max_subset=max_subset, batch_hook=batch_hook, verbose=verbose
-        )
     return DiscoverySession(
         data,
         spec=spec,

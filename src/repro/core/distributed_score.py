@@ -372,12 +372,6 @@ def sharded_batch_hook(
     tel.setdefault("resharded", 0)
     tel.setdefault("dead_workers", [])
     tel.setdefault("fallback_keys", 0)
-    # factors are built once, on this thread, before shards dispatch:
-    # worker threads then only read the feature bank (no concurrent builds)
-    for node, parents in todo:
-        scorer.features((node,))
-        if parents:
-            scorer.features(parents)
     results = _run_resharding(
         scorer, todo, cfg.lmbda, cfg.gamma, precision,
         workers, retries, timeout_s, fault_plan, sweep, tel,

@@ -52,6 +52,48 @@ class InjectedFault(RuntimeError):
     """Raised by FaultPlan injection points (a simulated crash)."""
 
 
+class DeadlineExceeded(RuntimeError):
+    """A session ran past its per-request deadline and was shed at a sweep
+    seam (`begin_sweep` / `score_frontier` / `end_sweep`).  Structured:
+    `to_dict()` is what a serving layer returns to the tenant."""
+
+    def __init__(self, tenant, sweep, elapsed_s, deadline_s, retry_after_s=None):
+        self.tenant = tenant
+        self.sweep = sweep
+        self.elapsed_s = float(elapsed_s)
+        self.deadline_s = float(deadline_s)
+        self.retry_after_s = retry_after_s
+        super().__init__(
+            f"deadline exceeded for tenant {tenant!r} at sweep {sweep}: "
+            f"{self.elapsed_s:.3f}s elapsed > {self.deadline_s:.3f}s budget"
+        )
+
+    def to_dict(self) -> dict:
+        return {
+            "error": "deadline_exceeded",
+            "tenant": self.tenant,
+            "sweep": self.sweep,
+            "elapsed_s": round(self.elapsed_s, 4),
+            "deadline_s": self.deadline_s,
+            "retry_after_s": self.retry_after_s,
+        }
+
+
+class SessionCancelled(RuntimeError):
+    """A session's cancel token fired (mid-request kill / manager
+    shutdown); raised at the next sweep seam."""
+
+    def __init__(self, tenant, sweep):
+        self.tenant = tenant
+        self.sweep = sweep
+        super().__init__(
+            f"session cancelled for tenant {tenant!r} at sweep {sweep}"
+        )
+
+    def to_dict(self) -> dict:
+        return {"error": "cancelled", "tenant": self.tenant, "sweep": self.sweep}
+
+
 @dataclasses.dataclass(frozen=True)
 class FaultPlan:
     """Declarative fault injection for tests and recovery benchmarks.
@@ -74,6 +116,19 @@ class FaultPlan:
     fail_rungs: pretend the first `fail_rungs` rungs of the degradation
       ladder (jittered retry, f64 re-solve) also fail, so tests can force
       escalation all the way to the exact-score fallback.
+
+    Concurrent-serving faults (multi-tenant injection, PR 7):
+
+    stall_sweep: ``(sweep, seconds)`` — the session sleeps that long in
+      `begin_sweep` when the sweep counter matches: a slow/stalled tenant
+      that should trip its deadline (and must not corrupt anyone else).
+    build_delay_s: stretch every feature build by this many seconds — a
+      bank-contention storm widener, forcing concurrent tenants onto the
+      FeatureBank's single-flight build path.
+    evict_storm: an adversarial tenant that spills the (possibly shared)
+      Gram cache's entire device tier at every one of its sweep starts —
+      eviction racing a competing session's sweep; competitors must
+      re-promote/recompute and stay bitwise-correct.
     """
 
     kill_at_sweep: int | None = None
@@ -83,6 +138,9 @@ class FaultPlan:
     corrupt_checkpoint: int | None = None
     nan_scores: tuple | None = None
     fail_rungs: int = 0
+    stall_sweep: tuple | None = None
+    build_delay_s: float = 0.0
+    evict_storm: bool = False
 
     def __post_init__(self):
         if self.shard_fault not in ("raise", "hang"):
@@ -95,10 +153,24 @@ class FaultPlan:
         if self.nan_scores is not None:
             s, c = self.nan_scores
             object.__setattr__(self, "nan_scores", (int(s), int(c)))
+        if self.stall_sweep is not None:
+            s, sec = self.stall_sweep
+            object.__setattr__(self, "stall_sweep", (int(s), float(sec)))
+        if self.build_delay_s < 0:
+            raise ValueError(
+                f"build_delay_s must be >= 0, got {self.build_delay_s!r}"
+            )
 
     # -- injection predicates (all no-ops on a default plan) --------------
     def should_kill(self, sweep: int) -> bool:
         return self.kill_at_sweep is not None and sweep == self.kill_at_sweep
+
+    def stall_seconds(self, sweep: int) -> float:
+        """Seconds to stall at this sweep's `begin_sweep` (0.0 = none)."""
+        if self.stall_sweep is None:
+            return 0.0
+        s, sec = self.stall_sweep
+        return sec if int(sweep) == s else 0.0
 
     def shard_faulted(self, worker: int, sweep) -> bool:
         """Persistent from the kill sweep on: a dead worker stays dead."""

@@ -14,6 +14,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import threading
 
 import numpy as np
 
@@ -143,6 +144,16 @@ class GramBlockCache:
     tier; the CV-LR scorer sizes both to the sweep working set (see
     ``CVLRScorer.DEFAULT_GRAM_CACHE_ENTRIES`` and
     ``CVLRScorer.DEFAULT_DEVICE_BANK_MB``).
+
+    Concurrency (lock striping): two locks make a shared cache safe for
+    concurrent sessions.  A *state* lock guards every LRU/counter mutation,
+    so eviction/promotion/hit counts can never be lost to a race; a
+    separate reentrant *dispatch* lock (``sweep_guard``) serializes whole
+    device-sweep spans — ``DeviceGramBank.data`` updates are donated
+    in-place writes, so two interleaved sweeps would read each other's
+    consumed buffers.  The engine takes ``sweep_guard`` around each
+    frontier dispatch; per-block host-tier get/put from other threads
+    stays concurrent under the state lock alone.
     """
 
     def __init__(
@@ -157,6 +168,8 @@ class GramBlockCache:
         self._store: collections.OrderedDict = collections.OrderedDict()
         self.max_entries = max_entries
         self.device_bank_mb = device_bank_mb
+        self._lock = threading.RLock()  # state: LRU order + counters
+        self._dispatch_lock = threading.RLock()  # whole device-sweep spans
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -175,10 +188,18 @@ class GramBlockCache:
 
     # -- shared bookkeeping ----------------------------------------------
     def __contains__(self, key) -> bool:
-        return key in self._store or key in self._dev
+        with self._lock:
+            return key in self._store or key in self._dev
 
     def __len__(self) -> int:
-        return len(self._store) + len(self._dev)
+        with self._lock:
+            return len(self._store) + len(self._dev)
+
+    def sweep_guard(self):
+        """Reentrant lock serializing a full engine dispatch (device sweep
+        included) over this cache.  Sessions sharing one cache take it
+        around `prefetch`; a private cache pays one uncontended acquire."""
+        return self._dispatch_lock
 
     def _touched(self, key) -> None:
         self._tick += 1
@@ -243,45 +264,48 @@ class GramBlockCache:
         engine's fallback sweeps, the exact scorer — always see the same
         numpy interface regardless of where the block lives.
         """
-        if key in self._store:
-            value = self._store[key]
-            self._store.move_to_end(key)
-            self._touched(key)
-            self.hits += 1
-            return value
-        if key in self._dev:
-            widths, slot, ea, eb = self._dev[key]
-            self._dev.move_to_end(key)
-            self._touched(key)
-            self.hits += 1
-            blk = self._banks[widths].data[slot]
-            return np.ascontiguousarray(np.asarray(blk)[:, :ea, :eb])
-        self.misses += 1
-        return None
+        with self._lock:
+            if key in self._store:
+                value = self._store[key]
+                self._store.move_to_end(key)
+                self._touched(key)
+                self.hits += 1
+                return value
+            if key in self._dev:
+                widths, slot, ea, eb = self._dev[key]
+                self._dev.move_to_end(key)
+                self._touched(key)
+                self.hits += 1
+                blk = self._banks[widths].data[slot]
+                return np.ascontiguousarray(np.asarray(blk)[:, :ea, :eb])
+            self.misses += 1
+            return None
 
     def put(self, key, value) -> None:
-        if key in self._dev:  # host put supersedes a device entry
-            widths, slot, _, _ = self._dev.pop(key)
-            self._banks[widths].free.append(slot)
-        self._store[key] = value
-        self._store.move_to_end(key)
-        self._touched(key)
-        self._enforce_entry_bound()
+        with self._lock:
+            if key in self._dev:  # host put supersedes a device entry
+                widths, slot, _, _ = self._dev.pop(key)
+                self._banks[widths].free.append(slot)
+            self._store[key] = value
+            self._store.move_to_end(key)
+            self._touched(key)
+            self._enforce_entry_bound()
 
     def clear(self) -> None:
-        self._store.clear()
-        self._banks.clear()
-        self._dev.clear()
-        self._touch.clear()
-        self._misplaced.clear()
-        self._pinned = frozenset()
-        self._sweep_specs = {}
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-        self.promotions = 0
-        self.spills = 0
-        self.bank_fallbacks = 0
+        with self._lock:
+            self._store.clear()
+            self._banks.clear()
+            self._dev.clear()
+            self._touch.clear()
+            self._misplaced.clear()
+            self._pinned = frozenset()
+            self._sweep_specs = {}
+            self.hits = 0
+            self.misses = 0
+            self.evictions = 0
+            self.promotions = 0
+            self.spills = 0
+            self.bank_fallbacks = 0
 
     # -- device tier -------------------------------------------------------
     @property
@@ -290,18 +314,48 @@ class GramBlockCache:
 
     @property
     def device_nbytes(self) -> int:
-        return sum(b.nbytes for b in self._banks.values())
+        with self._lock:
+            return sum(b.nbytes for b in self._banks.values())
+
+    def spill_device(self) -> int:
+        """Degradation-ladder rung: demote every *unpinned* device entry to
+        the host tier and drop the emptied bank tensors, freeing device
+        bytes without losing any block.  Returns the number spilled."""
+        with self._lock:
+            victims = [k for k in self._dev if k not in self._pinned]
+            for key in victims:
+                self._spill(key)
+            if not self._dev:
+                self._banks.clear()
+            return len(victims)
+
+    def set_device_budget(self, device_bank_mb: float | None) -> None:
+        """Degradation-ladder rung: lower (or disable) the device-tier byte
+        budget.  Existing device entries above the new budget are spilled
+        to host; future sweeps size themselves to the new budget."""
+        with self._lock:
+            self.device_bank_mb = device_bank_mb
+            if not self.device_enabled:
+                self.spill_device()
+                return
+            budget = int(float(device_bank_mb) * 2**20)
+            if self.device_nbytes > budget:
+                # bank tensors are per-width monoliths: reclaiming bytes
+                # means emptying them, so over-budget shrink spills all
+                self.spill_device()
 
     def bank_data(self, widths: tuple):
         """The (n_slots, q, wa, wb) device tensor for a width pair, or None."""
-        bank = self._banks.get(tuple(widths))
-        return None if bank is None else bank.data
+        with self._lock:
+            bank = self._banks.get(tuple(widths))
+            return None if bank is None else bank.data
 
     def set_bank_data(self, widths: tuple, data) -> None:
         """Engine write-back after a fused compute+scatter into the bank."""
-        bank = self._banks[tuple(widths)]
-        assert data.shape == bank.data.shape, (data.shape, bank.data.shape)
-        bank.data = data
+        with self._lock:
+            bank = self._banks[tuple(widths)]
+            assert data.shape == bank.data.shape, (data.shape, bank.data.shape)
+            bank.data = data
 
     def _spill(self, key) -> None:
         """Move a device entry's block to the host tier (frees its slot)."""
@@ -329,6 +383,10 @@ class GramBlockCache:
         ``bank_fallbacks``) when the working set cannot be device-resident:
         the caller must then run its host path for this sweep.
         """
+        with self._lock:
+            return self._begin_device_sweep_locked(specs, q, dtype)
+
+    def _begin_device_sweep_locked(self, specs: dict, q: int, dtype) -> bool:
         if not self.device_enabled:
             return False
         if self.max_entries is not None and len(specs) > self.max_entries:
@@ -396,42 +454,45 @@ class GramBlockCache:
         return True
 
     def end_device_sweep(self) -> None:
-        self._pinned = frozenset()
-        self._sweep_specs = {}
-        self._enforce_entry_bound()
+        with self._lock:
+            self._pinned = frozenset()
+            self._sweep_specs = {}
+            self._enforce_entry_bound()
 
     def device_lookup(self, key):
         """Counted device lookup during a sweep: returns the key's slot (a
         host-tier hit is promoted into a fresh slot first), or None on miss
         — the caller computes the block and ``device_adopt``s it."""
-        ent = self._dev.get(key)
-        if ent is not None:
-            self._dev.move_to_end(key)
-            self._touched(key)
-            self.hits += 1
-            return ent[1]
-        if key in self._store:
-            self.hits += 1
-            blk = self._store.pop(key)
-            wa, wb, ea, eb = self._sweep_specs[key]
-            slot = self._adopt(key, wa, wb, ea, eb)
-            bank = self._banks[(wa, wb)]
-            row = np.zeros((bank.q, wa, wb), bank.dtype)
-            row[:, : blk.shape[1], : blk.shape[2]] = blk
-            bank.data = _bank_set_row(
-                bank.data, np.int32(slot), jnp.asarray(row)
-            )
-            self.promotions += 1
-            return slot
-        self.misses += 1
-        return None
+        with self._lock:
+            ent = self._dev.get(key)
+            if ent is not None:
+                self._dev.move_to_end(key)
+                self._touched(key)
+                self.hits += 1
+                return ent[1]
+            if key in self._store:
+                self.hits += 1
+                blk = self._store.pop(key)
+                wa, wb, ea, eb = self._sweep_specs[key]
+                slot = self._adopt(key, wa, wb, ea, eb)
+                bank = self._banks[(wa, wb)]
+                row = np.zeros((bank.q, wa, wb), bank.dtype)
+                row[:, : blk.shape[1], : blk.shape[2]] = blk
+                bank.data = _bank_set_row(
+                    bank.data, np.int32(slot), jnp.asarray(row)
+                )
+                self.promotions += 1
+                return slot
+            self.misses += 1
+            return None
 
     def device_adopt(self, key) -> int:
         """Assign a slot to a freshly computed block (capacity was arranged
         by ``begin_device_sweep``); the engine scatters the block into the
         bank tensor itself (fused with the Gram kernel when possible)."""
-        wa, wb, ea, eb = self._sweep_specs[key]
-        return self._adopt(key, wa, wb, ea, eb)
+        with self._lock:
+            wa, wb, ea, eb = self._sweep_specs[key]
+            return self._adopt(key, wa, wb, ea, eb)
 
     def _adopt(self, key, wa, wb, ea, eb) -> int:
         bank = self._banks[(wa, wb)]
@@ -444,19 +505,20 @@ class GramBlockCache:
 
     @property
     def stats(self) -> dict:
-        return {
-            "hits": self.hits,
-            "misses": self.misses,
-            "evictions": self.evictions,
-            "entries": len(self),
-            "max_entries": self.max_entries,
-            "device_entries": len(self._dev),
-            "device_bytes": self.device_nbytes,
-            "device_bank_mb": self.device_bank_mb,
-            "promotions": self.promotions,
-            "spills": self.spills,
-            "bank_fallbacks": self.bank_fallbacks,
-        }
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "entries": len(self),
+                "max_entries": self.max_entries,
+                "device_entries": len(self._dev),
+                "device_bytes": self.device_nbytes,
+                "device_bank_mb": self.device_bank_mb,
+                "promotions": self.promotions,
+                "spills": self.spills,
+                "bank_fallbacks": self.bank_fallbacks,
+            }
 
 
 def _pow2_slots(k: int) -> int:

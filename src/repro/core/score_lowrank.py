@@ -905,6 +905,7 @@ class CVLRScorer(ScorerBase):
         options: EngineOptions | None = None,
         precision: str = _UNSET,
         feature_bank: FeatureBank | None = None,
+        gram_cache: GramBlockCache | None = None,
     ):
         """`spec` (a `repro.core.spec.DataSpec`) supersedes the legacy
         `dims`/`discrete` lists; `options` (a `repro.core.spec.
@@ -922,7 +923,12 @@ class CVLRScorer(ScorerBase):
         `feature_bank` (a `repro.features.bank.FeatureBank`) holds built
         factors — pass the same bank to several scorers over the same
         data (and fold layout) to skip rebuilding across sessions; by
-        default every scorer owns a fresh one."""
+        default every scorer owns a fresh one.  `gram_cache` (a
+        `repro.core.score_common.GramBlockCache`) likewise injects a
+        shared Gram-block cache — the serving layer hands sessions with
+        identical build fingerprints one cache so frontier Gram blocks
+        are computed once process-wide; callers must guarantee the
+        fingerprint match (the cache keys carry no config identity)."""
         loose = {
             "batched": batched,
             "gram_cache_entries": gram_cache_entries,
@@ -969,8 +975,12 @@ class CVLRScorer(ScorerBase):
         self.feature_bank = (
             feature_bank if feature_bank is not None else FeatureBank()
         )
-        self.gram_cache = GramBlockCache(
-            max_entries=gram_cache_entries, device_bank_mb=device_bank_mb
+        self.gram_cache = (
+            gram_cache
+            if gram_cache is not None
+            else GramBlockCache(
+                max_entries=gram_cache_entries, device_bank_mb=device_bank_mb
+            )
         )
         # Numerical graceful degradation (the jitter -> f64 -> exact
         # escalation ladder in `_recover_score`): cumulative counters,
@@ -1028,6 +1038,13 @@ class CVLRScorer(ScorerBase):
         # module-level import here would make `import repro.features` cycle.
         from repro.features.backends import BuildContext, build_features
 
+        plan = self.fault_plan
+        if plan is not None and plan.build_delay_s:
+            # injected contention storm: stretch the build so concurrent
+            # requesters pile onto the bank's single-flight slot
+            import time as _time
+
+            _time.sleep(float(plan.build_delay_s))
         cols = self.view.columns(vars_key)[self.perm]
         known, mask = self._spec_build_inputs(vars_key)
         ctx = BuildContext(
@@ -1181,27 +1198,32 @@ class CVLRScorer(ScorerBase):
         z_sets = sorted({ps for _, ps in todo})
         x_index = {k: j for j, k in enumerate(x_sets)}
         z_index = {k: j for j, k in enumerate(z_sets)}
-        lam_x_bank = [self.features(k) for k in x_sets]
-        zero = jnp.zeros_like(lam_x_bank[0])
-        lam_z_bank = [self.features(k) if k else zero for k in z_sets]
-        m_eff_x = [self.m_eff_log[k] for k in x_sets]
-        m_eff_z = [self.m_eff_log[k] if k else 0 for k in z_sets]
-        pairs = np.array([[x_index[(i,)], z_index[ps]] for i, ps in todo])
-        scores = cvlr_scores_batched(
-            lam_x_bank,
-            lam_z_bank,
-            pairs,
-            self.config.q_folds,
-            self.config.lmbda,
-            self.config.gamma,
-            m_eff_x=m_eff_x,
-            m_eff_z=m_eff_z,
-            x_keys=x_sets,
-            z_keys=z_sets,
-            gram_cache=self.gram_cache,
-            timings=timings,
-            precision=self.precision,
-        )
+        # The whole dispatch — factor builds included — runs under the
+        # cache's sweep guard: the device sweep's donated bank writes must
+        # never interleave with a competing session's sweep over a shared
+        # cache.  A private cache pays one uncontended acquire.
+        with self.gram_cache.sweep_guard():
+            lam_x_bank = [self.features(k) for k in x_sets]
+            zero = jnp.zeros_like(lam_x_bank[0])
+            lam_z_bank = [self.features(k) if k else zero for k in z_sets]
+            m_eff_x = [self.m_eff_log[k] for k in x_sets]
+            m_eff_z = [self.m_eff_log[k] if k else 0 for k in z_sets]
+            pairs = np.array([[x_index[(i,)], z_index[ps]] for i, ps in todo])
+            scores = cvlr_scores_batched(
+                lam_x_bank,
+                lam_z_bank,
+                pairs,
+                self.config.q_folds,
+                self.config.lmbda,
+                self.config.gamma,
+                m_eff_x=m_eff_x,
+                m_eff_z=m_eff_z,
+                x_keys=x_sets,
+                z_keys=z_sets,
+                gram_cache=self.gram_cache,
+                timings=timings,
+                precision=self.precision,
+            )
         if self.fault_plan is not None:
             scores = self.fault_plan.corrupt_scores(scores, self.fault_sweep)
         for key, s in zip(todo, scores):

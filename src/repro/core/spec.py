@@ -380,6 +380,13 @@ class EngineOptions:
       in-process through the same stacked pipeline the shards run (so
       recovery stays score-bitwise-identical).  The default (1 worker)
       keeps the pre-fault-tolerance single-dispatch stacked pipeline.
+
+    deadline_s: per-request wall-clock budget (seconds).  The
+      `DiscoverySession` checks it at every sweep seam (`begin_sweep` /
+      `score_frontier` / `end_sweep`) and raises a structured
+      `repro.core.runstate.DeadlineExceeded` once the budget is spent —
+      the serving layer's load-shedding hook (`repro.serving`).  None
+      (the default) means no deadline.
     """
 
     engine: str = "batched"
@@ -392,6 +399,7 @@ class EngineOptions:
     shard_workers: int = 1
     shard_retries: int = 2
     shard_timeout_s: float | None = None
+    deadline_s: float | None = None
 
     def __post_init__(self):
         if self.engine not in ENGINES:
@@ -453,6 +461,13 @@ class EngineOptions:
                     f"{self.shard_timeout_s!r}"
                 )
             object.__setattr__(self, "shard_timeout_s", t)
+        if self.deadline_s is not None:
+            dl = float(self.deadline_s)
+            if math.isnan(dl) or dl <= 0:
+                raise ValueError(
+                    f"deadline_s must be > 0 or None, got {self.deadline_s!r}"
+                )
+            object.__setattr__(self, "deadline_s", dl)
 
     @property
     def batched(self) -> bool:

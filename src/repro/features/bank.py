@@ -1,4 +1,4 @@
-"""FeatureBank: the session-owned cache of built low-rank factors.
+"""FeatureBank: the shareable cache of built low-rank factors.
 
 Building a variable set's factor is the expensive, sequential front of
 the CV-LR pipeline (ICL's greedy pivot loop is O(n m) *per pivot*); a
@@ -14,23 +14,47 @@ policy seed, and the score-config build knobs (m_max, eta, width_factor,
 fold layout).  Two scorers sharing a bank therefore can never serve each
 other a factor built under different routing; sharing a bank across
 *different data matrices* is the caller's contract to avoid (the bank is
-meant to be owned by a `repro.core.api.DiscoverySession` — or passed
-between sessions over the same dataset, which is exactly the multi-sweep
-rebuild-avoidance win).
+meant to be owned by a `repro.core.api.DiscoverySession`, passed between
+sessions over the same dataset, or shared process-wide by a
+`repro.serving.SessionManager`).
 
-Telemetry: hit/miss/build counters plus cumulative build seconds
-(`stats`, surfaced per sweep by the session log) and per-entry
+Concurrency: every public method is safe under concurrent callers.  A
+single RLock guards the LRU order and the counters; builds run *outside*
+that lock under per-key single-flight deduplication — the first caller
+of a missing key becomes the build leader, every concurrent caller of
+the same key waits on the leader's in-flight slot and receives the same
+`FeatureResult` object, so N tenants requesting one factor trigger
+exactly one build (`single_flight_waits` counts the followers).  A
+leader that raises releases the slot; one waiting follower is promoted
+to retry the build rather than caching the failure.
+
+Telemetry: hit/miss/build/single-flight counters plus cumulative build
+seconds (`stats`, surfaced per sweep by the session log) and per-entry
 rank/backend/residual records (`entry_log`).
 """
 
 from __future__ import annotations
 
 import collections
+import threading
 import time
 
 
+class _InFlight:
+    """One in-progress build: followers wait on `done`, the leader
+    publishes `result` (or `exc`) before setting it."""
+
+    __slots__ = ("done", "result", "exc")
+
+    def __init__(self):
+        self.done = threading.Event()
+        self.result = None
+        self.exc = None
+
+
 class FeatureBank:
-    """Keyed LRU cache of built factors with build/hit/miss telemetry."""
+    """Keyed LRU cache of built factors with build/hit/miss telemetry,
+    safe for concurrent callers (single-flight builds, locked LRU)."""
 
     def __init__(self, max_entries: int | None = None):
         if max_entries is not None and int(max_entries) < 1:
@@ -39,10 +63,13 @@ class FeatureBank:
             )
         self.max_entries = None if max_entries is None else int(max_entries)
         self._store: collections.OrderedDict = collections.OrderedDict()
+        self._lock = threading.RLock()
+        self._building: dict = {}  # key -> _InFlight
         self.hits = 0
         self.misses = 0
         self.builds = 0
         self.evictions = 0
+        self.single_flight_waits = 0
         self.build_s = 0.0
 
     # -- core interface ---------------------------------------------------
@@ -53,6 +80,10 @@ class FeatureBank:
     def lookup(self, vars_key, fingerprint):
         """Counted lookup; returns the FeatureResult or None."""
         key = self.key(vars_key, fingerprint)
+        with self._lock:
+            return self._lookup_locked(key)
+
+    def _lookup_locked(self, key):
         res = self._store.get(key)
         if res is None:
             self.misses += 1
@@ -63,6 +94,10 @@ class FeatureBank:
 
     def put(self, vars_key, fingerprint, result) -> None:
         key = self.key(vars_key, fingerprint)
+        with self._lock:
+            self._put_locked(key, result)
+
+    def _put_locked(self, key, result) -> None:
         self._store[key] = result
         self._store.move_to_end(key)
         if self.max_entries is not None:
@@ -72,24 +107,60 @@ class FeatureBank:
 
     def get_or_build(self, vars_key, fingerprint, build_fn):
         """The scorer's entry: counted lookup, else build (timed) + cache.
-        `build_fn` must return a `FeatureResult`."""
-        res = self.lookup(vars_key, fingerprint)
-        if res is not None:
-            return res
+        `build_fn` must return a `FeatureResult`.  Concurrent callers of
+        the same key are deduplicated: one builds, the rest wait and share
+        the result."""
+        key = self.key(vars_key, fingerprint)
+        while True:
+            with self._lock:
+                res = self._lookup_locked(key)
+                if res is not None:
+                    return res
+                slot = self._building.get(key)
+                if slot is None:
+                    slot = _InFlight()
+                    self._building[key] = slot
+                    leader = True
+                else:
+                    self.single_flight_waits += 1
+                    leader = False
+            if leader:
+                return self._build_as_leader(key, slot, build_fn)
+            slot.done.wait()
+            if slot.exc is None:
+                return slot.result
+            # the leader failed: loop — either another follower already
+            # became the new leader, or this caller will
+
+    def _build_as_leader(self, key, slot, build_fn):
         t0 = time.perf_counter()
-        res = build_fn()
-        self.build_s += time.perf_counter() - t0
-        self.builds += 1
-        self.put(vars_key, fingerprint, res)
+        try:
+            res = build_fn()
+        except BaseException as exc:
+            slot.exc = exc
+            with self._lock:
+                self._building.pop(key, None)
+            slot.done.set()
+            raise
+        dt = time.perf_counter() - t0
+        with self._lock:
+            self.build_s += dt
+            self.builds += 1
+            self._put_locked(key, res)
+            self._building.pop(key, None)
+        slot.result = res
+        slot.done.set()
         return res
 
     def clear(self) -> None:
-        self._store.clear()
-        self.hits = 0
-        self.misses = 0
-        self.builds = 0
-        self.evictions = 0
-        self.build_s = 0.0
+        with self._lock:
+            self._store.clear()
+            self.hits = 0
+            self.misses = 0
+            self.builds = 0
+            self.evictions = 0
+            self.single_flight_waits = 0
+            self.build_s = 0.0
 
     def metadata(self) -> list:
         """Checkpointable identity of every cached entry: ``(vars_key,
@@ -97,33 +168,48 @@ class FeatureBank:
         `repro.core.runstate.RunState` records — factors are cheap to
         rebuild, so resume verifies fingerprints instead of restoring
         device arrays."""
-        return list(self._store.keys())
+        with self._lock:
+            return list(self._store.keys())
 
     # -- telemetry --------------------------------------------------------
     def __len__(self) -> int:
-        return len(self._store)
+        with self._lock:
+            return len(self._store)
+
+    @property
+    def nbytes(self) -> int:
+        """Approximate host+device bytes held by cached factors."""
+        with self._lock:
+            total = 0
+            for res in self._store.values():
+                factor = getattr(res, "factor", None)
+                total += int(getattr(factor, "nbytes", 0) or 0)
+            return total
 
     @property
     def stats(self) -> dict:
-        return {
-            "hits": self.hits,
-            "misses": self.misses,
-            "builds": self.builds,
-            "evictions": self.evictions,
-            "entries": len(self._store),
-            "build_s": round(self.build_s, 4),
-        }
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "builds": self.builds,
+                "evictions": self.evictions,
+                "single_flight_waits": self.single_flight_waits,
+                "entries": len(self._store),
+                "build_s": round(self.build_s, 4),
+            }
 
     def entry_log(self) -> list:
         """Per-entry rank/error telemetry (insertion order): one record
         per cached factor — which backend built which variable set at
         what live rank and trace residual."""
-        return [
-            {
-                "vars": key[0],
-                "backend": res.backend,
-                "m_eff": res.m_eff,
-                "gram_resid": res.info.get("gram_resid"),
-            }
-            for key, res in self._store.items()
-        ]
+        with self._lock:
+            return [
+                {
+                    "vars": key[0],
+                    "backend": res.backend,
+                    "m_eff": res.m_eff,
+                    "gram_resid": res.info.get("gram_resid"),
+                }
+                for key, res in self._store.items()
+            ]

@@ -1,23 +1,37 @@
-"""Batched serving driver: prefill a batch of prompts, then greedy-decode
-with the KV cache.  Runs reduced configs on CPU; the same step functions
-lower on the production mesh (see dryrun.py decode cells).
+"""Serving drivers.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama_1b \
-      --batch 4 --prompt-len 32 --gen 16
+Two modes behind one entrypoint:
+
+* ``--mode lm`` (default) — the original batched LM driver: prefill a
+  batch of prompts, then greedy-decode with the KV cache.  Runs reduced
+  configs on CPU; the same step functions lower on the production mesh
+  (see dryrun.py decode cells).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama_1b \
+        --batch 4 --prompt-len 32 --gen 16
+
+* ``--mode discovery`` — a multi-tenant causal-discovery request loop
+  over `repro.serving.SessionManager`: N tenants submit discovery
+  requests against one dataset and one shared feature bank; each request
+  resolves to a CPDAG or a structured error (shed / deadline /
+  cancelled), and the loop ends with the manager's telemetry (admission
+  stats, p50/p95 latency, shared-bank counters, degradation-ladder
+  rungs).
+
+    PYTHONPATH=src python -m repro.launch.serve --mode discovery \
+        --tenants 4 --n 400 --d 6 --deadline-s 120
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.models.registry import load_arch
 
-
+# -- LM mode ---------------------------------------------------------------
 def serve(
     arch: str = "tinyllama_1b",
     batch: int = 4,
@@ -26,6 +40,11 @@ def serve(
     seed: int = 0,
     greedy: bool = True,
 ):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.registry import load_arch
+
     cfg, model = load_arch(arch, reduced=True)
     if not hasattr(model, "prefill"):
         raise SystemExit(f"{arch} has no prefill path in this driver")
@@ -60,14 +79,108 @@ def serve(
     return generated
 
 
+# -- discovery mode --------------------------------------------------------
+def _chain_data(n: int, d: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    cols = [rng.standard_normal(n)]
+    for _ in range(d - 1):
+        cols.append(np.tanh(cols[-1]) + 0.4 * rng.standard_normal(n))
+    return np.stack(cols, axis=1)
+
+
+def serve_discovery(
+    tenants: int = 4,
+    n: int = 400,
+    d: int = 6,
+    seed: int = 0,
+    deadline_s: float | None = None,
+    max_concurrent: int = 4,
+    queue_limit: int = 16,
+    device_budget_mb: float | None = None,
+):
+    """The ``--mode discovery`` request loop: submit one request per
+    tenant, drain the tickets, print one structured line per request and
+    a final telemetry report."""
+    from repro.serving import (
+        DiscoveryRequest,
+        RequestShed,
+        ServingOptions,
+        SessionManager,
+        structured_error,
+    )
+
+    data = _chain_data(n, d, seed=seed)
+    serving = ServingOptions(
+        max_concurrent=max_concurrent,
+        queue_limit=queue_limit,
+        default_deadline_s=deadline_s,
+        device_budget_mb=device_budget_mb,
+    )
+    results = []
+    with SessionManager(data, serving=serving) as mgr:
+        tickets = []
+        for i in range(tenants):
+            req = DiscoveryRequest(tenant=f"tenant-{i}")
+            try:
+                tickets.append((req.tenant, mgr.submit(req)))
+            except RequestShed as shed:
+                payload = shed.to_dict()
+                results.append(payload)
+                print(f"[serve.discovery] {json.dumps(payload)}")
+        for tenant, ticket in tickets:
+            try:
+                res = ticket.result()
+                payload = {
+                    "tenant": tenant,
+                    "ok": True,
+                    "edges": int((res.cpdag != 0).sum()),
+                    "score": float(res.score),
+                    "latency_s": round(ticket.latency_s, 3),
+                }
+            except Exception as exc:
+                payload = {"tenant": tenant, "ok": False, **structured_error(exc)}
+            results.append(payload)
+            print(f"[serve.discovery] {json.dumps(payload)}")
+        telemetry = mgr.telemetry()
+    print(f"[serve.discovery] telemetry {json.dumps(telemetry)}")
+    return results, telemetry
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--mode", choices=("lm", "discovery"), default="lm",
+        help="lm: batched prefill+decode driver; discovery: multi-tenant "
+        "causal-discovery request loop over repro.serving.SessionManager",
+    )
+    # lm mode
     ap.add_argument("--arch", default="tinyllama_1b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    # discovery mode
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--n", type=int, default=400)
+    ap.add_argument("--d", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--deadline-s", type=float, default=None)
+    ap.add_argument("--max-concurrent", type=int, default=4)
+    ap.add_argument("--queue-limit", type=int, default=16)
+    ap.add_argument("--device-budget-mb", type=float, default=None)
     args = ap.parse_args()
-    serve(args.arch, args.batch, args.prompt_len, args.gen)
+    if args.mode == "discovery":
+        serve_discovery(
+            tenants=args.tenants,
+            n=args.n,
+            d=args.d,
+            seed=args.seed,
+            deadline_s=args.deadline_s,
+            max_concurrent=args.max_concurrent,
+            queue_limit=args.queue_limit,
+            device_budget_mb=args.device_budget_mb,
+        )
+    else:
+        serve(args.arch, args.batch, args.prompt_len, args.gen)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,32 @@
+"""Multi-tenant discovery serving (`repro.serving`).
+
+`SessionManager` admits concurrent `DiscoverySession`s over one shared
+`FeatureBank` / per-workload `GramBlockCache`; `manager.py` has the
+architecture, `errors.py` the structured failure vocabulary.
+"""
+
+from repro.serving.errors import (
+    DeadlineExceeded,
+    InjectedFault,
+    RequestShed,
+    SessionCancelled,
+    structured_error,
+)
+from repro.serving.manager import (
+    DiscoveryRequest,
+    ServingOptions,
+    SessionManager,
+    SessionTicket,
+)
+
+__all__ = [
+    "DeadlineExceeded",
+    "DiscoveryRequest",
+    "InjectedFault",
+    "RequestShed",
+    "ServingOptions",
+    "SessionCancelled",
+    "SessionManager",
+    "SessionTicket",
+    "structured_error",
+]

@@ -1,0 +1,57 @@
+"""Structured serving errors.
+
+Every way a request can fail without a tenant bug maps to one exception
+type carrying a `to_dict()` payload — the admission controller never
+wedges a queue on a misbehaving request, it *rejects with structure*:
+
+* `RequestShed` — admission refused (queue full / manager shutting
+  down); carries ``retry_after_s``, the controller's backoff hint.
+* `DeadlineExceeded` (from `repro.core.runstate`) — the per-request
+  wall-clock budget ran out; raised at a sweep seam, or by the admission
+  controller for requests whose deadline passed while queued.
+* `SessionCancelled` (from `repro.core.runstate`) — the request's cancel
+  token fired (client abandon / mid-request kill / manager shutdown).
+
+`structured_error` normalizes any of them (plus `InjectedFault` and
+unexpected exceptions) to the wire-shaped dict `launch/serve.py` prints.
+"""
+
+from __future__ import annotations
+
+from repro.core.runstate import (  # noqa: F401  (re-exported)
+    DeadlineExceeded,
+    InjectedFault,
+    SessionCancelled,
+)
+
+
+class RequestShed(RuntimeError):
+    """Admission refused: the bounded queue is full (or the manager is
+    shutting down).  The request never ran; retry after `retry_after_s`."""
+
+    def __init__(self, tenant, reason: str, retry_after_s: float):
+        self.tenant = tenant
+        self.reason = reason
+        self.retry_after_s = float(retry_after_s)
+        super().__init__(
+            f"request from tenant {tenant!r} shed ({reason}); "
+            f"retry after {self.retry_after_s:.2f}s"
+        )
+
+    def to_dict(self) -> dict:
+        return {
+            "error": "shed",
+            "tenant": self.tenant,
+            "reason": self.reason,
+            "retry_after_s": round(self.retry_after_s, 3),
+        }
+
+
+def structured_error(exc: BaseException) -> dict:
+    """The wire-shaped error payload for any request failure."""
+    to_dict = getattr(exc, "to_dict", None)
+    if callable(to_dict):
+        return to_dict()
+    if isinstance(exc, InjectedFault):
+        return {"error": "injected_fault", "detail": str(exc)}
+    return {"error": "internal", "type": type(exc).__name__, "detail": str(exc)}

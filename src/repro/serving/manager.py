@@ -1,0 +1,484 @@
+"""Multi-tenant discovery serving: admission control over shared banks.
+
+The paper's O(n) score makes one discovery run cheap; the serving
+problem is surviving *many concurrent runs over shared state*.  The
+`SessionManager` owns one dataset and admits concurrent
+`repro.core.api.DiscoverySession`s over:
+
+* one process-wide `repro.features.bank.FeatureBank` — safe because the
+  bank's keys carry each factor's full build fingerprint and its builds
+  are single-flight deduplicated (two tenants requesting the same factor
+  trigger exactly one build; see `repro.features.bank`);
+* one `repro.core.score_common.GramBlockCache` **per workload
+  fingerprint** — Gram-block keys carry no config identity, so only
+  sessions whose (score config, feature policy, precision) coincide may
+  share a cache; the manager keys a registry on exactly that fingerprint
+  (per-request ``seed`` overrides land in the fingerprint, giving
+  per-session PRNG isolation for free).  Device sweeps over a shared
+  cache serialize through the cache's ``sweep_guard`` (donated
+  device-bank writes must never interleave).
+
+**Admission** (`submit`): a bounded queue in front of a fixed worker
+pool.  A request past ``queue_limit`` is *shed* with a structured
+`RequestShed` carrying a retry-after estimate (EMA of completed-run
+latency scaled by queue depth) instead of wedging the queue.  Deadlines
+start at submission: the session checks them at every sweep seam
+(`begin_sweep` / `score_frontier` / `end_sweep`) and raises a structured
+`DeadlineExceeded` — a request whose deadline passed while queued sheds
+at its first seam before any scoring.  Cancellation (`SessionTicket.
+cancel`) flips a per-request event checked at the same seam.
+
+**Memory-pressure degradation ladder** (mirrors the numerical ladder of
+PR 6): when ``device_budget_mb`` is set, admission measures the shared
+footprint (feature-bank factor bytes + Gram-cache device bytes) and
+escalates new sessions through three rungs — (1) *shrink*: halve the
+session's ``device_bank_mb`` and lower the shared cache's budget;
+(2) *evict-to-host*: spill every device-tier Gram block and run the
+session on the host path; (3) *reroute*: route new factor builds to the
+cheapest backend (`FeaturePolicy(continuous="rff")`).  Each session's
+sweep log records the rung counters under ``"serving"``.
+
+**Fault isolation**: a tenant's `repro.core.runstate.FaultPlan` rides
+only its own session.  A stalled tenant trips its own deadline; a
+mid-request kill raises its own `InjectedFault`; a bank-contention storm
+(``build_delay_s``) only widens the single-flight window; an eviction
+storm (``evict_storm``) only forces competitors to re-promote — every
+surviving tenant's CPDAG and scores stay bitwise-equal to a solo run
+(tests/test_serving.py is the proof).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+from repro.core.api import DiscoverySession
+from repro.core.score_common import GramBlockCache, ScoreConfig
+from repro.core.spec import DataSpec, EngineOptions, resolve_spec
+from repro.features.bank import FeatureBank
+from repro.features.policy import FeaturePolicy
+from repro.serving.errors import RequestShed, structured_error
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingOptions:
+    """Admission-controller shape: pool size, queue bound, deadlines,
+    shedding backoff, and the memory-pressure ladder's budget.
+
+    max_concurrent: sessions running at once (worker-pool width).
+    queue_limit: admitted-but-not-started requests beyond which
+      `SessionManager.submit` sheds with `RequestShed`.
+    default_deadline_s: per-request deadline when the request carries
+      none (None = no deadline).
+    retry_after_s: floor for the shed response's retry-after hint; the
+      controller scales it by queue depth x observed mean latency.
+    device_budget_mb: shared-footprint budget (feature-bank factor bytes
+      + Gram-cache device bytes) driving the degradation ladder; None
+      disables the ladder.
+    min_device_bank_mb: rung-1 shrink floor for a session's device tier.
+    checkpoint_root: directory namespace for per-tenant checkpointing —
+      a request with ``checkpoint=True`` gets
+      ``checkpoint_root/<tenant>`` as its isolated checkpoint_dir.
+    """
+
+    max_concurrent: int = 4
+    queue_limit: int = 16
+    default_deadline_s: float | None = None
+    retry_after_s: float = 1.0
+    device_budget_mb: float | None = None
+    min_device_bank_mb: float = 16.0
+    checkpoint_root: str | None = None
+
+    def __post_init__(self):
+        if int(self.max_concurrent) < 1:
+            raise ValueError(
+                f"max_concurrent must be >= 1, got {self.max_concurrent!r}"
+            )
+        if int(self.queue_limit) < 0:
+            raise ValueError(
+                f"queue_limit must be >= 0, got {self.queue_limit!r}"
+            )
+        object.__setattr__(self, "max_concurrent", int(self.max_concurrent))
+        object.__setattr__(self, "queue_limit", int(self.queue_limit))
+
+
+@dataclasses.dataclass(frozen=True)
+class DiscoveryRequest:
+    """One tenant's discovery request against the manager's dataset.
+
+    tenant: label riding every structured error and checkpoint
+      namespace.  seed: per-session PRNG isolation — overrides the score
+      config's seed (fold layout + feature-policy randomness), changing
+      the session's build fingerprints so it can never collide with
+      another tenant's factors or Gram blocks.  deadline_s: wall-clock
+      budget from *submission* (falls back to the manager's default).
+      fault_plan: injected faults for THIS session only.  checkpoint:
+      sweep-granular checkpointing under the manager's
+      ``checkpoint_root/<tenant>`` namespace; resume="auto" restores the
+      newest loadable checkpoint from that same namespace.
+    """
+
+    tenant: str
+    deadline_s: float | None = None
+    seed: int | None = None
+    max_subset: int | None = None
+    fault_plan: object | None = None
+    checkpoint: bool = False
+    resume: str = "never"
+
+
+class SessionTicket:
+    """Handle for an admitted request: result / cancel / telemetry."""
+
+    def __init__(self, tenant: str, cancel_event: threading.Event):
+        self.tenant = tenant
+        self._cancel_event = cancel_event
+        self._future = None  # set by the manager right after construction
+        self.session: DiscoverySession | None = None  # set when started
+        self.submitted_at = time.monotonic()
+        self.latency_s: float | None = None
+        self.error: dict | None = None  # structured payload on failure
+
+    def result(self, timeout: float | None = None):
+        """The tenant's `GESResult`; re-raises the structured failure
+        (`DeadlineExceeded` / `SessionCancelled` / `InjectedFault` / ...)
+        when the run did not survive."""
+        return self._future.result(timeout)
+
+    def done(self) -> bool:
+        return self._future.done()
+
+    def cancel(self) -> None:
+        """Mid-request kill: the session sheds at its next sweep seam."""
+        self._cancel_event.set()
+
+
+class SessionManager:
+    """Admits concurrent `DiscoverySession`s over one dataset and one
+    process-wide shared `FeatureBank` / per-fingerprint `GramBlockCache`
+    registry (module docstring has the full story)."""
+
+    def __init__(
+        self,
+        data,
+        spec: DataSpec | None = None,
+        options: EngineOptions | None = None,
+        config: ScoreConfig | None = None,
+        serving: ServingOptions | None = None,
+        feature_bank: FeatureBank | None = None,
+    ):
+        self.data = data
+        self.spec = resolve_spec(data, spec=spec)
+        self.options = options if options is not None else EngineOptions()
+        self.config = config if config is not None else ScoreConfig()
+        self.serving = serving if serving is not None else ServingOptions()
+        self.feature_bank = (
+            feature_bank if feature_bank is not None else FeatureBank()
+        )
+        self._gram_caches: dict = {}  # workload fingerprint -> GramBlockCache
+        self._lock = threading.Lock()
+        self._pending = 0
+        self._running = 0
+        self._closed = False
+        self._lat: list = []  # completed-run latencies (seconds)
+        self.stats = {
+            "admitted": 0,
+            "shed": 0,
+            "completed": 0,
+            "deadline_exceeded": 0,
+            "cancelled": 0,
+            "failed": 0,
+        }
+        self.degradations = {
+            "shrink_device": 0,
+            "evict_to_host": 0,
+            "reroute_backend": 0,
+        }
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.serving.max_concurrent,
+            thread_name_prefix="discovery",
+        )
+
+    # -- shared-state plumbing --------------------------------------------
+    def _policy_for(self, options: EngineOptions) -> FeaturePolicy:
+        return (
+            options.features
+            if options.features is not None
+            else FeaturePolicy.default()
+        )
+
+    def _workload_fingerprint(self, config, options) -> tuple:
+        """Gram-cache sharing key: everything that shapes a Gram block's
+        *values* — the score config (fold layout seed included), the
+        resolved feature policy, and the Gram-accumulation precision.
+        Sessions with different fingerprints get different caches
+        (fingerprint isolation); `device_bank_mb` is placement, not
+        value, so rung-degraded sessions still share."""
+        return (
+            config,
+            self._policy_for(options).fingerprint(),
+            options.precision,
+        )
+
+    def _gram_cache_for(self, config, options) -> GramBlockCache:
+        fp = self._workload_fingerprint(config, options)
+        with self._lock:
+            cache = self._gram_caches.get(fp)
+            if cache is None:
+                cache = GramBlockCache(
+                    max_entries=options.gram_cache_entries,
+                    device_bank_mb=options.device_bank_mb,
+                )
+                self._gram_caches[fp] = cache
+            return cache
+
+    def shared_bytes(self) -> int:
+        """The ladder's measured footprint: feature-bank factor bytes +
+        every workload cache's device-tier bytes."""
+        with self._lock:
+            caches = list(self._gram_caches.values())
+        return self.feature_bank.nbytes + sum(
+            c.device_nbytes for c in caches
+        )
+
+    def _degrade(self, options: EngineOptions, serving_info: dict):
+        """Memory-pressure ladder, applied at admission.  Returns the
+        (possibly degraded) EngineOptions for the new session and records
+        the rung in `serving_info` (surfaced in its sweep log)."""
+        budget_mb = self.serving.device_budget_mb
+        if budget_mb is None:
+            return options
+        usage = self.shared_bytes() / 2**20
+        rung = 0
+        if usage > budget_mb:
+            rung = 3
+        elif usage > 0.75 * budget_mb:
+            rung = 2
+        elif usage > 0.5 * budget_mb:
+            rung = 1
+        serving_info["pressure_rung"] = rung
+        if rung == 0:
+            return options
+        with self._lock:
+            caches = list(self._gram_caches.values())
+        if rung == 1:
+            shrunk = max(
+                self.serving.min_device_bank_mb,
+                float(options.device_bank_mb or 0) / 2,
+            )
+            for c in caches:
+                if c.device_enabled and float(c.device_bank_mb) > shrunk:
+                    c.set_device_budget(shrunk)
+            serving_info["shrink_device"] = (
+                serving_info.get("shrink_device", 0) + 1
+            )
+            with self._lock:
+                self.degradations["shrink_device"] += 1
+            return dataclasses.replace(options, device_bank_mb=shrunk)
+        if rung == 2:
+            for c in caches:
+                c.spill_device()
+            serving_info["evict_to_host"] = (
+                serving_info.get("evict_to_host", 0) + 1
+            )
+            with self._lock:
+                self.degradations["evict_to_host"] += 1
+            return dataclasses.replace(options, device_bank_mb=0)
+        # rung 3: also route NEW builds to the cheapest backend — rff has
+        # no sequential pivot loop and the smallest factor footprint.
+        # The rerouted policy changes build fingerprints, so these
+        # sessions land in their own bank entries / Gram namespace and
+        # can never pollute full-fidelity tenants.
+        for c in caches:
+            c.spill_device()
+        base = self._policy_for(options)
+        rerouted = dataclasses.replace(base, continuous="rff", mixed="rff")
+        serving_info["evict_to_host"] = serving_info.get("evict_to_host", 0) + 1
+        serving_info["reroute_backend"] = (
+            serving_info.get("reroute_backend", 0) + 1
+        )
+        with self._lock:
+            self.degradations["evict_to_host"] += 1
+            self.degradations["reroute_backend"] += 1
+        return dataclasses.replace(
+            options, device_bank_mb=0, features=rerouted
+        )
+
+    # -- admission ---------------------------------------------------------
+    def _retry_after(self) -> float:
+        with self._lock:
+            depth = self._pending + self._running
+            mean = sum(self._lat) / len(self._lat) if self._lat else None
+        if mean is None:
+            return self.serving.retry_after_s
+        return max(
+            self.serving.retry_after_s,
+            depth * mean / self.serving.max_concurrent,
+        )
+
+    def submit(self, request: DiscoveryRequest) -> SessionTicket:
+        """Admit (or shed) one request; returns immediately with a
+        `SessionTicket` whose `result()` blocks for the outcome."""
+        if not isinstance(request, DiscoveryRequest):
+            raise ValueError(
+                "submit takes a DiscoveryRequest, got "
+                f"{type(request).__name__}"
+            )
+        with self._lock:
+            if self._closed:
+                shed_reason = "manager is shut down"
+            elif self._pending >= self.serving.queue_limit:
+                shed_reason = (
+                    f"queue full ({self._pending} pending >= "
+                    f"queue_limit={self.serving.queue_limit})"
+                )
+            else:
+                shed_reason = None
+            if shed_reason is None:
+                self._pending += 1
+                self.stats["admitted"] += 1
+            else:
+                self.stats["shed"] += 1
+        if shed_reason is not None:
+            raise RequestShed(request.tenant, shed_reason, self._retry_after())
+        deadline_s = (
+            request.deadline_s
+            if request.deadline_s is not None
+            else self.serving.default_deadline_s
+        )
+        deadline_at = (
+            time.monotonic() + deadline_s if deadline_s is not None else None
+        )
+        ticket = SessionTicket(request.tenant, threading.Event())
+        ticket._future = self._pool.submit(
+            self._serve, ticket, request, deadline_s, deadline_at
+        )
+        return ticket
+
+    def run(self, request: DiscoveryRequest):
+        """Synchronous convenience: submit + result."""
+        return self.submit(request).result()
+
+    # -- the worker --------------------------------------------------------
+    def _session_options(self, request, deadline_s, serving_info):
+        options = self.options
+        if deadline_s is not None:
+            options = dataclasses.replace(options, deadline_s=deadline_s)
+        if request.checkpoint or request.resume != "never":
+            root = self.serving.checkpoint_root
+            if root is None:
+                raise ValueError(
+                    "request.checkpoint/resume need "
+                    "ServingOptions(checkpoint_root=...) — per-tenant "
+                    "checkpoints are namespaced under it"
+                )
+            options = dataclasses.replace(
+                options,
+                checkpoint_dir=os.path.join(root, str(request.tenant)),
+            )
+        return self._degrade(options, serving_info)
+
+    def _serve(self, ticket, request, deadline_s, deadline_at):
+        with self._lock:
+            self._pending -= 1
+            self._running += 1
+        t0 = time.monotonic()
+        try:
+            serving_info: dict = {}
+            options = self._session_options(request, deadline_s, serving_info)
+            config = self.config
+            if request.seed is not None:
+                config = dataclasses.replace(config, seed=int(request.seed))
+            session = DiscoverySession(
+                self.data,
+                spec=self.spec,
+                options=options,
+                config=config,
+                max_subset=request.max_subset,
+                feature_bank=self.feature_bank,
+                gram_cache=self._gram_cache_for(config, options),
+                fault_plan=request.fault_plan,
+                resume=request.resume,
+                tenant=request.tenant,
+                cancel_event=ticket._cancel_event,
+                deadline_at=deadline_at,
+                serving_info=serving_info or None,
+            )
+            ticket.session = session
+            result = session.run()
+        except BaseException as exc:
+            ticket.error = structured_error(exc)
+            code = ticket.error.get("error")
+            key = {
+                "deadline_exceeded": "deadline_exceeded",
+                "cancelled": "cancelled",
+            }.get(code, "failed")
+            with self._lock:
+                self.stats[key] += 1
+                self._running -= 1
+            raise
+        ticket.latency_s = time.monotonic() - t0
+        with self._lock:
+            self.stats["completed"] += 1
+            self._lat.append(ticket.latency_s)
+            self._running -= 1
+        return result
+
+    # -- lifecycle / telemetry --------------------------------------------
+    def shutdown(self, wait: bool = True, cancel_active: bool = False) -> None:
+        """Stop admitting; optionally cancel in-flight sessions (they shed
+        at their next sweep seam) and wait the pool down."""
+        with self._lock:
+            self._closed = True
+        if cancel_active:
+            # cancel reaches sessions through their tickets; callers keep
+            # those.  The manager-side switch just stops new admissions.
+            pass
+        self._pool.shutdown(wait=wait, cancel_futures=not wait)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown(wait=True)
+        return False
+
+    @property
+    def queue_depth(self) -> int:
+        with self._lock:
+            return self._pending
+
+    def latency_percentiles(self) -> dict:
+        """p50/p95 of completed-run latency (seconds), for benchmarks and
+        the serve loop's report."""
+        with self._lock:
+            lat = sorted(self._lat)
+        if not lat:
+            return {"p50": None, "p95": None, "n": 0}
+
+        def _pct(p):
+            i = min(len(lat) - 1, max(0, int(round(p * (len(lat) - 1)))))
+            return round(lat[i], 4)
+
+        return {"p50": _pct(0.50), "p95": _pct(0.95), "n": len(lat)}
+
+    def telemetry(self) -> dict:
+        """One dict for logs/benchmarks: admission stats, ladder counters,
+        latencies, shared-bank and per-workload-cache counters."""
+        with self._lock:
+            caches = {
+                repr(fp): c.stats for fp, c in self._gram_caches.items()
+            }
+            stats = dict(self.stats)
+            degradations = dict(self.degradations)
+        return {
+            "stats": stats,
+            "degradations": degradations,
+            "latency": self.latency_percentiles(),
+            "feature_bank": self.feature_bank.stats,
+            "gram_caches": caches,
+            "shared_mb": round(self.shared_bytes() / 2**20, 2),
+        }

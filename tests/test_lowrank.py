@@ -1,6 +1,6 @@
-"""Alg. 1 (ICL) and Alg. 2 (discrete exact decomposition) tests — now
-hosted by the feature-bank subsystem (`repro.features.backends`); the old
-`repro.core.lowrank` module is a one-release deprecation shim over it."""
+"""Alg. 1 (ICL) and Alg. 2 (discrete exact decomposition) tests — hosted
+by the feature-bank subsystem (`repro.features.backends`).  The old
+`repro.core.lowrank` shim served its one release and is removed."""
 
 import jax.numpy as jnp
 import numpy as np
@@ -123,26 +123,13 @@ def test_lowrank_features_centering_matches_centered_kernel():
     np.testing.assert_allclose(np.asarray(lam @ lam.T), kc, atol=1e-5)
 
 
-def test_core_lowrank_shim_warns_and_reexports():
-    """The old import location keeps working for one release behind a
-    DeprecationWarning (phrase-matched by the pytest.ini gate, which
-    errors when repo code — not this test — triggers it)."""
+def test_core_lowrank_shim_is_gone():
+    """The one-release `repro.core.lowrank` deprecation shim is past its
+    release: the module must no longer exist, and the package-level
+    re-export must raise a plain AttributeError (no silent fallback)."""
     import repro.core
-    import repro.core.lowrank as shim
-    import repro.features.backends as backends
 
-    for name in (
-        "incomplete_cholesky",
-        "discrete_lowrank",
-        "count_distinct_rows",
-        "lowrank_features",
-    ):
-        with pytest.warns(DeprecationWarning, match="keeps working for one release"):
-            fn = getattr(shim, name)
-        assert fn is getattr(backends, name)
-    # the package-level re-export warns the same way
-    with pytest.warns(DeprecationWarning, match="keeps working for one release"):
-        fn = repro.core.lowrank_features
-    assert fn is backends.lowrank_features
+    with pytest.raises(ImportError):
+        import repro.core.lowrank  # noqa: F401
     with pytest.raises(AttributeError):
-        shim.never_existed
+        repro.core.lowrank_features

@@ -143,12 +143,11 @@ def test_declarative_api_documented_and_importable():
 
 
 def test_repo_code_never_calls_its_own_deprecated_surface():
-    """The deprecation shims exist for *users*; repo-internal code must be
-    on the new surface.  pytest.ini enforces this dynamically (shim
-    DeprecationWarnings attributed to repro modules become errors) —
-    mirror the intent statically over src/examples/benchmarks with an AST
-    scan, so the failure names the offending file:line even for code the
-    suite never executes."""
+    """The PR-4 legacy kwargs served their one deprecation release and
+    are now *removed* — calling them raises TypeError at runtime.  Keep
+    the static AST scan over src/examples/benchmarks so code the suite
+    never executes still fails loudly here, with file:line, instead of
+    at a user's first call."""
     import ast
 
     deprecated_kwargs = {
@@ -199,12 +198,10 @@ def test_repo_code_never_calls_its_own_deprecated_surface():
 
 
 def test_repo_code_never_imports_deprecated_lowrank_location():
-    """`repro.core.lowrank` is a one-release shim over
-    `repro.features.backends`; repo-internal code must import the new
-    location.  The pytest.ini gate catches dynamic use (the shim's
-    DeprecationWarning, attributed to repro modules, becomes an error) —
-    this mirrors it statically so the failure names file:line even for
-    code the suite never executes."""
+    """`repro.core.lowrank` served its one release as a shim over
+    `repro.features.backends` and is removed; any import of it is now an
+    ImportError.  This static scan keeps the failure at file:line for
+    code paths the suite never executes."""
     import ast
 
     offenders = []
@@ -221,8 +218,6 @@ def test_repo_code_never_imports_deprecated_lowrank_location():
                 if not fn.endswith(".py"):
                     continue
                 path = os.path.join(dirpath, fn)
-                if path.endswith(os.path.join("core", "lowrank.py")):
-                    continue  # the shim itself
                 with open(path) as f:
                     tree = ast.parse(f.read(), filename=path)
                 for node in ast.walk(tree):

@@ -1,0 +1,518 @@
+"""Multi-tenant serving: isolation, admission, shedding, degradation.
+
+The acceptance bar for `repro.serving` (tentpole of PR 7): N >= 4
+concurrent tenants over ONE shared `FeatureBank`, with an active
+`FaultPlan` (stalled tenant, mid-request kill, bank-contention storm,
+eviction storm) — and every *surviving* tenant's CPDAG / trace / score
+bitwise-equal to its solo uninterrupted run, zero duplicate factor
+builds for identical (vars_key, fingerprint) requests, and every failed
+request rejected with a structured error instead of wedging the queue.
+
+Thread hygiene: pytest.ini sets ``faulthandler_timeout`` so a deadlock
+in the lock-striped bank/cache dumps every thread's stack instead of
+hanging CI silently.
+"""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.api import DiscoverySession
+from repro.core.runstate import FaultPlan
+from repro.core.score_common import GramBlockCache, ScoreConfig
+from repro.core.spec import EngineOptions
+from repro.features.bank import FeatureBank
+from repro.serving import (
+    DeadlineExceeded,
+    DiscoveryRequest,
+    InjectedFault,
+    RequestShed,
+    ServingOptions,
+    SessionCancelled,
+    SessionManager,
+    structured_error,
+)
+
+N, D = 120, 4
+
+
+def _chain_data(n=N, d=D, seed=0):
+    rng = np.random.default_rng(seed)
+    cols = [rng.standard_normal(n)]
+    for _ in range(d - 1):
+        cols.append(np.tanh(cols[-1]) + 0.4 * rng.standard_normal(n))
+    return np.stack(cols, axis=1)
+
+
+DATA = _chain_data()
+
+
+@pytest.fixture(scope="module")
+def solo():
+    """Uninterrupted single-session reference runs, one per config seed.
+    Also warms the jit caches so the concurrent tests measure contention,
+    not compilation."""
+    out = {}
+    for seed in (0, 1):
+        sess = DiscoverySession(DATA, config=ScoreConfig(seed=seed))
+        out[seed] = sess.run()
+    return out
+
+
+def _assert_bitwise(res, ref, label):
+    assert np.array_equal(res.cpdag, ref.cpdag), f"{label}: CPDAG differs"
+    assert [tuple(s) for s in res.trace] == [
+        tuple(s) for s in ref.trace
+    ], f"{label}: trace differs"
+    assert res.score == ref.score, f"{label}: score differs"
+
+
+# -- single-flight build dedup (bank unit level) --------------------------
+
+
+def test_single_flight_one_build_many_waiters():
+    bank = FeatureBank()
+    started = threading.Event()
+    release = threading.Event()
+    builds = []
+
+    def build_fn():
+        builds.append(threading.get_ident())
+        started.set()
+        release.wait(timeout=30)
+        return ("factor", 42)
+
+    results = [None] * 6
+    errs = []
+
+    def worker(i):
+        try:
+            results[i] = bank.get_or_build((0, 1), ("fp",), build_fn)
+        except BaseException as exc:  # pragma: no cover - diagnostic
+            errs.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    assert started.wait(timeout=30)
+    # followers are parked on the in-flight slot; releasing the single
+    # leader releases everyone with the SAME build
+    release.set()
+    for t in threads:
+        t.join(timeout=30)
+    assert errs == []
+    assert len(builds) == 1, "single-flight must collapse to one build"
+    assert all(r == ("factor", 42) for r in results)
+    assert bank.stats["builds"] == 1
+    assert bank.single_flight_waits >= 1
+
+
+def test_single_flight_leader_failure_promotes_follower():
+    bank = FeatureBank()
+    first_entered = threading.Event()
+    let_first_fail = threading.Event()
+    calls = []
+
+    def flaky_build():
+        calls.append(None)
+        if len(calls) == 1:
+            first_entered.set()
+            let_first_fail.wait(timeout=30)
+            raise RuntimeError("leader died mid-build")
+        return "ok"
+
+    out = {}
+
+    def leader():
+        with pytest.raises(RuntimeError, match="leader died"):
+            bank.get_or_build((0,), ("fp",), flaky_build)
+
+    def follower():
+        out["res"] = bank.get_or_build((0,), ("fp",), flaky_build)
+
+    t1 = threading.Thread(target=leader)
+    t1.start()
+    assert first_entered.wait(timeout=30)
+    t2 = threading.Thread(target=follower)
+    t2.start()
+    time.sleep(0.05)  # let the follower park on the in-flight slot
+    let_first_fail.set()
+    t1.join(timeout=30)
+    t2.join(timeout=30)
+    # the follower observed the leader's failure and retried as the new
+    # leader rather than caching the exception
+    assert out["res"] == "ok"
+    assert bank.stats["builds"] == 1  # failed builds don't count
+
+
+def test_gram_cache_concurrent_put_get_counters_consistent():
+    cache = GramBlockCache(max_entries=8, device_bank_mb=None)
+
+    def worker(tid):
+        for i in range(200):
+            key = ("a", (tid + i) % 12)
+            got = cache.get(key)
+            if got is None:
+                cache.put(key, np.full((2, 2), tid))
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    s = cache.stats
+    # counters must reconcile exactly under contention (no lost updates)
+    assert s["hits"] + s["misses"] == 4 * 200
+    assert len(cache) <= 8
+    assert s["evictions"] >= 0
+
+
+# -- concurrent tenants: sharing + bitwise equality -----------------------
+
+
+def test_identical_tenants_share_everything_bitwise(solo):
+    serving = ServingOptions(max_concurrent=4, queue_limit=16)
+    with SessionManager(DATA, serving=serving) as mgr:
+        tickets = [
+            mgr.submit(DiscoveryRequest(tenant=f"t{i}", seed=0))
+            for i in range(4)
+        ]
+        results = [t.result(timeout=600) for t in tickets]
+    for i, res in enumerate(results):
+        _assert_bitwise(res, solo[0], f"tenant t{i}")
+    bank = mgr.feature_bank.stats
+    # zero duplicate builds: every (vars_key, fingerprint) built at most
+    # once across all four tenants
+    assert bank["builds"] == bank["entries"]
+    tel = mgr.telemetry()
+    assert tel["stats"]["completed"] == 4
+    assert tel["latency"]["n"] == 4 and tel["latency"]["p95"] is not None
+
+
+def test_mixed_seed_tenants_are_fingerprint_isolated(solo):
+    """Different per-request seeds change the build fingerprints: the
+    shared bank keeps the factor families apart and each tenant matches
+    its own solo run bit for bit."""
+    serving = ServingOptions(max_concurrent=4, queue_limit=16)
+    seeds = (0, 1, 0, 1)
+    with SessionManager(DATA, serving=serving) as mgr:
+        tickets = [
+            mgr.submit(DiscoveryRequest(tenant=f"t{i}-seed{seed}", seed=seed))
+            for i, seed in enumerate(seeds)
+        ]
+        for seed, ticket in zip(seeds, tickets):
+            _assert_bitwise(
+                ticket.result(timeout=600), solo[seed], ticket.tenant
+            )
+    # two distinct workloads -> two gram caches, no cross-talk
+    assert len(mgr._gram_caches) == 2
+    bank = mgr.feature_bank.stats
+    assert bank["builds"] == bank["entries"]
+
+
+# -- THE isolation proof: fault storm over one shared bank ----------------
+
+
+def test_fault_storm_isolation_bitwise(solo):
+    """Five tenants, one shared FeatureBank, four active fault plans:
+
+    * ``stall``  — stalls 10s mid-run with a 1.5s deadline -> must fail
+      with a structured `DeadlineExceeded` at a sweep seam;
+    * ``kill``   — mid-request injected kill -> `InjectedFault`;
+    * ``storm``  — bank-contention storm (every factor build delayed, on
+      the same fingerprints the clean tenant needs) -> must survive;
+    * ``evict``  — eviction storm (spills the shared device Gram tier
+      every sweep, under the clean tenant's feet) -> must survive;
+    * ``clean``  — no faults -> must survive.
+
+    Every surviving tenant's CPDAG / trace / score is bitwise-equal to
+    its solo uninterrupted run, and no (vars_key, fingerprint) was built
+    twice."""
+    serving = ServingOptions(max_concurrent=5, queue_limit=16)
+    with SessionManager(DATA, serving=serving) as mgr:
+        t_clean = mgr.submit(DiscoveryRequest(tenant="clean", seed=0))
+        t_storm = mgr.submit(
+            DiscoveryRequest(
+                tenant="storm", seed=0,
+                fault_plan=FaultPlan(build_delay_s=0.05),
+            )
+        )
+        t_evict = mgr.submit(
+            DiscoveryRequest(
+                tenant="evict", seed=0,
+                fault_plan=FaultPlan(evict_storm=True),
+            )
+        )
+        t_kill = mgr.submit(
+            DiscoveryRequest(
+                tenant="kill", seed=1,
+                fault_plan=FaultPlan(kill_at_sweep=1),
+            )
+        )
+        t_stall = mgr.submit(
+            DiscoveryRequest(
+                tenant="stall", seed=1, deadline_s=1.5,
+                fault_plan=FaultPlan(stall_sweep=(1, 10.0)),
+            )
+        )
+
+        with pytest.raises(InjectedFault):
+            t_kill.result(timeout=600)
+        with pytest.raises(DeadlineExceeded) as exc_info:
+            t_stall.result(timeout=600)
+        # survivors: bitwise-equal to solo in spite of the storm
+        _assert_bitwise(t_clean.result(timeout=600), solo[0], "clean")
+        _assert_bitwise(t_storm.result(timeout=600), solo[0], "storm")
+        _assert_bitwise(t_evict.result(timeout=600), solo[0], "evict")
+
+    err = exc_info.value.to_dict()
+    assert err["error"] == "deadline_exceeded"
+    assert err["tenant"] == "stall"
+    assert err["deadline_s"] == pytest.approx(1.5)
+    assert t_stall.error == err  # the ticket carries the same payload
+    assert t_kill.error["error"] == "injected_fault"
+
+    bank = mgr.feature_bank.stats
+    assert bank["builds"] == bank["entries"], "a fault caused a duplicate build"
+    tel = mgr.telemetry()
+    assert tel["stats"]["completed"] == 3
+    assert tel["stats"]["deadline_exceeded"] == 1
+    assert tel["stats"]["failed"] == 1  # the injected kill
+    # the eviction storm actually evicted (the fault was live, not inert)
+    spills = sum(c["spills"] for c in tel["gram_caches"].values())
+    assert spills > 0
+
+
+# -- admission: shedding, deadlines, cancellation -------------------------
+
+
+def test_queue_full_sheds_with_structured_retry_after():
+    serving = ServingOptions(max_concurrent=1, queue_limit=1)
+    with SessionManager(DATA, serving=serving) as mgr:
+        hog = mgr.submit(
+            DiscoveryRequest(
+                tenant="hog", seed=0,
+                fault_plan=FaultPlan(stall_sweep=(0, 2.0)),
+            )
+        )
+        time.sleep(0.3)  # let the hog occupy the single worker
+        queued = mgr.submit(DiscoveryRequest(tenant="queued", seed=0))
+        with pytest.raises(RequestShed) as exc_info:
+            mgr.submit(DiscoveryRequest(tenant="unlucky", seed=0))
+        err = exc_info.value.to_dict()
+        assert err["error"] == "shed"
+        assert err["tenant"] == "unlucky"
+        assert err["retry_after_s"] >= serving.retry_after_s
+        assert "queue full" in err["reason"]
+        # the shed request never perturbed the admitted ones
+        hog.result(timeout=600)
+        queued.result(timeout=600)
+    tel = mgr.telemetry()
+    assert tel["stats"]["shed"] == 1
+    assert tel["stats"]["completed"] == 2
+
+
+def test_deadline_expired_in_queue_sheds_at_first_seam():
+    """deadline_at is stamped at *submission*: a request whose budget
+    burned in the queue fails at its first seam without scoring."""
+    serving = ServingOptions(max_concurrent=1, queue_limit=4)
+    with SessionManager(DATA, serving=serving) as mgr:
+        hog = mgr.submit(
+            DiscoveryRequest(
+                tenant="hog", seed=0,
+                fault_plan=FaultPlan(stall_sweep=(0, 1.5)),
+            )
+        )
+        doomed = mgr.submit(
+            DiscoveryRequest(tenant="doomed", seed=0, deadline_s=0.5)
+        )
+        with pytest.raises(DeadlineExceeded) as exc_info:
+            doomed.result(timeout=600)
+        hog.result(timeout=600)
+    err = exc_info.value.to_dict()
+    assert err["error"] == "deadline_exceeded"
+    assert err["sweep"] == 0, "must shed before any sweep completed"
+    assert mgr.stats["deadline_exceeded"] == 1
+
+
+def test_cancellation_mid_request():
+    serving = ServingOptions(max_concurrent=1, queue_limit=4)
+    with SessionManager(DATA, serving=serving) as mgr:
+        ticket = mgr.submit(
+            DiscoveryRequest(
+                tenant="goner", seed=0,
+                fault_plan=FaultPlan(stall_sweep=(0, 1.0)),
+            )
+        )
+        ticket.cancel()  # mid-request kill: flips the session's event
+        with pytest.raises(SessionCancelled) as exc_info:
+            ticket.result(timeout=600)
+    assert exc_info.value.to_dict() == {
+        "error": "cancelled",
+        "tenant": "goner",
+        "sweep": exc_info.value.sweep,
+    }
+    assert mgr.stats["cancelled"] == 1
+
+
+def test_shutdown_sheds_new_requests():
+    mgr = SessionManager(DATA, serving=ServingOptions())
+    mgr.shutdown()
+    with pytest.raises(RequestShed, match="shut down"):
+        mgr.submit(DiscoveryRequest(tenant="late"))
+
+
+def test_structured_error_shapes():
+    assert structured_error(ValueError("boom")) == {
+        "error": "internal", "type": "ValueError", "detail": "boom",
+    }
+    assert structured_error(InjectedFault("kill"))["error"] == "injected_fault"
+    shed = RequestShed("t", "queue full (x)", 2.0)
+    assert shed.to_dict()["retry_after_s"] == 2.0
+
+
+# -- memory-pressure degradation ladder -----------------------------------
+
+
+def test_degradation_ladder_rungs(solo):
+    """Drive the shared footprint through the three pressure rungs and
+    check each one: halved device tier, full evict-to-host, and backend
+    reroute — with the rung counters surfaced in the session sweep log
+    and every degraded run still returning a valid result."""
+    base = SessionManager(DATA, serving=ServingOptions())
+    try:
+        base.run(DiscoveryRequest(tenant="warm", seed=0))
+    finally:
+        base.shutdown()
+    shared_bank = base.feature_bank
+    # at a fresh manager's admission time the measurable footprint is the
+    # shared bank's factor bytes (its own gram caches don't exist yet)
+    usage_mb = shared_bank.nbytes / 2**20
+    assert usage_mb > 0
+
+    def degraded_run(budget_mb):
+        mgr = SessionManager(
+            DATA,
+            serving=ServingOptions(device_budget_mb=budget_mb),
+            feature_bank=shared_bank,
+        )
+        try:
+            ticket = mgr.submit(DiscoveryRequest(tenant="t", seed=0))
+            res = ticket.result(timeout=600)
+            return mgr, ticket, res
+        finally:
+            mgr.shutdown()
+
+    # rung 1: usage in (0.5, 0.75] of budget -> shrink device tier
+    mgr, ticket, res = degraded_run(usage_mb / 0.6)
+    _assert_bitwise(res, solo[0], "rung1")
+    assert mgr.degradations["shrink_device"] == 1
+    serving_recs = [r["serving"] for r in ticket.session.sweep_log if "serving" in r]
+    assert serving_recs and serving_recs[-1]["pressure_rung"] == 1
+    assert serving_recs[-1]["shrink_device"] == 1
+
+    # rung 2: usage in (0.75, 1.0] -> evict the device tier entirely
+    mgr, ticket, res = degraded_run(usage_mb / 0.8)
+    _assert_bitwise(res, solo[0], "rung2")
+    assert mgr.degradations["evict_to_host"] == 1
+    assert ticket.session.options.device_bank_mb == 0
+    assert not ticket.session.scorer.gram_cache.device_enabled
+
+    # rung 3: over budget -> also reroute new builds to the cheap backend
+    mgr, ticket, res = degraded_run(usage_mb * 0.5)
+    assert mgr.degradations["reroute_backend"] == 1
+    policy = ticket.session.scorer.policy
+    assert policy.continuous.backend == "rff"
+    # rerouted factors live under their own fingerprints: approximate
+    # scores, but a structurally valid CPDAG of the right shape
+    assert res.cpdag.shape == (D, D)
+    serving_recs = [r["serving"] for r in ticket.session.sweep_log if "serving" in r]
+    assert serving_recs[-1]["pressure_rung"] == 3
+    assert serving_recs[-1]["reroute_backend"] == 1
+
+
+# -- checkpoint/resume under the session manager (satellite) --------------
+
+
+def test_concurrent_checkpoint_namespaces_do_not_clobber(solo, tmp_path):
+    """Two concurrent checkpointing tenants share one checkpoint_root:
+    each writes its own RunState under its own tenant namespace, and a
+    later ``resume="auto"`` request restores *its own* tenant's state —
+    proven by seed-distinct fingerprints (a cross-tenant restore would be
+    refused as a mixed factor family) and bitwise-equal final results."""
+    root = str(tmp_path / "ckpts")
+    serving = ServingOptions(
+        max_concurrent=2, queue_limit=8, checkpoint_root=root
+    )
+    with SessionManager(DATA, serving=serving) as mgr:
+        # phase 1: both tenants killed mid-run, checkpoints committed
+        ta = mgr.submit(
+            DiscoveryRequest(
+                tenant="alice", seed=0, checkpoint=True,
+                fault_plan=FaultPlan(kill_at_sweep=2),
+            )
+        )
+        tb = mgr.submit(
+            DiscoveryRequest(
+                tenant="bob", seed=1, checkpoint=True,
+                fault_plan=FaultPlan(kill_at_sweep=2),
+            )
+        )
+        with pytest.raises(InjectedFault):
+            ta.result(timeout=600)
+        with pytest.raises(InjectedFault):
+            tb.result(timeout=600)
+        assert os.path.isdir(os.path.join(root, "alice"))
+        assert os.path.isdir(os.path.join(root, "bob"))
+
+        # phase 2: concurrent resumes restore the right namespace each
+        ra = mgr.submit(
+            DiscoveryRequest(
+                tenant="alice", seed=0, checkpoint=True, resume="auto"
+            )
+        )
+        rb = mgr.submit(
+            DiscoveryRequest(
+                tenant="bob", seed=1, checkpoint=True, resume="auto"
+            )
+        )
+        res_a = ra.result(timeout=600)
+        res_b = rb.result(timeout=600)
+        assert ra.session.resumed_from is not None
+        assert rb.session.resumed_from is not None
+    _assert_bitwise(res_a, solo[0], "alice resumed")
+    _assert_bitwise(res_b, solo[1], "bob resumed")
+
+
+def test_checkpoint_without_root_is_refused():
+    with SessionManager(DATA, serving=ServingOptions()) as mgr:
+        ticket = mgr.submit(DiscoveryRequest(tenant="t", checkpoint=True))
+        with pytest.raises(ValueError, match="checkpoint_root"):
+            ticket.result(timeout=600)
+
+
+# -- session-level seam checks (no manager) -------------------------------
+
+
+def test_engine_options_deadline_via_plain_session():
+    """EngineOptions(deadline_s=...) works without a manager: the clock
+    starts at the first sweep seam and trips at a later one."""
+    sess = DiscoverySession(
+        DATA,
+        options=EngineOptions(deadline_s=0.5),
+        config=ScoreConfig(seed=0),
+        fault_plan=FaultPlan(stall_sweep=(0, 1.0)),
+    )
+    with pytest.raises(DeadlineExceeded):
+        sess.run()
+
+
+def test_engine_options_deadline_validation():
+    with pytest.raises(ValueError, match="deadline_s"):
+        EngineOptions(deadline_s=0)
+    with pytest.raises(ValueError, match="deadline_s"):
+        EngineOptions(deadline_s=float("nan"))
+    assert EngineOptions(deadline_s=None).deadline_s is None

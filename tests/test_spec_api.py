@@ -147,12 +147,8 @@ def test_engine_options_validation():
     assert EngineOptions(precision="f32_gram").oracle_rtol == 1e-5
 
 
-def test_conflicting_old_and_new_kwargs_raise():
+def test_method_engine_conflicts_raise():
     data = _chain_data()
-    with pytest.raises(ValueError, match="not both"):
-        make_scorer(data, options=EngineOptions(), batched=False)
-    with pytest.raises(ValueError, match="not both"):
-        make_scorer(data, spec=DataSpec.from_arrays(data), dims=[1, 1, 1])
     with pytest.raises(ValueError, match='requires method="cvlr"'):
         make_scorer(data, method="cv", options=EngineOptions(engine="sharded"))
     # the scorer class holds the same line: loose kwargs cannot be
@@ -161,64 +157,29 @@ def test_conflicting_old_and_new_kwargs_raise():
         CVLRScorer(data, batched=False, options=EngineOptions())
 
 
-# -- deprecation shims ---------------------------------------------------
+# -- removed deprecation shims -------------------------------------------
 
 
-def test_deprecated_engine_kwargs_warn_and_match():
+def test_legacy_kwargs_are_removed():
+    """The PR-4 legacy kwargs (`dims`/`discrete`/`batched`/
+    `gram_cache_entries`/`device_bank_mb`/`batch_hook`) served their one
+    deprecation release; the keyword-only signatures now reject them
+    with a plain TypeError instead of warning."""
     data = _chain_data(seed=5)
-    cfg = ScoreConfig(seed=5)
-    new = causal_discover(
-        data, config=cfg, options=EngineOptions(engine="sequential")
-    )
-    with pytest.warns(DeprecationWarning, match="batched="):
-        old = causal_discover(data, config=cfg, batched=False)
-    np.testing.assert_array_equal(old.cpdag, new.cpdag)
-    assert old.score == new.score
-    assert old.trace == new.trace
-
-    with pytest.warns(DeprecationWarning, match="gram_cache_entries"):
-        s = make_scorer(data, config=cfg, gram_cache_entries=7)
-    assert s.gram_cache.max_entries == 7
-    with pytest.warns(DeprecationWarning, match="device_bank_mb"):
-        s = make_scorer(data, config=cfg, device_bank_mb=0)
-    assert not s.gram_cache.device_enabled
-
-
-def test_deprecated_variable_lists_warn_and_match():
-    ds = generate_scm_data(d=4, n=240, density=0.4, kind="mixed", seed=9)
-    cfg = ScoreConfig(seed=2)
-    spec = DataSpec.from_arrays(ds.data, dims=ds.dims, discrete=ds.discrete)
-    new = causal_discover(ds.data, spec=spec, config=cfg)
-    with pytest.warns(DeprecationWarning, match="dims="):
-        old = causal_discover(
-            ds.data, dims=ds.dims, discrete=ds.discrete, config=cfg
-        )
-    np.testing.assert_array_equal(old.cpdag, new.cpdag)
-    assert old.score == new.score
-
-
-def test_deprecated_batch_hook_warns_and_matches_sharded_engine():
-    data = _chain_data(seed=7)
-    cfg = ScoreConfig(seed=6)
-    new = causal_discover(
-        data, config=cfg, options=EngineOptions(engine="sharded")
-    )
-    with pytest.warns(DeprecationWarning, match="batch_hook"):
-        old = causal_discover(data, config=cfg, batch_hook=ges_batch_hook)
-    np.testing.assert_array_equal(old.cpdag, new.cpdag)
-
-
-def test_batch_hook_none_is_not_deprecated():
-    """batch_hook=None was the pre-PR-4 default ('no hook'): it must not
-    warn and must take the normal session path."""
-    data = _chain_data(seed=7)
-    cfg = ScoreConfig(seed=6)
+    with pytest.raises(TypeError):
+        causal_discover(data, batched=False)
+    with pytest.raises(TypeError):
+        causal_discover(data, dims=[1, 1, 1], discrete=[False] * 3)
+    with pytest.raises(TypeError):
+        causal_discover(data, batch_hook=ges_batch_hook)
+    with pytest.raises(TypeError):
+        make_scorer(data, gram_cache_entries=7)
+    with pytest.raises(TypeError):
+        make_scorer(data, device_bank_mb=0)
+    # and no DeprecationWarning machinery remains on the modern surface
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
-        res = causal_discover(data, config=cfg, batch_hook=None)
-    np.testing.assert_array_equal(
-        res.cpdag, causal_discover(data, config=cfg).cpdag
-    )
+        make_scorer(data, options=EngineOptions(engine="sequential"))
 
 
 # -- engine selection ----------------------------------------------------
