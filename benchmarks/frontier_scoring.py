@@ -22,6 +22,11 @@ f32 Gram accumulation, plus its max |score - f64 oracle| deviation
 the f64 oracle.  Never run concurrently with the test suite.
 ``--check-speedup X``  — exit nonzero unless every cell's batched/seq
 ratio is >= X (the CI perf-smoke gate: engine regressions fail loudly).
+``--check-warm-speedup X``  — exit nonzero unless every cell's
+incremental warm-sweep rate (configs served per second across the
+steady-state delta sweeps of a `DiscoverySession` driven on the sweep
+seam) is >= X times its cold full-frontier rate — the PR-8 gate that the
+frontier-delta engine actually pays for itself.
 """
 
 from __future__ import annotations
@@ -154,6 +159,9 @@ def _bench_cell(
             f"f32_gram deviated {max_rel:.2e} > policy bound {opts.oracle_rtol}"
         )
 
+    # -- incremental frontier-delta sweeps on the session seam (PR 8) ----
+    incremental = _bench_incremental(ds.data, d, seed, scorer.feature_bank)
+
     # numerical agreement spot-check (engine == oracle)
     worst = 0.0
     for (i, ps), b in zip(seq_configs, seq_scores):
@@ -185,7 +193,90 @@ def _bench_cell(
         "stage_split_s": stage_split,
         "max_rel_err": worst,
         "gram_cache": gram_stats,
+        "incremental": incremental,
         **({"f32_gram": f32} if f32 is not None else {}),
+    }
+
+
+def _bench_incremental(data, d: int, seed: int, feature_bank) -> dict:
+    """Warm vs cold sweep rate through the incremental session seam.
+
+    Drives a `DiscoverySession`'s `begin_sweep` / `score_frontier` /
+    `end_sweep` directly — sweep 0 is the cold full frontier, then each
+    "applied step" adds ~d fresh configs for one node, the shape of a
+    real GES sweep-over-sweep delta.  Per-sweep delta/carried counters
+    come from the session's own sweep log; the headline warm rate is
+    frontier-configs-SERVED per second (carried configs are served from
+    the score memo — that is the point of the engine) over the
+    steady-state sweeps.
+
+    Like every other cell in this benchmark, the timed pass runs on a
+    pre-warmed jit cache: an untimed session first walks the *identical*
+    sweep schedule, compiling both the cold full-frontier shapes and the
+    warm small-batch delta shapes, then a fresh session (empty score
+    memo, same process-global jit cache) is timed.  Without the warmup
+    the comparison is skewed both ways at once — sweep 0 rides shapes
+    the earlier engine cells already compiled while the delta sweeps
+    pay every first-time small-batch compile — and the ratio measures
+    compile churn, not the delta engine.
+    """
+    from repro.core.api import DiscoverySession
+    from repro.core.score_common import ScoreConfig, config_key
+    from repro.core.spec import EngineOptions
+
+    def _schedule():
+        base = [config_key(*c) for c in _frontier_configs(d)]
+        frontier = list(base)
+        for t in range(7):
+            if t > 0:  # "apply a step" at node y: ~d new 2-parent configs
+                y = (t - 1) % d
+                fresh = list(dict.fromkeys(
+                    config_key(y, (x, (x + t) % d))
+                    for x in range(d)
+                    if x != y and (x + t) % d not in (x, y)
+                ))
+                frontier = [k for k in frontier if k not in fresh] + fresh
+            yield t, list(frontier)
+
+    def _mk_sess():
+        return DiscoverySession(
+            data, config=ScoreConfig(seed=seed),
+            options=EngineOptions(incremental=True),
+            feature_bank=feature_bank,
+        )
+
+    warmup = _mk_sess()  # compiles every shape the timed pass will hit
+    for _, frontier in _schedule():
+        warmup.begin_sweep("bench")
+        warmup.score_frontier(frontier)
+        warmup.end_sweep(None)
+
+    sess = _mk_sess()
+    sweeps = []
+    for t, frontier in _schedule():
+        t0 = time.perf_counter()
+        sess.begin_sweep("bench")
+        sess.score_frontier(frontier)
+        sess.end_sweep(None)
+        dt = time.perf_counter() - t0
+        rec = sess.sweep_log[-1]
+        sweeps.append(
+            {
+                "sweep": t,
+                "n_configs": len(frontier),
+                **rec.get("frontier", {}),
+                "elapsed_s": round(dt, 4),
+                "configs_served_per_sec": round(len(frontier) / dt, 3),
+            }
+        )
+    cold = sweeps[0]["configs_served_per_sec"]
+    steady = sweeps[1:]
+    warm = max(s["configs_served_per_sec"] for s in steady)
+    return {
+        "cold_sweep_configs_per_sec": cold,
+        "warm_sweep_configs_per_sec": warm,
+        "warm_vs_cold": round(warm / cold, 3),
+        "sweeps": sweeps,
     }
 
 
@@ -209,6 +300,8 @@ def run(
             f"{cell['batched_scores_per_sec']},"
             f"{cell['batched_hostpath_scores_per_sec']},{cell['speedup']},"
             f"{cell['max_rel_err']:.2e}"
+            f",inc-warm={cell['incremental']['warm_sweep_configs_per_sec']}/s"
+            f" ({cell['incremental']['warm_vs_cold']}x cold)"
             + (
                 f",f32={cell['f32_gram']['cold_scores_per_sec']}/s"
                 f",dev={cell['f32_gram']['max_rel_dev_vs_f64_oracle']:.2e}"
@@ -250,6 +343,15 @@ if __name__ == "__main__":
         help="fail (exit 1) unless every cell's batched/sequential speedup"
         " is >= X — the CI smoke gate against engine perf regressions",
     )
+    ap.add_argument(
+        "--check-warm-speedup",
+        type=float,
+        default=None,
+        metavar="X",
+        help="fail (exit 1) unless every cell's incremental warm-sweep rate"
+        " is >= X times its cold full-frontier rate — the frontier-delta"
+        " engine's CI perf gate",
+    )
     args = ap.parse_args()
     result = run(quick=args.quick, out_path=args.out, precision=args.precision)
     if args.check_speedup is not None:
@@ -264,3 +366,19 @@ if __name__ == "__main__":
             )
             raise SystemExit(1)
         print(f"perf gate ok: all cells >= {args.check_speedup}x")
+    if args.check_warm_speedup is not None:
+        slow = [
+            (c["d"], c["n"], c["incremental"]["warm_vs_cold"])
+            for c in result["cells"]
+            if c["incremental"]["warm_vs_cold"] < args.check_warm_speedup
+        ]
+        if slow:
+            print(
+                "PERF REGRESSION: incremental warm sweeps below "
+                f"{args.check_warm_speedup}x cold: {slow}"
+            )
+            raise SystemExit(1)
+        print(
+            "warm-sweep gate ok: all cells >= "
+            f"{args.check_warm_speedup}x cold"
+        )

@@ -24,6 +24,7 @@ docs/ARCHITECTURE.md for the engine behind the options.
 
 from __future__ import annotations
 
+import hashlib
 import time
 
 import numpy as np
@@ -39,7 +40,7 @@ from repro.core.runstate import (
     _norm_step,
     load_latest_runstate,
 )
-from repro.core.score_common import ScoreConfig
+from repro.core.score_common import ScoreConfig, config_key
 from repro.core.score_exact import CVScorer
 from repro.core.score_lowrank import CVLRScorer
 from repro.core.spec import DataSpec, EngineOptions, VariableSpec, resolve_spec
@@ -134,11 +135,27 @@ class DiscoverySession:
     (`"batched"` → the scorer's prefetch engine, `"sharded"` → the
     distributed stacked pipeline, `"sequential"` → lazy per-candidate
     scores) and records one entry per sweep in `sweep_log`:
-    ``{phase, sweep, n_configs, n_scored, step, gram_cache,
-    feature_bank}`` with the Gram-cache and feature-bank counter deltas
-    for that sweep.  This is the seam the planned
-    incremental-frontier-delta optimization plugs into — a session sees
-    consecutive frontiers and can diff them.
+    ``{phase, sweep, n_configs, n_scored, step, elapsed_s, frontier,
+    enum, score_cache, gram_cache, feature_bank}`` with the Gram-cache
+    and feature-bank counter deltas for that sweep.
+
+    **Incremental frontier deltas** (`EngineOptions(incremental=True)`,
+    the default; docs/ARCHITECTURE.md, "Incremental frontier-delta
+    engine"): the session is the seam that sees consecutive frontiers,
+    so it keeps the previous sweep's config-key set and hands the
+    scoring engine only the *delta* — configs the last applied step
+    could actually have changed — while `repro.core.ges` carries
+    candidate lists for provably-untouched pairs across sweeps (the
+    incidence rule).  Each sweep record's ``frontier`` entry counts
+    ``{carried, delta, invalidated}`` config keys, ``enum`` counts
+    ``{pairs_full, pairs_carried, touched}`` from the enumeration
+    cache, and ``score_cache`` snapshots the scorer's local-score memo
+    ``{entries, evictions}``.  `EngineOptions(incremental=False)` keeps
+    full re-enumeration + full-frontier routing as the differential
+    oracle (tests/test_frontier_delta.py proves both produce bitwise
+    identical CPDAGs, traces, and scores).  Correctness never rests on
+    the diff: every engine re-checks its own cache, and lazy
+    `local_score` backstops any config a diff could miss.
 
     The session owns a `repro.features.bank.FeatureBank` (exposed as
     `feature_bank`): built factors persist across the run's sweeps, and
@@ -214,6 +231,15 @@ class DiscoverySession:
         )
         self.spec = self.scorer.view.spec
         self.feature_bank = getattr(self.scorer, "feature_bank", None)
+        # Incremental frontier-delta engine state: the previous sweep's
+        # config-key set (None until a sweep completes), read by
+        # `score_frontier` to route only the delta, and by ges() via the
+        # `incremental` attribute to enable its candidate-carrying cache.
+        self.incremental = self.options.incremental
+        self._prev_frontier: set | None = None
+        if self.options.score_memo_entries is not None:
+            self.scorer.score_memo_max = self.options.score_memo_entries
+        self._score_fp = self._score_fingerprint(method)
         self.max_subset = max_subset
         self.verbose = verbose
         self.sweep_log: list = []
@@ -261,6 +287,7 @@ class DiscoverySession:
                     f"{d} variables"
                 )
             self._verify_bank_meta(state)
+            self._restore_warm_state(state)
             self.run_state = state
             self.sweep_log = state.sweep_log  # aliased: appends persist
             self._last_ckpt = step
@@ -269,6 +296,42 @@ class DiscoverySession:
             self.run_state = RunState.fresh(d)
             self.run_state.sweep_log = self.sweep_log  # aliased
             self.resumed_from = None
+
+    def _score_fingerprint(self, method: str) -> str:
+        """Identity of everything a memo'd local score depends on: the raw
+        data bytes, the score hyperparameters, the feature routing policy
+        (seed included), and the scoring method.  Guards the checkpointed
+        score memo / frontier on resume — scores are pure functions of
+        this fingerprint plus the (node, parents) key, so a match makes
+        carrying them exact and a mismatch drops them (cold but correct).
+        """
+        h = hashlib.sha1()
+        view = self.scorer.view
+        h.update(np.ascontiguousarray(view.data).tobytes())
+        h.update(repr(self.spec).encode())
+        h.update(repr(self.scorer.config).encode())
+        h.update(type(self.scorer).__name__.encode())
+        h.update(method.encode())
+        policy = getattr(self.scorer, "policy", None)
+        if policy is not None:
+            h.update(repr(policy.fingerprint()).encode())
+        return h.hexdigest()
+
+    def _restore_warm_state(self, state: RunState) -> None:
+        """Warm-start the scorer's score memo and the delta engine's
+        previous-frontier set from a checkpoint — only under an exact
+        score-fingerprint match (`_score_fingerprint`); anything else
+        silently resumes cold, which is always correct, just slower."""
+        if state.score_fp is None or state.score_fp != self._score_fp:
+            return
+        memo_put = getattr(self.scorer, "_memo_put", None)
+        if memo_put is not None:
+            for node, parents, val in state.score_memo:
+                memo_put(config_key(int(node), parents), float(val))
+        if self.incremental and state.frontier is not None:
+            self._prev_frontier = {
+                config_key(int(n), ps) for n, ps in state.frontier
+            }
 
     def _verify_bank_meta(self, state: RunState) -> None:
         """Re-admit checkpointed FeatureBank entries by *fingerprint*, not
@@ -313,7 +376,7 @@ class DiscoverySession:
             raise DeadlineExceeded(self.tenant, sweep_idx, elapsed, budget)
 
     # -- sweep lifecycle (driven by repro.core.ges.ges) -------------------
-    def begin_sweep(self, phase: str) -> None:
+    def begin_sweep(self, phase: str, enum_stats: dict | None = None) -> None:
         sweep_idx = len(self.sweep_log)
         self._check_interrupt(sweep_idx)
         if self.fault_plan is not None:
@@ -335,6 +398,8 @@ class DiscoverySession:
             "n_configs": 0,
             "n_scored": 0,
             "step": None,
+            "_enum": dict(enum_stats) if enum_stats else None,
+            "_t0": time.perf_counter(),
             "_stats0": dict(stats.stats) if stats is not None else None,
             "_bank0": dict(self.feature_bank.stats)
             if self.feature_bank is not None
@@ -349,16 +414,50 @@ class DiscoverySession:
         if self._active is None:
             self.begin_sweep("adhoc")
         self._check_interrupt(self._active["sweep"])
+        configs = list(configs)
         self._active["n_configs"] = len(configs)
+        # Incremental frontier delta: score only configs that were not in
+        # the previous sweep's frontier.  Carried configs were all scored
+        # last sweep (every engine commits the full frontier to the
+        # scorer's memo, and the lazy path scores every candidate), so
+        # skipping them here is exact; if one was LRU-evicted from a
+        # bounded memo, ges's lazy `local_score` fallback recomputes it.
+        prev = self._prev_frontier if self.incremental else None
+        memo = getattr(self.scorer, "_score_cache", {})
+        if prev is not None:
+            # a carried config evicted from a bounded memo is re-scored
+            # through the engine, not left to the lazy fallback
+            to_score = [c for c in configs if c not in prev or c not in memo]
+            cur = set(configs)
+            self._active["frontier"] = {
+                "carried": len(configs) - len(to_score),
+                "delta": len(to_score),
+                "invalidated": len(prev - cur),
+            }
+        else:
+            to_score = configs
+            cur = set(configs)
+            if self.incremental:
+                self._active["frontier"] = {
+                    "carried": 0,
+                    "delta": len(configs),
+                    "invalidated": 0,
+                }
+        if self.incremental:
+            self._prev_frontier = cur
         if self._sharded_hook is not None:
             tel: dict = {}
-            n = self._sharded_hook(
-                self.scorer,
-                configs,
-                options=self.options,
-                fault_plan=self.fault_plan,
-                sweep=self._active["sweep"],
-                telemetry=tel,
+            n = (
+                self._sharded_hook(
+                    self.scorer,
+                    to_score,
+                    options=self.options,
+                    fault_plan=self.fault_plan,
+                    sweep=self._active["sweep"],
+                    telemetry=tel,
+                )
+                if to_score
+                else 0
             )
             if any(
                 tel.get(k)
@@ -367,7 +466,15 @@ class DiscoverySession:
                 self._active["shards"] = tel
         elif self.options.batched:
             prefetch = getattr(self.scorer, "prefetch", None)
-            n = prefetch(configs) if prefetch is not None else 0
+            # warm incremental sweeps (prev frontier known) mark their
+            # delta small-batch-eligible: the uncached count is a
+            # sweep-over-sweep delta, and the engine's small-batch path
+            # sidesteps the device pipeline's bank-shaped recompiles
+            n = (
+                prefetch(to_score, small_batch=prev is not None)
+                if prefetch is not None and to_score
+                else 0
+            )
         else:
             n = 0  # sequential: ges falls back to lazy local_score
         self._active["n_scored"] = int(n)
@@ -379,6 +486,18 @@ class DiscoverySession:
             return
         self._check_interrupt(rec["sweep"])
         rec["step"] = _norm_step(step)
+        rec["elapsed_s"] = round(time.perf_counter() - rec.pop("_t0"), 6)
+        enum = rec.pop("_enum", None)
+        if enum:
+            rec["enum"] = enum
+        memo = getattr(self.scorer, "_score_cache", None)
+        if memo is not None:
+            rec["score_cache"] = {
+                "entries": len(memo),
+                "evictions": int(
+                    getattr(self.scorer, "score_memo_evictions", 0)
+                ),
+            }
         stats0 = rec.pop("_stats0")
         cache = getattr(self.scorer, "gram_cache", None)
         if cache is not None and stats0 is not None:
@@ -436,11 +555,26 @@ class DiscoverySession:
                 for vk, fp in self.feature_bank.metadata()
                 if self._owns_bank_entry(vk, fp)
             ]
-        if (
-            self._checkpointer is not None
-            and rs.sweep % self.options.checkpoint_every == 0
-        ):
-            self._checkpoint(rs.sweep)
+        if self._checkpointer is not None:
+            # Warm-resume payload: the scorer's score memo (LRU order
+            # preserved) + the delta engine's previous frontier, guarded
+            # by the score fingerprint.  Only maintained when checkpoints
+            # are on — nothing else reads it.
+            memo = getattr(self.scorer, "_score_cache", None)
+            if memo is not None:
+                rs.score_memo = [
+                    [int(k[0]), [int(p) for p in k[1]], float(v)]
+                    for k, v in memo.items()
+                ]
+            rs.frontier = (
+                [[int(k[0]), [int(p) for p in k[1]]]
+                 for k in sorted(self._prev_frontier)]
+                if self._prev_frontier is not None
+                else None
+            )
+            rs.score_fp = self._score_fp
+            if rs.sweep % self.options.checkpoint_every == 0:
+                self._checkpoint(rs.sweep)
 
     def _owns_bank_entry(self, vars_key, fp) -> bool:
         """Fingerprint isolation on a *shared* bank: a checkpoint must

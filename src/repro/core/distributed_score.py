@@ -214,7 +214,7 @@ def _finalize_scores(scorer, keys, scores, sweep=None) -> int:
         val = float(s)
         if not np.isfinite(val) and recover is not None:
             val = float(recover(key[0], key[1]))
-        scorer._score_cache[key] = val
+        scorer._memo_put(key, val)
     return len(keys)
 
 
@@ -223,7 +223,15 @@ _DEFAULT_HB_TIMEOUT_S = 10.0  # heartbeat window when no per-shard timeout
 
 
 def _partition(items: list, k: int) -> list:
-    """k near-equal contiguous slices (some possibly empty)."""
+    """k near-equal contiguous slices (some possibly empty).
+
+    Deterministic in the input order, and per-key scores are
+    partition-independent (`_stacked_scores_for_keys`), so it makes no
+    difference whether the session hands the runner a full frontier or
+    just its incremental delta (`EngineOptions(incremental=True)` routes
+    only new-config keys here): a delta's keys arrive in the same sorted
+    frontier order and score bitwise-identically to the same keys inside
+    a full-frontier shard."""
     n = len(items)
     base, extra = divmod(n, k)
     out, lo = [], 0

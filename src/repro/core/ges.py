@@ -68,41 +68,162 @@ def _subsets(items, max_size=None):
         yield from itertools.combinations(items, k)
 
 
+def _forward_pair_candidates(a, x, y, max_subset):
+    """Insert(x, y, T) candidates of ONE ordered non-adjacent pair.
+
+    Forward candidates carry their clique set `nat` as a 7th element so
+    the frontier-delta cache can re-run the (global) semi-directed path
+    filter on carried candidates without re-deriving NA/T — the filter is
+    applied here for a fresh enumeration and in `_FrontierDelta` for a
+    carried pair; both run the same `semi_directed_blocked` on the same
+    (y, x, nat) arguments, so carried == re-enumerated exactly.
+    """
+    if g.adjacent(a, x, y):
+        return
+    na = _na_yx(a, y, x)
+    t_pool = [
+        v
+        for v in g.neighbors_undir(a, y)
+        if not g.adjacent(a, v, x) and v != x
+    ]
+    pa_y = frozenset(g.parents(a, y))
+    for t in _subsets(t_pool, max_subset):
+        nat = na | frozenset(t)
+        if not g.is_clique(a, nat):
+            continue
+        base = nat | pa_y
+        yield ("insert", x, y, frozenset(t), base | {x}, base, nat)
+
+
+def _backward_pair_candidates(a, x, y, max_subset):
+    """Delete(x, y, H) candidates of ONE ordered pair with x -> y or
+    x -- y.  Backward validity is purely local (clique check only — no
+    path filter), so carried candidates need no re-filtering; the `nat`
+    slot is None."""
+    if not (g.has_dir(a, x, y) or g.has_undir(a, x, y)):
+        return
+    na = _na_yx(a, y, x)
+    pa_y = frozenset(g.parents(a, y))
+    for h in _subsets(na, max_subset):
+        rest = na - frozenset(h)
+        if not g.is_clique(a, rest):
+            continue
+        base = rest | (pa_y - {x})
+        yield ("delete", x, y, frozenset(h), base, base | {x}, None)
+
+
+_PAIR_GENS = {
+    "forward": _forward_pair_candidates,
+    "backward": _backward_pair_candidates,
+}
+
+
 def _forward_candidates(a, max_subset):
     d = a.shape[0]
     for x, y in itertools.permutations(range(d), 2):
-        if g.adjacent(a, x, y):
-            continue
-        na = _na_yx(a, y, x)
-        t_pool = [
-            v
-            for v in g.neighbors_undir(a, y)
-            if not g.adjacent(a, v, x) and v != x
-        ]
-        pa_y = frozenset(g.parents(a, y))
-        for t in _subsets(t_pool, max_subset):
-            nat = na | frozenset(t)
-            if not g.is_clique(a, nat):
-                continue
-            if not g.semi_directed_blocked(a, y, x, nat):
-                continue
-            base = nat | pa_y
-            yield ("insert", x, y, frozenset(t), base | {x}, base)
+        for cand in _forward_pair_candidates(a, x, y, max_subset):
+            if g.semi_directed_blocked(a, cand[2], cand[1], cand[6]):
+                yield cand[:6]
 
 
 def _backward_candidates(a, max_subset):
     d = a.shape[0]
     for x, y in itertools.permutations(range(d), 2):
-        if not (g.has_dir(a, x, y) or g.has_undir(a, x, y)):
-            continue
-        na = _na_yx(a, y, x)
-        pa_y = frozenset(g.parents(a, y))
-        for h in _subsets(na, max_subset):
-            rest = na - frozenset(h)
-            if not g.is_clique(a, rest):
-                continue
-            base = rest | (pa_y - {x})
-            yield ("delete", x, y, frozenset(h), base, base | {x})
+        for cand in _backward_pair_candidates(a, x, y, max_subset):
+            yield cand[:6]
+
+
+def step_incidence(a_prev, a_new) -> frozenset:
+    """Nodes whose incident edges changed between consecutive CPDAGs — the
+    per-step incidence set the frontier-delta engine diffs against.
+
+    Computed from the actual adjacency diff, NOT from the applied step's
+    (x, y, T) arguments: `pdag_to_cpdag` (Dor & Tarsi extension + Meek
+    rules R1-R4) can reorient edges far from the insertion point, and any
+    such reorientation lands some node in this set by construction."""
+    diff = np.asarray(a_prev) != np.asarray(a_new)
+    return frozenset(
+        int(v) for v in np.flatnonzero(diff.any(axis=0) | diff.any(axis=1))
+    )
+
+
+class _FrontierDelta:
+    """Per-pair candidate lists carried across the sweeps of one GES run.
+
+    Invalidation rule (the incidence rule — docs/ARCHITECTURE.md has the
+    proof sketch): let T = `step_incidence(a_prev, a_new)`.  An ordered
+    pair (x, y) is re-enumerated from scratch iff ``x in T``, ``y in T``,
+    or ``nbr(y) & T != {}`` (adjacent-either-way neighbors of y in the
+    new graph; y not in T implies nbr(y) is unchanged, so checking the
+    new graph covers the old one).  For every other pair, all the local
+    ingredients of its candidates — the x~y adjacency gate, NA_{Y,X},
+    the T/H pools, Pa_Y, and every clique check (edges among subsets of
+    nbr(y)) — are functions of rows of {x, y} u nbr(y) only, all
+    untouched, so the cached candidate list is *identical* to what fresh
+    enumeration would produce, except for the forward operator's
+    semi-directed path filter, which is a global property and is re-run
+    per carried candidate.  tests/test_frontier_delta.py property-checks
+    the diffed enumeration set-equal to the full one on random step
+    sequences.
+    """
+
+    def __init__(self, max_subset):
+        self.max_subset = max_subset
+        self.phase = None
+        self.a_prev = None
+        self.pair_cands: dict = {}  # (x, y) -> list of 7-tuples
+        self.stats: dict = {}
+
+    def candidates(self, a, phase: str) -> list:
+        """The phase's full candidate list for CPDAG `a`, reusing cached
+        per-pair lists for pairs the last applied step provably did not
+        touch.  Also refreshes `self.stats` (telemetry for the session's
+        sweep log): pairs_full / pairs_carried / touched."""
+        d = a.shape[0]
+        gen = _PAIR_GENS[phase]
+        fresh = (
+            self.phase != phase
+            or self.a_prev is None
+            or self.a_prev.shape != a.shape
+        )
+        if fresh:
+            touched = None  # full enumeration
+        else:
+            touched = step_incidence(self.a_prev, a)
+        adj = (np.asarray(a) + np.asarray(a).T) > 0
+        cands = []
+        n_full = n_carried = 0
+        new_pairs = {}
+        for x, y in itertools.permutations(range(d), 2):
+            carried = None
+            if touched is not None and x not in touched and y not in touched:
+                nbr_y = np.flatnonzero(adj[y])
+                if not any(int(v) in touched for v in nbr_y):
+                    carried = self.pair_cands.get((x, y), ())
+            if carried is None:
+                pair = list(gen(a, x, y, self.max_subset))
+                n_full += 1
+            else:
+                pair = carried
+                n_carried += 1
+            new_pairs[(x, y)] = pair
+            if phase == "forward":
+                cands.extend(
+                    c[:6]
+                    for c in pair
+                    if g.semi_directed_blocked(a, c[2], c[1], c[6])
+                )
+            else:
+                cands.extend(c[:6] for c in pair)
+        self.pair_cands = new_pairs
+        self.phase = phase
+        self.a_prev = np.asarray(a, dtype=np.int8).copy()
+        self.stats = {
+            "pairs_full": n_full,
+            "pairs_carried": n_carried,
+            "touched": len(touched) if touched is not None else d,
+        }
+        return cands
 
 
 def _apply_insert(a, x, y, t):
@@ -188,12 +309,24 @@ def ges(
         fwd, bwd = int(state.forward_steps), int(state.backward_steps)
         start_phase = state.phase
 
+    # One delta cache per ges() call, shared across phases: the session
+    # seam opts in (EngineOptions.incremental); bare ges() keeps the full
+    # re-enumeration path as the differential oracle.
+    delta_cache = (
+        _FrontierDelta(max_subset)
+        if session is not None and getattr(session, "incremental", False)
+        else None
+    )
+
     def sweep(phase):
         nonlocal a
         steps = 0
         gen = _forward_candidates if phase == "forward" else _backward_candidates
         while True:
-            cands = list(gen(a, max_subset))
+            if delta_cache is not None:
+                cands = delta_cache.candidates(a, phase)
+            else:
+                cands = list(gen(a, max_subset))
             if not cands:
                 break
             configs = set()
@@ -206,7 +339,10 @@ def ges(
             # a sweep's shared-core chunks dense instead of interleaved.
             configs = sorted(configs, key=lambda c: (c[1], c[0]))
             if session is not None:
-                session.begin_sweep(phase)
+                session.begin_sweep(
+                    phase,
+                    enum_stats=delta_cache.stats if delta_cache else None,
+                )
                 session.score_frontier(configs)
             elif batch_hook is not None:
                 batch_hook(scorer, configs)

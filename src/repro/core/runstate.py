@@ -20,7 +20,12 @@ argmax).  `RunState` is the object that crosses the crash:
   state cannot be trusted across a crash, so resume re-admits factors by
   re-verifying each recorded fingerprint against the new scorer's policy
   instead of restoring arrays;
-* ``degradations`` — cumulative numerical-degradation counters.
+* ``degradations`` — cumulative numerical-degradation counters;
+* ``score_memo`` / ``frontier`` / ``score_fp`` — the incremental
+  frontier-delta engine's warm state: the scorer's local-score memo, the
+  last sweep's config keys, and a fingerprint guarding both (a resumed
+  session with a different data/config/policy fingerprint drops them and
+  runs cold — correctness never depends on the warm state, only speed).
 
 Serialization rides the existing atomic checkpoint store
 (`repro.checkpoint.store.save_checkpoint` / `AsyncCheckpointer`): the
@@ -235,6 +240,18 @@ class RunState:
     sweep_log: list = dataclasses.field(default_factory=list)
     bank_meta: list = dataclasses.field(default_factory=list)
     degradations: dict = dataclasses.field(default_factory=dict)
+    # Warm-resume state for the incremental frontier-delta engine (all
+    # optional — absent in pre-PR-8 checkpoints, restored via `.get()`
+    # defaults so the "repro.runstate.v1" format id is unchanged):
+    # score_memo: the scorer's local-score memo as [node, [parents], score]
+    # rows in LRU order; frontier: the last completed sweep's config keys
+    # as [node, [parents]] rows (None = no sweep completed / not
+    # incremental); score_fp: fingerprint of everything the memo'd scores
+    # depend on (data, config, policy, method) — a resume whose session
+    # fingerprint differs silently drops both and runs cold.
+    score_memo: list = dataclasses.field(default_factory=list)
+    frontier: list | None = None
+    score_fp: str | None = None
 
     @classmethod
     def fresh(cls, d: int) -> "RunState":
@@ -255,6 +272,9 @@ class RunState:
             "sweep_log": self.sweep_log,
             "bank_meta": self.bank_meta,
             "degradations": self.degradations,
+            "score_memo": self.score_memo,
+            "frontier": self.frontier,
+            "score_fp": self.score_fp,
         }
         raw = np.frombuffer(
             json.dumps(payload).encode("utf-8"), dtype=np.uint8
@@ -285,6 +305,16 @@ class RunState:
             sweep_log=[_norm_sweep_rec(r) for r in payload["sweep_log"]],
             bank_meta=[list(e) for e in payload["bank_meta"]],
             degradations=dict(payload["degradations"]),
+            score_memo=[
+                [int(n), [int(p) for p in ps], float(v)]
+                for n, ps, v in payload.get("score_memo", [])
+            ],
+            frontier=(
+                [[int(n), [int(p) for p in ps]] for n, ps in payload["frontier"]]
+                if payload.get("frontier") is not None
+                else None
+            ),
+            score_fp=payload.get("score_fp"),
         )
 
     def save(self, directory: str, step: int) -> str:

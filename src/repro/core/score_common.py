@@ -607,7 +607,18 @@ class VariableView:
 
 
 class ScorerBase:
-    """Decomposable local-score interface shared by CV and CV-LR."""
+    """Decomposable local-score interface shared by CV and CV-LR.
+
+    The (node, parents) -> score memo (`_score_cache`) is an ordered dict
+    so it can optionally run as an LRU: `score_memo_max` (None = unbounded,
+    the historical behavior; `EngineOptions.score_memo_entries` threads it
+    in) bounds the entry count, evicting least-recently-scored
+    configurations.  Eviction is always *safe* — a local score is a pure
+    function of its configuration, so an evicted entry just recomputes on
+    the next lookup — but it trades memory for re-dispatch time, so the
+    memo's size and cumulative evictions are exposed (`cache_size` /
+    `score_memo_evictions`) and surfaced in the session's per-sweep log.
+    """
 
     def __init__(self, view: VariableView, config: ScoreConfig):
         self.view = view
@@ -618,21 +629,42 @@ class ScorerBase:
         self.perm = perm
         self.n_eff, self.n0, self.n1 = n_eff, n0, n1
         self.train_idx = train_idx
-        self._score_cache: dict = {}
+        self._score_cache: collections.OrderedDict = collections.OrderedDict()
+        self.score_memo_max: int | None = None
+        self.score_memo_evictions = 0
+
+    def _memo_put(self, key, val: float) -> None:
+        """Single write point for the score memo: insert + LRU bound."""
+        self._score_cache[key] = val
+        cap = self.score_memo_max
+        if cap is not None:
+            while len(self._score_cache) > cap:
+                self._score_cache.popitem(last=False)
+                self.score_memo_evictions += 1
 
     # -- public API ------------------------------------------------------
     def local_score(self, i: int, parents=()) -> float:
         key = config_key(i, parents)
-        if key not in self._score_cache:
-            self._score_cache[key] = float(self._compute(key[0], key[1]))
-        return self._score_cache[key]
+        cached = self._score_cache.get(key)
+        if cached is None:
+            self._memo_put(key, float(self._compute(key[0], key[1])))
+            return self._score_cache[key]
+        if self.score_memo_max is not None:
+            # recency only matters when the memo is bounded; the unbounded
+            # (default) path skips the per-lookup reorder
+            self._score_cache.move_to_end(key)
+        return cached
 
-    def prefetch(self, configs) -> int:
+    def prefetch(
+        self, configs, timings: dict | None = None, small_batch: bool = False
+    ) -> int:
         """Batch-evaluate ``(node, parents)`` configurations ahead of the
         `local_score` lookups of a GES sweep.  Returns the number of scores
         actually computed.  The base implementation is lazy (0 computed;
         `local_score` falls back to per-candidate evaluation) — batched
-        scorers override this with a single-dispatch engine.
+        scorers override this with a single-dispatch engine.  `small_batch`
+        marks the dispatch small-batch-eligible (a warm incremental
+        sweep's delta); scorers without a fast path ignore it.
         """
         return 0
 

@@ -386,6 +386,7 @@ def cvlr_scores_batched(
     score_chunk: int = 64,
     timings: dict | None = None,
     precision: str = "bitwise",
+    small_batch: bool = False,
 ) -> np.ndarray:
     """Score a whole GES frontier in a handful of device dispatches.
 
@@ -445,11 +446,34 @@ def cvlr_scores_batched(
     dispatchers — ``"f32_gram"`` relaxes the CPU engine==oracle bitwise
     guarantee to ~1e-7-relative Gram accuracy in exchange for f32
     contractions on the gather+einsum backend (the fold algebra stays f64).
+
+    small_batch: the incremental frontier-delta fast path — a warm sweep's
+    delta is tens of configs, and routing it through the full machinery
+    pays two costs the delta doesn't need: (1) the device-resident
+    pipeline's jit signatures are keyed on *bank* shapes, which grow as
+    the search discovers factors, so each delta sweep recompiles; (2) the
+    default padding caps (`len(bank)`) are themselves bank-size-dependent,
+    so stack heights like 23 -> 23 leak data-dependent shapes into the jit
+    cache.  ``small_batch=True`` forces the host-assembly path (whose jit
+    signatures depend only on chunk shapes), shrinks the chunks
+    (pair_chunk <= 8, score_chunk <= 16 — a 20-config delta fills a chunk
+    instead of 1/8th of one), and pads every stack height to a pure power
+    of two (uncapped), so after a handful of sweeps every shape recurs and
+    dispatch is compile-free.  Scores are bitwise-identical to the default
+    path on CPU (the host path guarantee); it is purely a
+    latency/compile-churn trade, chosen per call by `CVLRScorer.prefetch`.
     """
     pairs = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
     n_pairs = pairs.shape[0]
     if n_pairs == 0:
         return np.zeros((0,), dtype=np.float64)
+    if small_batch:
+        pair_chunk = min(pair_chunk, 8)
+        score_chunk = min(score_chunk, 16)
+    # pow2 stack-height cap: bank length by default (no point padding a
+    # 5-entry bank to 8 rows of zeros) — UNCAPPED in small-batch mode,
+    # where shape recurrence matters more than a few zero rows
+    pad_cap = (1 << 30) if small_batch else None
     lam_x_bank = [jnp.asarray(a) for a in lam_x_bank]
     lam_z_bank = [jnp.asarray(a) for a in lam_z_bank]
     dtype = lam_x_bank[0].dtype
@@ -571,11 +595,15 @@ def cvlr_scores_batched(
                 m_effs[rb[0]][rb[1]],
             )
 
-    use_banks = (not conflict[0]) and cache.begin_device_sweep(
-        specs, q=q, dtype=dtype
+    use_banks = (
+        (not small_batch)
+        and (not conflict[0])
+        and cache.begin_device_sweep(specs, q=q, dtype=dtype)
     )
     if timings is not None:
         timings["path"] = "device" if use_banks else "host"
+        if small_batch:
+            timings["small_batch"] = True
 
     def _gather_missing(needed):
         """One counted cache lookup per needed key; returns keys to compute."""
@@ -662,7 +690,9 @@ def cvlr_scores_batched(
         for w, items in sorted(groups.items()):
             ids = sorted({i for _, i in items})
             loc = {i: k for k, i in enumerate(ids)}
-            st = _stack_refs([(side, i) for i in ids], w, len(banks[side]))
+            st = _stack_refs(
+                [(side, i) for i in ids], w, pad_cap or len(banks[side])
+            )
             for c0 in range(0, len(items), pair_chunk):
                 chunk = items[c0 : c0 + pair_chunk]
                 cpad = _pow2_pad(len(chunk), pair_chunk)
@@ -682,7 +712,7 @@ def cvlr_scores_batched(
             wa = bucks[ra[0]][ra[1]]
             wb = bucks[rb[0]][rb[1]]
             groups.setdefault((wa, wb), []).append((key, (ra, rb)))
-        cap = len(lam_x_bank) + len(lam_z_bank)
+        cap = pad_cap or (len(lam_x_bank) + len(lam_z_bank))
         for (wa, wb), items in sorted(groups.items()):
             a_refs = sorted({ra for _, (ra, _) in items})
             b_refs = sorted({rb for _, (_, rb) in items})
@@ -741,7 +771,7 @@ def cvlr_scores_batched(
         z_cores: dict = {}  # wz -> (s_bank, f_bank, chol_bank) device tensors
         z_loc: dict = {}  # zi -> row in its width's core bank
         for w, zids in sorted(z_by_w.items()):
-            npad = _pow2_pad(len(zids), len(lam_z_bank))
+            npad = _pow2_pad(len(zids), pad_cap or len(lam_z_bank))
             if use_banks:
                 zslots = []
                 for k, zi in enumerate(sorted(zids)):
@@ -967,6 +997,7 @@ class CVLRScorer(ScorerBase):
         self.options = options
         self.batched = batched  # False => ges() falls back to lazy local_score
         self.precision = precision
+        self.score_memo_max = options.score_memo_entries
         self.policy = (
             options.features
             if options.features is not None
@@ -1177,12 +1208,34 @@ class CVLRScorer(ScorerBase):
         self.degradations["unrecovered"] += 1
         return float("-inf")
 
-    def prefetch(self, configs, timings: dict | None = None) -> int:
+    # Uncached-config count at or below which a small-batch-eligible
+    # `prefetch` flips the engine into its small-batch mode (host path,
+    # small chunks, pure-pow2 padding — see `cvlr_scores_batched`).  A
+    # warm incremental sweep's delta is typically O(d) configs; the
+    # crossover where the device path's bank-shaped jit signatures pay
+    # for themselves sits well above this on CPU (measured: a ~50-config
+    # delta runs ~5x faster small-batch than through the device
+    # pipeline's recompiles).
+    SMALL_BATCH_CONFIGS = 128
+
+    def prefetch(
+        self, configs, timings: dict | None = None, small_batch: bool = False
+    ) -> int:
         """Batched frontier engine: evaluate every uncached (node, parents)
         configuration through `cvlr_scores_batched`, sharing Gram blocks via
         `self.gram_cache` (device-resident when its device tier is enabled).
         Called by ges() once per sweep iteration; `timings` is forwarded to
-        the engine's per-stage profiler (benchmarks only)."""
+        the engine's per-stage profiler (benchmarks only).
+
+        small_batch: marks this dispatch small-batch-ELIGIBLE — the
+        incremental session seam passes True for warm delta sweeps, whose
+        uncached count is a sweep-over-sweep delta, not a full frontier.
+        The engine's `small_batch` fast path (bitwise-equal scores,
+        compile-stable shapes) then engages once the uncached count is at
+        most `SMALL_BATCH_CONFIGS`.  Default False: a directly-driven
+        scorer keeps its configured device/host path regardless of
+        frontier size (the device-bank contract in
+        tests/test_device_bank.py)."""
         if not self.batched:
             return 0
         todo = []
@@ -1223,6 +1276,7 @@ class CVLRScorer(ScorerBase):
                 gram_cache=self.gram_cache,
                 timings=timings,
                 precision=self.precision,
+                small_batch=small_batch and len(todo) <= self.SMALL_BATCH_CONFIGS,
             )
         if self.fault_plan is not None:
             scores = self.fault_plan.corrupt_scores(scores, self.fault_sweep)
@@ -1230,5 +1284,5 @@ class CVLRScorer(ScorerBase):
             val = float(s)
             if not np.isfinite(val):
                 val = self._recover_score(key[0], key[1])
-            self._score_cache[key] = val
+            self._memo_put(key, val)
         return len(todo)

@@ -387,6 +387,33 @@ class EngineOptions:
       `repro.core.runstate.DeadlineExceeded` once the budget is spent —
       the serving layer's load-shedding hook (`repro.serving`).  None
       (the default) means no deadline.
+
+    incremental: the sweep-over-sweep frontier-delta engine (default
+      True).  A `DiscoverySession` diffs each sweep's frontier against
+      the previous one: configurations already scored are *carried* from
+      the scorer's memo without re-dispatch, only the *delta* (new
+      configurations incident to the applied step) is scored — through
+      the small-batch fast path when the delta is small — and the GES
+      candidate enumerator carries per-pair candidate lists across
+      sweeps, re-enumerating only pairs the applied step touched.
+      ``False`` restores the full re-enumerate/re-dispatch behavior —
+      kept as the differential oracle (tests/test_frontier_delta.py
+      proves the two paths bitwise-equal).  Sweep-log entries record the
+      carried/delta/invalidated counts either way.
+
+    score_memo_entries: optional LRU bound on the scorer's (node,
+      parents) -> score memo (`ScorerBase._score_cache`), which is
+      otherwise unbounded — a long multi-tenant session's memo can only
+      grow.  Eviction is safe (scores are pure functions of the
+      configuration and recompute on demand, at re-dispatch cost); the
+      per-sweep log exposes the entry count and cumulative evictions
+      under ``"score_cache"`` either way.  A bound that still holds the
+      sweep working set never evicts mid-search and changes nothing; a
+      bound *below* the working set keeps the search correct (same
+      equivalence class) but relaxes bitwise reproducibility vs an
+      unbounded run to the engine==oracle 1e-8 tolerance, because
+      evicted configurations are recomputed through the lazy per-config
+      path.  None (default) = unbounded.
     """
 
     engine: str = "batched"
@@ -400,6 +427,8 @@ class EngineOptions:
     shard_retries: int = 2
     shard_timeout_s: float | None = None
     deadline_s: float | None = None
+    incremental: bool = True
+    score_memo_entries: int | None = None
 
     def __post_init__(self):
         if self.engine not in ENGINES:
@@ -468,6 +497,16 @@ class EngineOptions:
                     f"deadline_s must be > 0 or None, got {self.deadline_s!r}"
                 )
             object.__setattr__(self, "deadline_s", dl)
+        object.__setattr__(self, "incremental", bool(self.incremental))
+        if self.score_memo_entries is not None:
+            if int(self.score_memo_entries) < 1:
+                raise ValueError(
+                    "score_memo_entries must be >= 1 or None, got "
+                    f"{self.score_memo_entries!r}"
+                )
+            object.__setattr__(
+                self, "score_memo_entries", int(self.score_memo_entries)
+            )
 
     @property
     def batched(self) -> bool:

@@ -39,7 +39,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_context  # noqa: E402
 from repro.launch.shardings import (  # noqa: E402
     adafactor_state_shardings,
     adamw_state_shardings,
@@ -267,13 +267,15 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str, force=Fal
             fn, args, in_shards, resolver, donate = build_lm_cell(
                 arch, shape_name, mesh
             )
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             jitted = jax.jit(fn, in_shardings=in_shards, donate_argnums=donate)
             lowered = jitted.lower(*args)
             t_lower = time.time() - t0
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             cost = compiled.cost_analysis() or {}
+            if isinstance(cost, list):  # jax < 0.5: one dict per program
+                cost = cost[0] if cost else {}
             mem = _jsonable_memory(compiled)
             hlo = compiled.as_text()
             coll = collective_bytes(hlo)

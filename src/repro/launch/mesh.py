@@ -24,6 +24,16 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
+def mesh_context(mesh):
+    """Context manager activating `mesh` as the ambient mesh, across jax
+    versions: `jax.set_mesh` where it exists (jax >= 0.5), else the legacy
+    ``with mesh:`` resource context (the `Mesh` object is itself a context
+    manager that sets the thread-local physical mesh, which is what
+    `repro.models.layers._ambient_mesh` reads back on those versions)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
+
+
 # TPU v5e hardware constants used by the roofline analysis
 PEAK_FLOPS_BF16 = 197e12  # per chip
 HBM_BW = 819e9  # bytes/s per chip

@@ -44,6 +44,19 @@ _HINT_PRIORITY = {
 }
 
 
+def _ambient_mesh():
+    """The active mesh, across jax versions: `jax.sharding.
+    get_abstract_mesh` where it exists (jax >= 0.5), else the thread-local
+    physical mesh the legacy ``with mesh:`` context manager sets (an empty
+    mesh — no axis names — when none is active, same contract)."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        return get()
+    from jax.interpreters import pxla
+
+    return pxla.thread_resources.env.physical_mesh
+
+
 def shard_hint(x, *logical):
     """Divisibility-checked with_sharding_constraint on the ambient mesh.
 
@@ -52,7 +65,7 @@ def shard_hint(x, *logical):
     (e.g. GQA kv heads that don't divide the axis), silently multiplying
     per-device FLOPs ~16x (measured — EXPERIMENTS.md §Perf).  No-op when
     no mesh is active (single-device smoke tests)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = _ambient_mesh()
     if not mesh.axis_names:
         return x
     entries = [None] * len(x.shape)

@@ -1,0 +1,337 @@
+"""Incremental frontier-delta sweeps (PR 8): differential harness.
+
+`EngineOptions(incremental=True)` turns on two caches that must be
+invisible in the results: the session diffs consecutive frontiers and
+scores only the delta, and `repro.core.ges._FrontierDelta` carries
+per-pair candidate lists across sweeps under the incidence rule.  The
+non-incremental run is kept as the oracle, and this suite proves the two
+produce *bitwise identical* output — CPDAG, applied-step trace, final
+score, and every memo'd per-config score — across all three engines
+(batched / sharded / sequential-lazy) and all three data regimes
+(continuous / discrete / mixed), plus kill+resume: a checkpoint restores
+the warm delta state and the resumed run still matches the uninterrupted
+non-incremental oracle.
+
+The engine-level fast path (`cvlr_scores_batched(small_batch=True)`) and
+the score-memo bound (`EngineOptions(score_memo_entries=...)`) are
+covered here too: both are latency/memory knobs that must never change a
+score.  Set-equality of the carried enumeration itself is
+property-tested in tests/test_frontier_delta_props.py (hypothesis).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import ges as ges_mod
+from repro.core.api import DiscoverySession
+from repro.core.runstate import (
+    FaultPlan,
+    InjectedFault,
+    RunState,
+    load_latest_runstate,
+    load_runstate,
+)
+from repro.core.score_common import ScoreConfig, config_key
+from repro.core.score_lowrank import CVLRScorer
+from repro.core.spec import DataSpec, EngineOptions
+from repro.data.synthetic import generate_scm_data
+
+_CFG = ScoreConfig(q_folds=5, m_max=40)
+
+ENGINES = {
+    "batched": {},
+    "sharded": {"engine": "sharded", "shard_workers": 2},
+    "sequential": {"engine": "sequential"},
+}
+
+
+def _chain_data(n=80, seed=0):
+    rng = np.random.default_rng(seed)
+    x0 = rng.standard_normal(n)
+    x1 = 0.9 * x0 + 0.4 * rng.standard_normal(n)
+    x2 = np.tanh(x1) + 0.4 * rng.standard_normal(n)
+    x3 = rng.standard_normal(n)
+    return np.stack([x0, x1, x2, x3], axis=1)
+
+
+def _discrete_fixture(n=80, seed=0):
+    x = _chain_data(n, seed)
+    out = np.empty_like(x)
+    for j in range(x.shape[1]):
+        ranks = np.argsort(np.argsort(x[:, j]))
+        out[:, j] = ranks * 3 // n
+    return out, DataSpec.from_arrays(out, discrete=[True] * 4)
+
+
+def _mixed_fixture(n=80, seed=2):
+    ds = generate_scm_data(d=4, n=n, kind="mixed", seed=seed)
+    return ds.data, DataSpec.from_arrays(ds.data, dims=ds.dims,
+                                         discrete=ds.discrete)
+
+
+FIXTURES = {
+    "continuous": lambda: (_chain_data(), None),
+    "discrete": _discrete_fixture,
+    "mixed": _mixed_fixture,
+}
+
+
+def _run(data, spec=None, config=_CFG, **kw):
+    sess = DiscoverySession(data, spec=spec, config=config, **kw)
+    return sess, sess.run()
+
+
+def _assert_bitwise(inc_pair, full_pair):
+    """Incremental == non-incremental, bit for bit, on everything the
+    search produced."""
+    inc_sess, inc = inc_pair
+    full_sess, full = full_pair
+    np.testing.assert_array_equal(inc.cpdag, full.cpdag)
+    assert inc.trace == full.trace
+    assert inc.forward_steps == full.forward_steps
+    assert inc.backward_steps == full.backward_steps
+    assert inc.score == full.score  # bitwise, not approx
+    # every per-config score both runs computed must agree bitwise
+    mi, mf = inc_sess.scorer._score_cache, full_sess.scorer._score_cache
+    shared = set(mi) & set(mf)
+    assert shared, "no overlapping configs scored — fixture degenerate"
+    bad = [k for k in shared if mi[k] != mf[k]]
+    assert not bad, f"per-config score drift on {bad[:5]}"
+
+
+@pytest.mark.parametrize("regime", sorted(FIXTURES))
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+def test_differential_incremental_vs_full(engine, regime):
+    data, spec = FIXTURES[regime]()
+    engine_kw = ENGINES[engine]
+    full = _run(data, spec=spec,
+                options=EngineOptions(incremental=False, **engine_kw))
+    inc = _run(data, spec=spec,
+               options=EngineOptions(incremental=True, **engine_kw))
+    _assert_bitwise(inc, full)
+    # the delta engine actually engaged: warm sweeps carried configs and
+    # the enumeration cache carried pairs
+    log = inc[0].sweep_log
+    assert all("frontier" in r for r in log)
+    assert sum(r["frontier"]["carried"] for r in log) > 0
+    assert sum(r.get("enum", {}).get("pairs_carried", 0) for r in log) > 0
+    # ... and the oracle never diffed anything
+    assert all("frontier" not in r for r in full[0].sweep_log)
+
+
+def test_incremental_is_default():
+    assert EngineOptions().incremental is True
+    sess = DiscoverySession(_chain_data(), config=_CFG)
+    assert sess.incremental is True
+
+
+# -- kill + warm resume ---------------------------------------------------
+
+
+def test_resume_restores_warm_delta_state(tmp_path):
+    """Kill mid-search; resume="auto" must restore the score memo and the
+    previous-frontier set (fingerprint-guarded) and the resumed run must
+    still match the uninterrupted NON-incremental oracle bitwise."""
+    data = _chain_data()
+    _, ref = _run(data, options=EngineOptions(incremental=False))
+    opts = EngineOptions(checkpoint_dir=str(tmp_path), checkpoint_every=1)
+    with pytest.raises(InjectedFault):
+        _run(data, options=opts, fault_plan=FaultPlan(kill_at_sweep=2))
+    sess = DiscoverySession(data, config=_CFG, options=opts, resume="auto")
+    assert sess.resumed_from == 2
+    # warm: the memo holds the first two sweeps' scores, the delta state
+    # holds sweep 1's frontier
+    assert len(sess.scorer._score_cache) > 0
+    assert sess._prev_frontier
+    res = sess.run()
+    np.testing.assert_array_equal(res.cpdag, ref.cpdag)
+    assert res.trace == [tuple(s) for s in ref.trace]
+    assert res.score == ref.score
+    # the first post-resume sweep scored only a delta, not the full
+    # frontier — the warm state was actually used
+    first = sess.sweep_log[2]
+    assert first["frontier"]["carried"] > 0
+    assert first["n_scored"] < first["n_configs"]
+
+
+def test_foreign_fingerprint_resumes_cold_but_correct(tmp_path):
+    """A checkpoint whose score fingerprint does not match the resuming
+    session must be restored COLD (no memo, no frontier) — and still
+    reproduce the oracle exactly."""
+    data = _chain_data()
+    _, ref = _run(data, options=EngineOptions(incremental=False))
+    opts = EngineOptions(checkpoint_dir=str(tmp_path), checkpoint_every=1)
+    with pytest.raises(InjectedFault):
+        _run(data, options=opts, fault_plan=FaultPlan(kill_at_sweep=2))
+    step, state = load_latest_runstate(str(tmp_path))
+    state.score_fp = "not-this-session"
+    # same-step re-save is an idempotent no-op, so commit one step later
+    state.save(str(tmp_path), step + 1)
+    sess = DiscoverySession(data, config=_CFG, options=opts, resume="auto")
+    assert not sess.scorer._score_cache
+    assert sess._prev_frontier is None
+    res = sess.run()
+    np.testing.assert_array_equal(res.cpdag, ref.cpdag)
+    assert res.score == ref.score
+
+
+def test_runstate_warm_fields_roundtrip(tmp_path):
+    rs = RunState.fresh(3)
+    rs.score_memo = [[0, [1, 2], -12.5], [1, [], 3.25]]
+    rs.frontier = [[0, []], [2, [0, 1]]]
+    rs.score_fp = "abc123"
+    rs.save(str(tmp_path), 1)
+    back = load_runstate(str(tmp_path), 1)
+    assert back.score_memo == rs.score_memo
+    assert back.frontier == rs.frontier
+    assert back.score_fp == "abc123"
+
+
+def test_runstate_v1_backcompat_without_warm_fields():
+    """A pre-PR-8 "repro.runstate.v1" payload (no warm fields) must load
+    with cold defaults — the format id did not change."""
+    tree = RunState.fresh(3).to_tree()
+    payload = json.loads(bytes(tree["payload"]).decode())
+    for key in ("score_memo", "frontier", "score_fp"):
+        payload.pop(key)
+    raw = np.frombuffer(json.dumps(payload).encode(), dtype=np.uint8)
+    back = RunState.from_tree(tree["cpdag"], raw)
+    assert back.score_memo == []
+    assert back.frontier is None
+    assert back.score_fp is None
+
+
+# -- score-memo bound (the unbounded-cache fix) ---------------------------
+
+
+def test_score_memo_bound_large_enough_is_bitwise():
+    """A bound that holds the sweep working set changes nothing at all."""
+    data = _chain_data()
+    _, ref = _run(data, options=EngineOptions(incremental=False))
+    sess, res = _run(data, options=EngineOptions(score_memo_entries=512))
+    assert sess.scorer.score_memo_evictions == 0
+    np.testing.assert_array_equal(res.cpdag, ref.cpdag)
+    assert res.trace == ref.trace
+    assert res.score == ref.score
+
+
+def test_score_memo_tight_bound_evicts_and_stays_correct():
+    """A bound far below the frontier working set MUST evict — and the
+    search must still land on the same equivalence class.  Bitwise trace
+    equality is out of reach by construction here: an evicted config is
+    recomputed through the lazy path, which matches the batched engine
+    to 1e-8 relative (tests/test_frontier_batch.py), not to the ulp — so
+    the assertions are structural + toleranced, the honest contract of
+    the memory knob."""
+    data = _chain_data()
+    _, ref = _run(data, options=EngineOptions(incremental=False))
+    sess, res = _run(data, options=EngineOptions(score_memo_entries=8))
+    assert len(sess.scorer._score_cache) <= 8
+    assert sess.scorer.score_memo_evictions > 0
+    np.testing.assert_array_equal(res.cpdag, ref.cpdag)
+    assert [s[:4] for s in res.trace] == [s[:4] for s in ref.trace]
+    assert abs(res.score - ref.score) <= 1e-8 * max(1.0, abs(ref.score))
+    last = sess.sweep_log[-1]["score_cache"]
+    assert last["entries"] <= 8 and last["evictions"] > 0
+
+
+def test_score_cache_telemetry_recorded():
+    sess, _ = _run(_chain_data())
+    for rec in sess.sweep_log:
+        assert rec["score_cache"]["entries"] > 0
+        assert rec["score_cache"]["evictions"] == 0  # unbounded default
+        assert rec["elapsed_s"] >= 0
+
+
+def test_score_memo_entries_validation():
+    with pytest.raises(ValueError, match="score_memo_entries"):
+        EngineOptions(score_memo_entries=0)
+
+
+# -- the engine-level small-batch fast path -------------------------------
+
+
+def _frontier_configs(d):
+    cfgs = [(i, ()) for i in range(d)]
+    cfgs += [(i, (j,)) for i in range(d) for j in range(d) if j != i]
+    cfgs += [(0, (1, 2)), (3, (0, 2))]
+    return cfgs
+
+
+def test_small_batch_path_bitwise_equals_default():
+    """The small-batch mode (host path, small chunks, pure-pow2 padding)
+    must score bitwise-identically to the default device pipeline."""
+    data = _chain_data(n=120)
+    cfgs = _frontier_configs(4)
+    small = CVLRScorer(data, config=_CFG)
+    t_small: dict = {}
+    assert small.prefetch(cfgs, timings=t_small, small_batch=True) == len(cfgs)
+    assert t_small["path"] == "host" and t_small["small_batch"] is True
+    full = CVLRScorer(data, config=_CFG)
+    t_full: dict = {}
+    assert full.prefetch(cfgs, timings=t_full) == len(cfgs)
+    assert "small_batch" not in t_full
+    for i, ps in cfgs:
+        key = config_key(i, ps)
+        assert small._score_cache[key] == full._score_cache[key], key
+
+
+def test_small_batch_is_optin_and_capped(monkeypatch):
+    """Bare prefetch keeps the configured device/host path no matter how
+    small the frontier (the device-bank contract); the opt-in flag only
+    engages the fast path under the documented uncached-count threshold."""
+    assert CVLRScorer.SMALL_BATCH_CONFIGS == 128
+    data = _chain_data()
+    s = CVLRScorer(data, config=_CFG)
+    t: dict = {}
+    s.prefetch([(0, ()), (0, (1,)), (1, ())], timings=t)
+    assert "small_batch" not in t  # no hijack without the session's opt-in
+    monkeypatch.setattr(CVLRScorer, "SMALL_BATCH_CONFIGS", 1)
+    over = CVLRScorer(data, config=_CFG)
+    t2: dict = {}
+    over.prefetch([(0, ()), (0, (1,)), (1, ())], timings=t2, small_batch=True)
+    assert "small_batch" not in t2  # eligible but over the cap: full path
+
+
+def test_session_warm_sweeps_use_small_batch():
+    """The incremental session marks warm delta sweeps small-batch
+    eligible: sweep 0 (no previous frontier) takes the full pipeline,
+    later sweeps' deltas take the fast path."""
+    data = _chain_data(n=120)
+    sess = DiscoverySession(
+        data, config=_CFG, options=EngineOptions(incremental=True)
+    )
+    calls = []
+    real = sess.scorer.prefetch
+
+    def spy(configs, timings=None, small_batch=False):
+        calls.append((len(list(configs)), small_batch))
+        return real(configs, timings=timings, small_batch=small_batch)
+
+    sess.scorer.prefetch = spy
+    base = [(i, ()) for i in range(4)]
+    sess.begin_sweep("t")
+    sess.score_frontier(base)
+    sess.end_sweep(None)
+    sess.begin_sweep("t")
+    sess.score_frontier(base + [(0, (1,))])
+    sess.end_sweep(None)
+    assert calls == [(4, False), (1, True)]
+
+
+# -- incidence helper -----------------------------------------------------
+
+
+def test_step_incidence_from_adjacency_diff():
+    a = np.zeros((5, 5), np.int8)
+    b = a.copy()
+    assert ges_mod.step_incidence(a, b) == frozenset()
+    b[0, 1] = 1  # new directed edge 0 -> 1
+    b[2, 3] = b[3, 2] = 1  # new undirected edge 2 -- 3
+    assert ges_mod.step_incidence(a, b) == frozenset({0, 1, 2, 3})
+    c = b.copy()
+    c[0, 1] = 0
+    c[1, 0] = 1  # reorientation must count for both endpoints
+    assert ges_mod.step_incidence(b, c) == frozenset({0, 1})

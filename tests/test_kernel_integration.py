@@ -35,14 +35,19 @@ def test_elastic_reshard_subprocess():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np, tempfile
-        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+        from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.checkpoint.store import save_checkpoint, restore_checkpoint
 
         tree = {"w": jnp.arange(64.0).reshape(8, 8), "b": jnp.ones((4,))}
         d = tempfile.mkdtemp()
         save_checkpoint(d, 5, tree)
 
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+        try:  # jax >= 0.5 spells the mesh axis types explicitly
+            from jax.sharding import AxisType
+            mesh = jax.make_mesh((8,), ("data",),
+                                 axis_types=(AxisType.Auto,))
+        except ImportError:
+            mesh = jax.make_mesh((8,), ("data",))
         # tree leaves sort by key: index 0 = "b" (replicated), 1 = "w"
         shardings = [
             NamedSharding(mesh, P()),
@@ -63,7 +68,10 @@ def test_elastic_reshard_subprocess():
         capture_output=True,
         text=True,
         timeout=240,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        # forced-host-device test: never probe for accelerators (a present
+        # libtpu otherwise stalls child startup on TPU metadata lookups)
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"},
         cwd="/root/repo",
     )
     assert "ELASTIC_OK" in proc.stdout, proc.stderr[-2000:]
