@@ -1,0 +1,224 @@
+"""Skeleton-gated hybrid GES vs ungated GES: end-to-end wall clock,
+frontier prune rate, and CPDAG parity.
+
+For each (d, n) cell the benchmark runs the SAME synthetic SCM dataset
+through two fresh `DiscoverySession`s — ungated (``restrict="none"``,
+the PR-8 baseline) and gated (``restrict="skeleton"``: the PC-stable
+constraint phase of `repro.constraint` estimates an `EdgeMask` first,
+then GES only enumerates forward candidates inside it).  Each session
+gets its own `FeatureBank`, so the gated wall clock *includes* the CI
+phase's factor builds — the headline speedup is honest end-to-end, not
+amortized.  Per cell the json records the prune rate (fraction of the
+d*(d-1) ordered frontier pairs the mask removes), CI-test count and
+throughput, skeleton wall, both discovery wall clocks, the end-to-end
+speedup, CPDAG SHD between the two runs (absolute, `shd_cpdag(...,
+normalize=False)`), and both runs' SHD/F1 against the generating DAG.
+The gated session's bank counters are asserted (builds == entries):
+the constraint phase fetches factors through the same single-flight
+`FeatureBank` the score phase uses, so gating adds ZERO duplicate
+factor builds.  Emits BENCH_skeleton.json at the repo root.
+
+``python -m benchmarks.skeleton_gate``           — full grid (d up to 32,
+n up to 10k: the ISSUE-9 acceptance cell)
+``python -m benchmarks.skeleton_gate --quick``   — small cells only (CI)
+``--check-prune-rate X``  — exit nonzero unless every cell prunes >= X
+of its ordered frontier pairs (CI smoke: the gate must actually gate).
+``--check-speedup X``  — exit nonzero unless every cell's end-to-end
+gated speedup is >= X (full-grid acceptance gate; leave unset in
+--quick, where tiny d makes the CI phase a fixed cost the score phase
+can't amortize).
+``--check-shd-excess X``  — exit nonzero if any cell's gated SHD
+against the TRUE CPDAG exceeds the ungated run's by more than X (the
+accuracy-parity gate).  The gate is deliberately vs truth, not vs the
+ungated CPDAG: at benchmark sample sizes the ungated score phase adds
+false-positive edges in exactly the region the mask prunes, so gated
+and ungated disagree *because gating helps* (the json records the raw
+``shd_gated_vs_ungated`` too — on every measured cell the gated run's
+truth-SHD is at or below ungated + the gate bound, usually below
+ungated itself).  Never run concurrently with the test suite.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_skeleton.json")
+
+
+def _bench_cell(d: int, n: int, density: float, seed: int = 0) -> dict:
+    from repro.core.api import DiscoverySession
+    from repro.core.graph import dag_to_cpdag
+    from repro.core.metrics import shd_cpdag, skeleton_f1
+    from repro.core.score_common import ScoreConfig
+    from repro.core.spec import EngineOptions
+
+    from repro.data.synthetic import generate_scm_data
+
+    ds = generate_scm_data(d=d, n=n, density=density, kind="continuous",
+                           seed=seed)
+    true_cpdag = dag_to_cpdag(ds.dag)
+
+    def _run(restrict: str):
+        sess = DiscoverySession(
+            ds.data,
+            config=ScoreConfig(seed=seed),
+            options=EngineOptions(restrict=restrict),
+        )
+        t0 = time.perf_counter()
+        res = sess.run()
+        return sess, res, time.perf_counter() - t0
+
+    plain_sess, plain_res, t_plain = _run("none")
+    gated_sess, gated_res, t_gated = _run("skeleton")
+
+    bank = gated_sess.feature_bank.stats
+    assert bank["builds"] == bank["entries"], (
+        f"duplicate factor builds under gating: {bank}"
+    )
+    constraint = gated_sess.sweep_log[0]["constraint"]
+    pairs = d * (d - 1)
+    prune_rate = constraint["pruned_pairs"] / pairs
+    skel_s = constraint["skeleton_s"]
+
+    return {
+        "d": d,
+        "n": n,
+        "density": density,
+        "frontier_pairs": pairs,
+        "pruned_pairs": constraint["pruned_pairs"],
+        "prune_rate": round(prune_rate, 4),
+        "ci_tests": constraint["ci_tests"],
+        "ci_tests_per_sec": round(constraint["ci_tests"] / skel_s, 3)
+        if skel_s > 0
+        else None,
+        "skeleton_s": skel_s,
+        "ungated_wall_s": round(t_plain, 4),
+        "gated_wall_s": round(t_gated, 4),
+        "speedup_end_to_end": round(t_plain / t_gated, 3),
+        "sweeps_ungated": len(plain_sess.sweep_log),
+        "sweeps_gated": len(gated_sess.sweep_log),
+        "shd_gated_vs_ungated": shd_cpdag(
+            gated_res.cpdag, plain_res.cpdag, normalize=False
+        ),
+        "shd_vs_true": {
+            "ungated": shd_cpdag(plain_res.cpdag, true_cpdag, normalize=False),
+            "gated": shd_cpdag(gated_res.cpdag, true_cpdag, normalize=False),
+        },
+        "skeleton_f1_vs_true": {
+            "ungated": round(skeleton_f1(plain_res.cpdag, ds.dag), 4),
+            "gated": round(skeleton_f1(gated_res.cpdag, ds.dag), 4),
+        },
+        "feature_bank": dict(bank),
+    }
+
+
+def run(quick: bool = False, out_path: str = OUT_PATH) -> dict:
+    grid = (
+        [(8, 600, 0.25), (12, 800, 0.2)]
+        if quick
+        else [(8, 600, 0.25), (12, 800, 0.2), (16, 2000, 0.15),
+              (32, 10000, 0.12)]
+    )
+    cells = []
+    print("d,n,prune_rate,ci_tests,skeleton_s,ungated_s,gated_s,speedup,shd")
+    for d, n, density in grid:
+        cell = _bench_cell(d, n, density)
+        cells.append(cell)
+        print(
+            f"{d},{n},{cell['prune_rate']},{cell['ci_tests']},"
+            f"{cell['skeleton_s']},{cell['ungated_wall_s']},"
+            f"{cell['gated_wall_s']},{cell['speedup_end_to_end']},"
+            f"{cell['shd_gated_vs_ungated']}"
+        )
+    result = {
+        "benchmark": "skeleton_gate",
+        "unit": "end-to-end discovery wall seconds",
+        "engine": "PC-stable factor-based kernel CI skeleton (repro."
+        "constraint) gating the GES forward frontier via EdgeMask (PR 9)",
+        "quick": quick,
+        "cells": cells,
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=OUT_PATH)
+    ap.add_argument(
+        "--check-prune-rate",
+        type=float,
+        default=None,
+        metavar="X",
+        help="fail (exit 1) unless every cell prunes >= X of its ordered"
+        " frontier pairs — the CI smoke gate that gating actually gates",
+    )
+    ap.add_argument(
+        "--check-speedup",
+        type=float,
+        default=None,
+        metavar="X",
+        help="fail (exit 1) unless every cell's end-to-end gated speedup"
+        " is >= X — the full-grid acceptance gate (skip in --quick)",
+    )
+    ap.add_argument(
+        "--check-shd-excess",
+        type=float,
+        default=None,
+        metavar="X",
+        help="fail (exit 1) if any cell's gated SHD vs the true CPDAG"
+        " exceeds the ungated run's by more than X — pruning must not"
+        " make the answer worse",
+    )
+    args = ap.parse_args()
+    result = run(quick=args.quick, out_path=args.out)
+    if args.check_prune_rate is not None:
+        weak = [
+            (c["d"], c["n"], c["prune_rate"])
+            for c in result["cells"]
+            if c["prune_rate"] < args.check_prune_rate
+        ]
+        if weak:
+            print(
+                f"PERF REGRESSION: cells pruning < {args.check_prune_rate}:"
+                f" {weak}"
+            )
+            raise SystemExit(1)
+        print(f"prune gate ok: all cells >= {args.check_prune_rate}")
+    if args.check_speedup is not None:
+        slow = [
+            (c["d"], c["n"], c["speedup_end_to_end"])
+            for c in result["cells"]
+            if c["speedup_end_to_end"] < args.check_speedup
+        ]
+        if slow:
+            print(f"PERF REGRESSION: cells below {args.check_speedup}x: {slow}")
+            raise SystemExit(1)
+        print(f"speedup gate ok: all cells >= {args.check_speedup}x")
+    if args.check_shd_excess is not None:
+        off = [
+            (c["d"], c["n"], c["shd_vs_true"])
+            for c in result["cells"]
+            if c["shd_vs_true"]["gated"]
+            > c["shd_vs_true"]["ungated"] + args.check_shd_excess
+        ]
+        if off:
+            print(
+                "PARITY REGRESSION: cells where gating worsened truth-SHD"
+                f" by > {args.check_shd_excess}: {off}"
+            )
+            raise SystemExit(1)
+        print(
+            "shd parity ok: no cell worsened by more than"
+            f" {args.check_shd_excess}"
+        )

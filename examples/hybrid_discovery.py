@@ -1,0 +1,64 @@
+"""Hybrid discovery: a kernel-CI skeleton gates the GES frontier.
+
+Runs the same mixed (continuous + discrete) dataset twice — ungated
+GES, then the hybrid pipeline (``EngineOptions(restrict="skeleton")``):
+a PC-stable skeleton built from factor-based kernel CI tests
+(`repro.constraint`) prunes the forward frontier before the score
+phase starts.  Both phases fetch factors through one `FeatureBank`, so
+the constraint phase adds zero duplicate builds — the bank counters at
+the end prove it.
+
+    PYTHONPATH=src python examples/hybrid_discovery.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.core.api import DataSpec, DiscoverySession, EngineOptions
+from repro.core.graph import dag_to_cpdag
+from repro.core.metrics import shd_cpdag, skeleton_f1
+from repro.data.synthetic import generate_scm_data
+
+
+def main():
+    # 10 variables, mixed continuous/discrete SCM (paper Sec. 7.4)
+    ds = generate_scm_data(d=10, n=800, density=0.2, kind="mixed", seed=7)
+    spec = DataSpec.infer(ds.data)
+    kinds = [v.kind for v in spec.variables]
+    print(f"data: {ds.data.shape}, true edges: {int(ds.dag.sum())}")
+    print(f"variable kinds: {kinds}")
+
+    results = {}
+    for restrict in ("none", "skeleton"):
+        sess = DiscoverySession(
+            ds.data, spec=spec, options=EngineOptions(restrict=restrict)
+        )
+        t0 = time.perf_counter()
+        res = sess.run()
+        wall = time.perf_counter() - t0
+        results[restrict] = res
+        print(f"\nrestrict={restrict!r}: {wall:.2f}s, "
+              f"{len(sess.sweep_log)} sweeps")
+        if restrict == "skeleton":
+            c = sess.sweep_log[0]["constraint"]
+            d = sess.spec.num_vars
+            print(f"  skeleton: {c['ci_tests']} CI tests in "
+                  f"{c['skeleton_s']:.2f}s, pruned {c['pruned_pairs']}/"
+                  f"{d * (d - 1)} frontier pairs")
+            bank = sess.feature_bank.stats
+            print(f"  feature bank: builds={bank['builds']} "
+                  f"entries={bank['entries']} (zero duplicates)")
+        true_cpdag = dag_to_cpdag(ds.dag)
+        print(f"  skeleton F1 vs truth: "
+              f"{skeleton_f1(res.cpdag, ds.dag):.3f}, "
+              f"SHD: {shd_cpdag(res.cpdag, true_cpdag, normalize=False):.0f}")
+
+    agree = np.array_equal(
+        results["none"].cpdag, results["skeleton"].cpdag
+    )
+    print(f"\ngated CPDAG == ungated CPDAG: {agree}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Constraint subsystem: factor-based kernel CI tests + skeleton gating.
+
+The constraint phase reuses the session's ``FeatureBank`` factors and
+``GramBlockCache`` blocks (zero duplicate builds vs the score phase) to
+run FFCI-style kernel CI tests and a PC-stable skeleton whose
+:class:`EdgeMask` gates the GES forward frontiers
+(``EngineOptions(restrict="skeleton")``).  See
+docs/ARCHITECTURE.md §12.
+"""
+
+from repro.constraint.ci_test import KernelCITest
+from repro.constraint.skeleton import EdgeMask, estimate_skeleton
+
+__all__ = ["KernelCITest", "EdgeMask", "estimate_skeleton"]

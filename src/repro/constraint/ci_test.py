@@ -1,0 +1,469 @@
+"""Factor-based kernel CI test (FFCI-style) on the scorer's feature bank.
+
+The test statistic for (x ⊥ y | Z) is a partial-association norm computed
+entirely from the *same* centered low-rank factors the CV-LR scorer builds
+(Ramsey's FFCI line: the random-Fourier/Nystrom/ICL features that give a
+linear-time generalized score also give a linear-time kernel CI test for
+mixed data).  With A = Λ_x (n, m_x), B = Λ_y (n, m_y), C = Λ_Z (n, m_Z)
+and the ridge residual smoother R = I − C (CᵀC + nρI)⁻¹ Cᵀ applied to BOTH
+sides, the statistic
+
+    T = ‖(RA)ᵀ (RB)‖_F² / n
+
+needs only m×m Gram blocks — never an n×n matrix and never a materialized
+residual:
+
+    Aᵀ R² B = G_ab − 2 G_ac W G_cb + G_ac W G_cc W G_cb   (W = (G_cc + nρI)⁻¹)
+    Aᵀ R² A = G_aa − 2 G_ac W G_ca + G_ac W G_cc W G_ca   (=: S_xx)
+
+Under H0 the null is approximated by moment-matching a gamma distribution
+(T ~ Γ(k, θ) with k·θ = tr(S_xx)tr(S_yy)/n² and k·θ² matching the variance
+2‖S_xx‖²‖S_yy‖²/n⁴); degenerate moments fall back to a seeded permutation
+null.  |Z| = 0 reduces exactly to the unconditional test (zero C blocks).
+
+Factor reuse contract: every factor is fetched through
+``scorer.features(vars_key)`` → the session's single-flight ``FeatureBank``,
+so CI tests incur **zero duplicate builds** for sets the scorer also
+touches, and the fold Gram blocks the tests compute are keyed, oriented and
+trimmed exactly like the batched engine's (`GramBlockCache` keys, canonical
+``repr``-ordered cross pairs, per-fold (q, m_eff_a, m_eff_b) host blocks) —
+a constraint phase pre-warms the score phase's Gram cache for free.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.score_common import set_key
+from repro.core.score_lowrank import _bucket, _pow2_pad
+from repro.kernels.ops import fold_gram_strip
+
+# Blocks per fold_gram_strip dispatch (pow2-padded); same scale the
+# batched engine uses for its small-batch pair chunks.
+_BLOCK_CHUNK = 16
+# Tests per batched-statistic jit dispatch (pow2-padded heights).
+_STAT_CHUNK = 32
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _ci_stat_chunk(gaa, gbb, gcc, gab, gac, gbc, ridge, n: int):
+    """(T, gamma-mean, gamma-var) for a stacked chunk of tests.
+
+    All Grams are zero-padded to the chunk's bucket widths; padding is
+    exact (zero rows/cols contribute nothing, and the padded diagonal of
+    the ridge-regularized G_cc inverts to an unused identity block).
+    """
+
+    def one(Gaa, Gbb, Gcc, Gab, Gac, Gbc):
+        wz = Gcc.shape[0]
+        reg = Gcc + (n * ridge) * jnp.eye(wz, dtype=Gcc.dtype)
+        L = jax.scipy.linalg.cho_factor(reg, lower=True)
+        Ka = jax.scipy.linalg.cho_solve(L, Gac.T)  # W G_ca, (wz, wa)
+        Kb = jax.scipy.linalg.cho_solve(L, Gbc.T)  # W G_cb, (wz, wb)
+        # both sides residualized: Mr = (RA)^T (RB) = G_ab − 2 G_ac W G_cb
+        #                               + G_ac W G_cc W G_cb
+        Mr = Gab - 2.0 * (Gac @ Kb) + Ka.T @ Gcc @ Kb
+        T = jnp.sum(Mr * Mr) / n
+        AK = Gac @ Ka  # G_ac W G_ca (symmetric)
+        BK = Gbc @ Kb
+        Sxx = Gaa - AK - AK.T + Ka.T @ Gcc @ Ka
+        Syy = Gbb - BK - BK.T + Kb.T @ Gcc @ Kb
+        mean = jnp.trace(Sxx) * jnp.trace(Syy) / (float(n) ** 2)
+        var = (
+            2.0
+            * jnp.sum(Sxx * Sxx)
+            * jnp.sum(Syy * Syy)
+            / (float(n) ** 4)
+        )
+        return T, mean, var
+
+    return jax.vmap(one)(gaa, gbb, gcc, gab, gac, gbc)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _perm_stats(ar, br, perms, n: int):
+    """Observed statistic + permutation-null draws for one test.
+
+    ``ar`` / ``br`` are the residualized factors; ``perms`` is (P, n_eff)
+    row permutations.  ``lax.map`` (not vmap) keeps peak memory at one
+    permuted copy of ``br`` instead of P of them.
+    """
+    g0 = ar.T @ br
+    t0 = jnp.sum(g0 * g0) / n
+
+    def one(p):
+        g = ar.T @ br[p]
+        return jnp.sum(g * g) / n
+
+    return t0, jax.lax.map(one, perms)
+
+
+class KernelCITest:
+    """Kernel CI tests computed from a CV-LR scorer's factor/Gram caches.
+
+    Parameters
+    ----------
+    scorer:
+        A ``CVLRScorer`` (or API-compatible) instance; supplies
+        ``features`` (FeatureBank-backed factors), ``m_eff_log``,
+        ``gram_cache``, ``config.q_folds`` and ``precision``.
+    ridge:
+        Residual-projector regularizer ρ (the projector uses nρ on the
+        Gram diagonal, matching the scorer's per-sample scaling).
+    alpha:
+        Default significance level for :meth:`independent`.
+    null:
+        ``"gamma"`` (moment-matched, with automatic permutation fallback
+        on degenerate moments) or ``"permutation"`` (always permute).
+    n_perm:
+        Permutation-null sample count.
+    seed:
+        Base seed for the per-test permutation streams.
+    """
+
+    def __init__(
+        self,
+        scorer,
+        *,
+        ridge: float = 0.01,
+        alpha: float = 0.05,
+        null: str = "gamma",
+        n_perm: int = 200,
+        seed: int = 0,
+    ):
+        if null not in ("gamma", "permutation"):
+            raise ValueError(
+                f'null must be "gamma" or "permutation", got {null!r}'
+            )
+        if not 0.0 < alpha < 1.0:
+            raise ValueError(f"alpha must be in (0, 1), got {alpha}")
+        self.scorer = scorer
+        self.ridge = float(ridge)
+        self.alpha = float(alpha)
+        self.null = null
+        self.n_perm = int(n_perm)
+        self.seed = int(seed)
+        self._cache: dict = {}  # (x, y, z_key) -> p-value
+        self.stats = {
+            "ci_tests": 0,  # statistics actually computed
+            "cached": 0,  # requests served from the result cache
+            "gamma": 0,  # tests resolved by the gamma null
+            "permutation": 0,  # tests resolved by the permutation null
+            "gram_blocks_computed": 0,
+            "gram_blocks_cached": 0,
+        }
+
+    # -- public API --------------------------------------------------------
+    def pvalue(self, x: int, y: int, z=()) -> float:
+        return self.batch([(x, y, tuple(z))])[0]
+
+    def independent(self, x: int, y: int, z=(), alpha=None) -> bool:
+        """True when the test fails to reject independence at ``alpha``."""
+        a = self.alpha if alpha is None else float(alpha)
+        return self.pvalue(x, y, z) >= a
+
+    def batch(self, tests) -> list:
+        """P-values for a batch of ``(x, y, z)`` tests, order-aligned.
+
+        Deduplicates against the per-(x,y|Z) result cache, fetches every
+        distinct factor once through the FeatureBank, computes missing
+        Gram blocks as stacked `fold_gram_strip` dispatches (engine-keyed,
+        so the score phase reuses them), then evaluates the statistics in
+        width-bucketed jit chunks.
+        """
+        keys = [self._test_key(x, y, z) for (x, y, z) in tests]
+        todo = []
+        for k in dict.fromkeys(keys):  # unique, order-preserving
+            if k in self._cache:
+                continue
+            todo.append(k)
+        self.stats["cached"] += sum(1 for k in keys if k in self._cache)
+        if todo:
+            guard = getattr(self.scorer.gram_cache, "sweep_guard", None)
+            if guard is not None:
+                with guard():
+                    self._compute(todo)
+            else:
+                self._compute(todo)
+            self.stats["ci_tests"] += len(todo)
+        return [float(self._cache[k]) for k in keys]
+
+    # -- internals ---------------------------------------------------------
+    @staticmethod
+    def _test_key(x: int, y: int, z) -> tuple:
+        x, y = int(x), int(y)
+        if x == y:
+            raise ValueError(f"CI test requires x != y, got ({x}, {y})")
+        zk = set_key(z) if len(tuple(z)) else ()
+        if x in zk or y in zk:
+            raise ValueError(
+                f"conditioning set {zk} must exclude x={x}, y={y}"
+            )
+        return (min(x, y), max(x, y), zk)
+
+    def _factor(self, vars_key: tuple):
+        """Trimmed (n_eff, m_eff) factor via the scorer's FeatureBank."""
+        fac = self.scorer.features(vars_key)
+        me = int(self.scorer.m_eff_log[vars_key])
+        return fac, me
+
+    @staticmethod
+    def _cross_key(ka: tuple, kb: tuple):
+        """Engine-canonical cache identity of a cross Gram block: unordered
+        pair sorted by ``repr`` (see ``cvlr_scores_batched._cross_key``);
+        the stored block is factor(first)_qᵀ factor(second)_q."""
+        if repr(ka) <= repr(kb):
+            return (ka, kb), False
+        return (kb, ka), True
+
+    def _compute(self, todo) -> None:
+        scorer = self.scorer
+        q = int(scorer.config.q_folds)
+        m_cap = int(scorer.config.m_max)
+        prec = getattr(scorer, "precision", "bitwise")
+
+        # 1) every distinct variable set, fetched once through the bank
+        factors: dict = {}  # vars_key -> (jnp (n_eff, m_max), m_eff)
+        def fetch(vk):
+            if vk not in factors:
+                factors[vk] = self._factor(vk)
+            return factors[vk]
+
+        trivial: list = []  # keys resolved without any algebra (p = 1.0)
+        live: list = []  # (key, kx, ky, kz-or-None)
+        for key in todo:
+            x, y, zk = key
+            kx, ky = set_key((x,)), set_key((y,))
+            _, mx = fetch(kx)
+            _, my = fetch(ky)
+            if mx == 0 or my == 0:
+                trivial.append(key)  # constant marginal: independent
+                continue
+            kz = None
+            if zk:
+                _, mz = fetch(zk)
+                if mz > 0:
+                    kz = zk
+            live.append((key, kx, ky, kz))
+        for key in trivial:
+            self._cache[key] = 1.0
+            self.stats["gamma"] += 1
+
+        if not live:
+            return
+
+        # 2) the Gram blocks those tests need, engine-keyed
+        needed: dict = {}  # cache_key -> (ka, kb) stored orientation
+        def want(ka, kb):
+            ck, _ = self._cross_key(ka, kb)
+            needed[ck] = ck
+        for _, kx, ky, kz in live:
+            want(kx, kx)
+            want(ky, ky)
+            want(kx, ky)
+            if kz is not None:
+                want(kz, kz)
+                want(kz, kx)
+                want(kz, ky)
+        grams = self._ensure_blocks(needed, factors, q, m_cap, prec)
+
+        def gram(ka, kb):
+            """Full (m_eff_a, m_eff_b) Gram — fold-sum, oriented."""
+            ck, transposed = self._cross_key(ka, kb)
+            g = grams[ck]
+            return g.T if transposed else g
+
+        n_eff = next(iter(factors.values()))[0].shape[0]
+
+        # 3) width-bucketed batched statistics (gamma null)
+        pending_perm: list = []  # (key, kx, ky, kz) needing permutation
+        if self.null == "permutation":
+            pending_perm = list(live)
+        else:
+            groups: dict = {}
+            for item in live:
+                _, kx, ky, kz = item
+                wn = _bucket(
+                    max(factors[kx][1], factors[ky][1]), m_cap
+                )
+                wz = _bucket(factors[kz][1], m_cap) if kz else 8
+                groups.setdefault((wn, wz), []).append(item)
+            for (wn, wz), items in sorted(groups.items()):
+                for lo in range(0, len(items), _STAT_CHUNK):
+                    chunk = items[lo : lo + _STAT_CHUNK]
+                    pending_perm.extend(
+                        self._gamma_chunk(
+                            chunk, gram, factors, wn, wz, n_eff
+                        )
+                    )
+
+        # 4) permutation fallback / explicit permutation null
+        for item in pending_perm:
+            self._permutation_test(item, factors, n_eff)
+
+    def _ensure_blocks(self, needed, factors, q, m_cap, prec):
+        """Fetch-or-compute the per-fold Gram blocks, returning full
+        (fold-summed) host Grams keyed by cache key.  Freshly computed
+        blocks are stored back into ``scorer.gram_cache`` (host tier) so
+        the batched score engine finds them pre-warmed."""
+        cache = self.scorer.gram_cache
+        grams: dict = {}
+        missing: list = []
+        for ck in needed:
+            blk = cache.get(ck)
+            if blk is not None:
+                grams[ck] = np.asarray(blk, np.float64).sum(axis=0)
+                self.stats["gram_blocks_cached"] += 1
+            else:
+                missing.append(ck)
+        if not missing:
+            return grams
+
+        # group by bucket widths; one stacked dispatch per width group
+        by_width: dict = {}
+        for ck in missing:
+            ka, kb = ck
+            wa = _bucket(factors[ka][1], m_cap)
+            wb = _bucket(factors[kb][1], m_cap)
+            by_width.setdefault((wa, wb), []).append(ck)
+
+        for (wa, wb), cks in sorted(by_width.items()):
+            ka_keys = sorted({ck[0] for ck in cks}, key=repr)
+            kb_keys = sorted({ck[1] for ck in cks}, key=repr)
+            ia_of = {k: i for i, k in enumerate(ka_keys)}
+            ib_of = {k: i for i, k in enumerate(kb_keys)}
+            bank_a = self._stack(ka_keys, factors, wa)
+            bank_b = self._stack(kb_keys, factors, wb)
+            for lo in range(0, len(cks), _BLOCK_CHUNK):
+                chunk = cks[lo : lo + _BLOCK_CHUNK]
+                pad = _pow2_pad(len(chunk), _BLOCK_CHUNK) - len(chunk)
+                ia = np.asarray(
+                    [ia_of[ck[0]] for ck in chunk]
+                    + [ia_of[chunk[0][0]]] * pad,
+                    np.int32,
+                )
+                ib = np.asarray(
+                    [ib_of[ck[1]] for ck in chunk]
+                    + [ib_of[chunk[0][1]]] * pad,
+                    np.int32,
+                )
+                out = np.asarray(
+                    fold_gram_strip(
+                        bank_a, bank_b, ia, ib, q, precision=prec
+                    )
+                )
+                for c, ck in enumerate(chunk):
+                    mea = factors[ck[0]][1]
+                    meb = factors[ck[1]][1]
+                    blk = np.ascontiguousarray(out[c, :, :mea, :meb])
+                    cache.put(ck, blk)
+                    grams[ck] = blk.astype(np.float64).sum(axis=0)
+                    self.stats["gram_blocks_computed"] += 1
+        return grams
+
+    @staticmethod
+    def _stack(keys, factors, w):
+        """Stacked (S, n_eff, w) device bank of trimmed, width-padded
+        factors (pow2-padded height with zero factors, like the engine's
+        ``_stack_refs``)."""
+        cols = []
+        for k in keys:
+            fac, me = factors[k]
+            f = fac[:, :me]
+            if me < w:
+                f = jnp.pad(f, ((0, 0), (0, w - me)))
+            cols.append(f)
+        n_eff = cols[0].shape[0]
+        pad = _pow2_pad(len(cols), _BLOCK_CHUNK * 2) - len(cols)
+        cols.extend([jnp.zeros((n_eff, w), cols[0].dtype)] * pad)
+        return jnp.stack(cols)
+
+    def _gamma_chunk(self, chunk, gram, factors, wn, wz, n_eff):
+        """Evaluate one width-bucketed chunk under the gamma null; returns
+        the sub-list of tests whose moments were degenerate (these fall
+        back to the permutation null)."""
+        B = len(chunk)
+        Bp = _pow2_pad(B, _STAT_CHUNK)
+        gaa = np.zeros((Bp, wn, wn))
+        gbb = np.zeros((Bp, wn, wn))
+        gcc = np.zeros((Bp, wz, wz))
+        gab = np.zeros((Bp, wn, wn))
+        gac = np.zeros((Bp, wn, wz))
+        gbc = np.zeros((Bp, wn, wz))
+        for c, (key, kx, ky, kz) in enumerate(chunk):
+            mx, my = factors[kx][1], factors[ky][1]
+            gaa[c, :mx, :mx] = gram(kx, kx)
+            gbb[c, :my, :my] = gram(ky, ky)
+            gab[c, :mx, :my] = gram(kx, ky)
+            if kz is not None:
+                mz = factors[kz][1]
+                gcc[c, :mz, :mz] = gram(kz, kz)
+                gac[c, :mx, :mz] = gram(kx, kz)
+                gbc[c, :my, :mz] = gram(ky, kz)
+        T, mean, var = _ci_stat_chunk(
+            jnp.asarray(gaa),
+            jnp.asarray(gbb),
+            jnp.asarray(gcc),
+            jnp.asarray(gab),
+            jnp.asarray(gac),
+            jnp.asarray(gbc),
+            jnp.float64(self.ridge),
+            n_eff,
+        )
+        T = np.asarray(T)[:B]
+        mean = np.asarray(mean)[:B]
+        var = np.asarray(var)[:B]
+        ok = (
+            np.isfinite(T)
+            & np.isfinite(mean)
+            & np.isfinite(var)
+            & (mean > 0.0)
+            & (var > 0.0)
+        )
+        fallback = []
+        # moment-matched gamma: shape k = mean^2/var, scale th = var/mean
+        with np.errstate(divide="ignore", invalid="ignore"):
+            k = np.where(ok, mean * mean / np.where(ok, var, 1.0), 1.0)
+            th = np.where(ok, var / np.where(ok, mean, 1.0), 1.0)
+        pv = np.asarray(
+            jax.scipy.special.gammaincc(
+                jnp.asarray(k), jnp.asarray(np.maximum(T, 0.0) / th)
+            )
+        )
+        for c, item in enumerate(chunk):
+            if ok[c]:
+                self._cache[item[0]] = float(np.clip(pv[c], 0.0, 1.0))
+                self.stats["gamma"] += 1
+            else:
+                fallback.append(item)
+        return fallback
+
+    def _permutation_test(self, item, factors, n_eff) -> None:
+        key, kx, ky, kz = item
+        x, y, zk = key
+        fa, mx = factors[kx]
+        fb, my = factors[ky]
+        A = fa[:, :mx]
+        Bm = fb[:, :my]
+        if kz is not None:
+            fc, mz = factors[kz]
+            C = fc[:, :mz]
+            reg = C.T @ C + (n_eff * self.ridge) * jnp.eye(mz, dtype=C.dtype)
+            L = jax.scipy.linalg.cho_factor(reg, lower=True)
+            A = A - C @ jax.scipy.linalg.cho_solve(L, C.T @ A)
+            Bm = Bm - C @ jax.scipy.linalg.cho_solve(L, C.T @ Bm)
+        rng = np.random.default_rng([self.seed, x, y, *zk])
+        perms = np.stack(
+            [rng.permutation(n_eff) for _ in range(self.n_perm)]
+        ).astype(np.int32)
+        t0, ts = _perm_stats(A, Bm, jnp.asarray(perms), n_eff)
+        t0 = float(t0)
+        ts = np.asarray(ts)
+        p = (1.0 + float(np.sum(ts >= t0))) / (1.0 + self.n_perm)
+        self._cache[key] = p
+        self.stats["permutation"] += 1

@@ -1,0 +1,189 @@
+"""Level-wise PC-stable skeleton estimation over batched kernel CI tests.
+
+``estimate_skeleton`` runs the stable variant of the PC skeleton phase
+(neighbor sets frozen per level, so the result is independent of edge
+iteration order) with every level's independence tests dispatched as ONE
+batched call into :class:`repro.constraint.ci_test.KernelCITest` — which
+groups them into stacked-factor-bank device dispatches, exactly like the
+batched score engine's frontier chunks.
+
+The product is an :class:`EdgeMask`: the restriction contract
+``EngineOptions(restrict="skeleton")`` threads through ``DiscoverySession``
+into the GES candidate generators.  Gating is FORWARD-ONLY by design:
+masked-out pairs never become insert candidates (and never enter the
+incremental ``_FrontierDelta`` bookkeeping), while delete/reverse
+candidates are never gated — under gated insertions the graph's edges are
+a subset of the mask, so backward gating could only forbid repairs of
+edges the mask itself admitted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class EdgeMask:
+    """Symmetric boolean restriction over ordered node pairs.
+
+    ``allowed[x, y]`` is True when the ordered candidate pair (x, y) may
+    enter a forward frontier; the matrix is symmetric with a False
+    diagonal.  ``full(d)`` (everything allowed) is the identity element:
+    gating with it is behaviorally identical to no mask at all.
+    """
+
+    allowed: np.ndarray  # (d, d) bool, symmetric, diag False
+
+    def __post_init__(self):
+        a = np.asarray(self.allowed, dtype=bool)
+        if a.ndim != 2 or a.shape[0] != a.shape[1]:
+            raise ValueError(f"allowed must be square, got {a.shape}")
+        if a.diagonal().any():
+            raise ValueError("allowed must have a False diagonal")
+        if not np.array_equal(a, a.T):
+            raise ValueError("allowed must be symmetric")
+        object.__setattr__(self, "allowed", a)
+
+    @property
+    def d(self) -> int:
+        return self.allowed.shape[0]
+
+    @property
+    def pruned_pairs(self) -> int:
+        """Ordered candidate pairs the mask removes from full frontiers."""
+        d = self.d
+        return int(d * (d - 1) - self.allowed.sum())
+
+    def allows(self, x: int, y: int) -> bool:
+        return bool(self.allowed[x, y])
+
+    @classmethod
+    def full(cls, d: int) -> "EdgeMask":
+        a = np.ones((d, d), dtype=bool)
+        np.fill_diagonal(a, False)
+        return cls(a)
+
+    # JSON-serializable round trip for RunState persistence
+    def to_list(self) -> list:
+        return self.allowed.astype(int).tolist()
+
+    @classmethod
+    def from_list(cls, rows) -> "EdgeMask":
+        return cls(np.asarray(rows, dtype=bool))
+
+
+def estimate_skeleton(
+    ci,
+    d: int,
+    *,
+    alpha: float = 0.05,
+    max_cond: int = 2,
+    max_sets_per_edge: int = 16,
+    verbose: bool = False,
+):
+    """PC-stable skeleton over batched kernel CI tests.
+
+    Starts from the complete graph; at each level ℓ = 0..``max_cond`` it
+    freezes the adjacency, enumerates up to ``max_sets_per_edge``
+    size-ℓ conditioning sets per live edge (from either endpoint's other
+    neighbors, deduplicated), dispatches the whole level as one
+    ``ci.batch`` call, and removes every edge with any p ≥ ``alpha``
+    (independence not rejected).  Capping the enumeration only *keeps*
+    edges it might otherwise remove, so the superset-of-true-skeleton
+    guarantee the score phase relies on is never weakened by the cap.
+
+    Returns ``(EdgeMask, info)`` where ``info`` carries per-level and
+    total telemetry (tests, cache hits, removals, elapsed seconds).
+    """
+    if d < 1:
+        raise ValueError(f"d must be >= 1, got {d}")
+    if not 0.0 < alpha < 1.0:
+        raise ValueError(f"alpha must be in (0, 1), got {alpha}")
+    if max_cond < 0:
+        raise ValueError(f"max_cond must be >= 0, got {max_cond}")
+    t_start = time.perf_counter()
+    stats0 = dict(ci.stats)
+    allowed = np.ones((d, d), dtype=bool)
+    np.fill_diagonal(allowed, False)
+    levels: list = []
+
+    for level in range(max_cond + 1):
+        t0 = time.perf_counter()
+        nbrs = {i: [j for j in range(d) if allowed[i, j]] for i in range(d)}
+        tests: list = []
+        owner: list = []  # aligned (x, y) edge per test
+        for x in range(d):
+            for y in range(x + 1, d):
+                if not allowed[x, y]:
+                    continue
+                for z in _cond_sets(
+                    nbrs, x, y, level, max_sets_per_edge
+                ):
+                    tests.append((x, y, z))
+                    owner.append((x, y))
+        if not tests:
+            break
+        pvals = ci.batch(tests)
+        removed = 0
+        dropped: set = set()
+        for (x, y), p in zip(owner, pvals):
+            if (x, y) in dropped:
+                continue
+            if p >= alpha:  # independence not rejected: sever the edge
+                allowed[x, y] = allowed[y, x] = False
+                dropped.add((x, y))
+                removed += 1
+        levels.append(
+            {
+                "level": level,
+                "edges": int(allowed.sum() // 2) + removed,
+                "tests": len(tests),
+                "removed": removed,
+                "elapsed_s": time.perf_counter() - t0,
+            }
+        )
+        if verbose:
+            print(
+                f"[skeleton] level {level}: {len(tests)} tests, "
+                f"{removed} removed, {int(allowed.sum() // 2)} edges left"
+            )
+
+    mask = EdgeMask(allowed)
+    delta = {
+        k: ci.stats[k] - stats0.get(k, 0) for k in ci.stats
+    }
+    info = {
+        "levels": levels,
+        "ci_tests": delta["ci_tests"],
+        "cached": delta["cached"],
+        "pruned_pairs": mask.pruned_pairs,
+        "skeleton_s": time.perf_counter() - t_start,
+    }
+    return mask, info
+
+
+def _cond_sets(nbrs, x: int, y: int, level: int, cap: int):
+    """Deduplicated size-``level`` conditioning sets for edge (x, y) from
+    either endpoint's frozen other-neighbors, lexicographic, capped."""
+    if level == 0:
+        return [()]
+    pools = (
+        [v for v in nbrs[x] if v != y],
+        [v for v in nbrs[y] if v != x],
+    )
+    out: list = []
+    seen: set = set()
+    for pool in pools:
+        if len(pool) < level:
+            continue
+        for z in itertools.combinations(pool, level):
+            if z not in seen:
+                seen.add(z)
+                out.append(z)
+                if len(out) >= cap:
+                    return out
+    return out

@@ -240,6 +240,22 @@ class DiscoverySession:
         if self.options.score_memo_entries is not None:
             self.scorer.score_memo_max = self.options.score_memo_entries
         self._score_fp = self._score_fingerprint(method)
+        # Constraint phase (EngineOptions.restrict="skeleton"): the
+        # EdgeMask gating this run's forward frontiers, estimated (or
+        # restored) lazily at run() start — `repro.core.ges` reads
+        # `edge_mask` duck-typed off the session.
+        if self.options.restrict == "skeleton" and method != "cvlr":
+            raise ValueError(
+                'EngineOptions(restrict="skeleton") requires method="cvlr" '
+                "— the constraint phase computes its CI tests from the "
+                "low-rank factor bank"
+            )
+        self.edge_mask = None
+        self._constraint: dict | None = None
+        self._skeleton_fp = hashlib.sha1(
+            f"{self._score_fp}|{self.options.ci_alpha}"
+            f"|{self.options.ci_max_cond}".encode()
+        ).hexdigest()
         self.max_subset = max_subset
         self.verbose = verbose
         self.sweep_log: list = []
@@ -520,6 +536,11 @@ class DiscoverySession:
             delta = {k: deg[k] - deg0.get(k, 0) for k in deg}
             if any(delta.values()):
                 rec["degradations"] = delta
+        if self._constraint is not None:
+            # constraint-phase telemetry (static per run: the skeleton is
+            # estimated once, before the first sweep) — attached to every
+            # sweep record so log consumers see the gating context inline
+            rec["constraint"] = dict(self._constraint)
         if self.serving_info:
             # admission-controller degradation counters (live dict shared
             # with the SessionManager): snapshot per sweep
@@ -592,6 +613,50 @@ class DiscoverySession:
         except Exception:
             return False  # e.g. a foreign tenant's out-of-range vars_key
 
+    # -- constraint phase (EngineOptions.restrict) ------------------------
+    def _ensure_constraint(self) -> None:
+        """``restrict="skeleton"``: estimate — or restore from the run
+        state — the `repro.constraint.EdgeMask` gating this run's forward
+        frontiers.  Runs once, before the first sweep.  The CI tests
+        fetch factors through this session's FeatureBank and store their
+        Gram blocks engine-keyed in the scorer's Gram cache, so the
+        constraint phase incurs zero duplicate factor builds and
+        pre-warms the score phase."""
+        if self.options.restrict != "skeleton" or self.edge_mask is not None:
+            return
+        from repro.constraint import EdgeMask, KernelCITest, estimate_skeleton
+
+        rs = self.run_state
+        if rs.skeleton is not None and rs.skeleton_fp == self._skeleton_fp:
+            mask = EdgeMask.from_list(rs.skeleton)
+            self.edge_mask = mask
+            self._constraint = {
+                "ci_tests": 0,
+                "cached": 0,
+                "pruned_pairs": mask.pruned_pairs,
+                "skeleton_s": 0.0,
+                "restored": True,
+            }
+            return
+        self._check_interrupt(len(self.sweep_log))
+        ci = KernelCITest(self.scorer, alpha=self.options.ci_alpha)
+        mask, info = estimate_skeleton(
+            ci,
+            self.spec.num_vars,
+            alpha=self.options.ci_alpha,
+            max_cond=self.options.ci_max_cond,
+            verbose=self.verbose,
+        )
+        self.edge_mask = mask
+        self._constraint = {
+            "ci_tests": int(info["ci_tests"]),
+            "cached": int(info["cached"]),
+            "pruned_pairs": int(info["pruned_pairs"]),
+            "skeleton_s": round(float(info["skeleton_s"]), 6),
+        }
+        rs.skeleton = mask.to_list()
+        rs.skeleton_fp = self._skeleton_fp
+
     def _checkpoint(self, step: int) -> None:
         self._checkpointer.save(step, self.run_state.to_tree())
         self._last_ckpt = step
@@ -612,6 +677,7 @@ class DiscoverySession:
         Resumes from the restored `run_state` when the session was built
         with `resume="auto"` (a fresh state replays from scratch, which
         is the ordinary run)."""
+        self._ensure_constraint()
         try:
             self.result = ges(
                 self.scorer,

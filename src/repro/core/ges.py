@@ -118,15 +118,24 @@ _PAIR_GENS = {
 }
 
 
-def _forward_candidates(a, max_subset):
+def _forward_candidates(a, max_subset, allowed=None):
+    """Insert candidates over all ordered pairs; `allowed` (an optional
+    (d, d) bool mask — `repro.constraint.EdgeMask.allowed`) gates which
+    pairs may enter the frontier at all."""
     d = a.shape[0]
     for x, y in itertools.permutations(range(d), 2):
+        if allowed is not None and not allowed[x, y]:
+            continue
         for cand in _forward_pair_candidates(a, x, y, max_subset):
             if g.semi_directed_blocked(a, cand[2], cand[1], cand[6]):
                 yield cand[:6]
 
 
-def _backward_candidates(a, max_subset):
+def _backward_candidates(a, max_subset, allowed=None):
+    """Delete candidates are NEVER gated: under gated insertions the
+    graph's edges are a subset of the mask, and forbidding a delete could
+    only pin an edge the mask itself admitted (`allowed` is accepted for
+    signature symmetry and ignored)."""
     d = a.shape[0]
     for x, y in itertools.permutations(range(d), 2):
         for cand in _backward_pair_candidates(a, x, y, max_subset):
@@ -167,8 +176,12 @@ class _FrontierDelta:
     sequences.
     """
 
-    def __init__(self, max_subset):
+    def __init__(self, max_subset, allowed=None):
         self.max_subset = max_subset
+        # optional (d, d) bool EdgeMask gate: disallowed forward pairs are
+        # skipped OUTRIGHT — they never enter pair_cands or the stats, so
+        # a gated incremental run does no bookkeeping for pruned pairs
+        self.allowed = None if allowed is None else np.asarray(allowed, bool)
         self.phase = None
         self.a_prev = None
         self.pair_cands: dict = {}  # (x, y) -> list of 7-tuples
@@ -194,7 +207,10 @@ class _FrontierDelta:
         cands = []
         n_full = n_carried = 0
         new_pairs = {}
+        gated = self.allowed is not None and phase == "forward"
         for x, y in itertools.permutations(range(d), 2):
+            if gated and not self.allowed[x, y]:
+                continue
             carried = None
             if touched is not None and x not in touched and y not in touched:
                 nbr_y = np.flatnonzero(adj[y])
@@ -309,11 +325,23 @@ def ges(
         fwd, bwd = int(state.forward_steps), int(state.backward_steps)
         start_phase = state.phase
 
+    # Optional EdgeMask restriction (duck-typed off the session so bare
+    # ges() callers can pass none): gates FORWARD pair enumeration only.
+    mask = getattr(session, "edge_mask", None) if session is not None else None
+    allowed = None
+    if mask is not None:
+        allowed = np.asarray(getattr(mask, "allowed", mask), dtype=bool)
+        if allowed.shape != (d, d):
+            raise ValueError(
+                f"session.edge_mask is {allowed.shape} but the scorer views "
+                f"{d} variables"
+            )
+
     # One delta cache per ges() call, shared across phases: the session
     # seam opts in (EngineOptions.incremental); bare ges() keeps the full
     # re-enumeration path as the differential oracle.
     delta_cache = (
-        _FrontierDelta(max_subset)
+        _FrontierDelta(max_subset, allowed=allowed)
         if session is not None and getattr(session, "incremental", False)
         else None
     )
@@ -326,7 +354,7 @@ def ges(
             if delta_cache is not None:
                 cands = delta_cache.candidates(a, phase)
             else:
-                cands = list(gen(a, max_subset))
+                cands = list(gen(a, max_subset, allowed))
             if not cands:
                 break
             configs = set()

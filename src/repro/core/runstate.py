@@ -25,7 +25,12 @@ argmax).  `RunState` is the object that crosses the crash:
   frontier-delta engine's warm state: the scorer's local-score memo, the
   last sweep's config keys, and a fingerprint guarding both (a resumed
   session with a different data/config/policy fingerprint drops them and
-  runs cold — correctness never depends on the warm state, only speed).
+  runs cold — correctness never depends on the warm state, only speed);
+* ``skeleton`` / ``skeleton_fp`` — a ``restrict="skeleton"`` session's
+  estimated `repro.constraint.EdgeMask` (0/1 rows) plus the fingerprint
+  of everything it depends on; a matching resume reuses the mask and
+  skips the constraint phase (re-estimating would give the same mask —
+  the CI tests are deterministic — this just skips the cost).
 
 Serialization rides the existing atomic checkpoint store
 (`repro.checkpoint.store.save_checkpoint` / `AsyncCheckpointer`): the
@@ -252,6 +257,13 @@ class RunState:
     score_memo: list = dataclasses.field(default_factory=list)
     frontier: list | None = None
     score_fp: str | None = None
+    # Constraint-phase state (restrict="skeleton" sessions; optional like
+    # the warm state above): skeleton is the EdgeMask's allowed matrix as
+    # 0/1 rows, skeleton_fp fingerprints everything the estimate depends
+    # on (score_fp + ci_alpha + ci_max_cond) — a matching resume reuses
+    # the persisted mask and skips re-estimation entirely.
+    skeleton: list | None = None
+    skeleton_fp: str | None = None
 
     @classmethod
     def fresh(cls, d: int) -> "RunState":
@@ -275,6 +287,8 @@ class RunState:
             "score_memo": self.score_memo,
             "frontier": self.frontier,
             "score_fp": self.score_fp,
+            "skeleton": self.skeleton,
+            "skeleton_fp": self.skeleton_fp,
         }
         raw = np.frombuffer(
             json.dumps(payload).encode("utf-8"), dtype=np.uint8
@@ -315,6 +329,12 @@ class RunState:
                 else None
             ),
             score_fp=payload.get("score_fp"),
+            skeleton=(
+                [[int(v) for v in row] for row in payload["skeleton"]]
+                if payload.get("skeleton") is not None
+                else None
+            ),
+            skeleton_fp=payload.get("skeleton_fp"),
         )
 
     def save(self, directory: str, step: int) -> str:

@@ -25,12 +25,16 @@ except ImportError:  # pragma: no cover - jax is a hard dep of the scorers
     jax = jnp = None
 
 if jax is not None:
-    # Promotion write: donated so re-promoting a spilled block updates the
-    # bank buffer in place instead of copying the whole bank per block
+    # Promotion write: donated so re-promoting spilled blocks updates the
+    # bank buffer in place instead of copying the whole bank per upload
     # (same policy as the fused compute-scatter in repro.kernels.ops).
+    # One scatter applies a whole batch of queued promotions — host-tier
+    # hits found during a sweep are QUEUED by `device_lookup` and flushed
+    # as one upload per bucket width (pow2-padded row counts keep the jit
+    # variant set small), instead of one dispatch per block.
     @functools.partial(jax.jit, donate_argnums=(0,))
-    def _bank_set_row(bank, slot, row):
-        return bank.at[slot].set(row)
+    def _bank_set_rows(bank, slots, rows):
+        return bank.at[slots].set(rows)
 
 
 def set_key(vars_idx) -> tuple:
@@ -182,7 +186,12 @@ class GramBlockCache:
         self._tick = 0
         self._pinned: frozenset = frozenset()
         self._sweep_specs: dict = {}  # key -> (wa, wb, ea, eb) during a sweep
+        # deferred host->device promotion queue: (wa, wb) -> list of
+        # (slot, padded host row); flushed as ONE donated scatter per
+        # width at every bank-read seam (see _flush_promos_locked)
+        self._pending_promos: dict = {}
         self.promotions = 0
+        self.promotion_uploads = 0  # scatter dispatches (<= promotions)
         self.spills = 0
         self.bank_fallbacks = 0
 
@@ -276,6 +285,7 @@ class GramBlockCache:
                 self._dev.move_to_end(key)
                 self._touched(key)
                 self.hits += 1
+                self._flush_promos_locked(widths)  # slot may be queued
                 blk = self._banks[widths].data[slot]
                 return np.ascontiguousarray(np.asarray(blk)[:, :ea, :eb])
             self.misses += 1
@@ -285,6 +295,9 @@ class GramBlockCache:
         with self._lock:
             if key in self._dev:  # host put supersedes a device entry
                 widths, slot, _, _ = self._dev.pop(key)
+                # a queued promotion targeting the freed slot would later
+                # scatter into whoever re-adopts it: flush the width first
+                self._flush_promos_locked(widths)
                 self._banks[widths].free.append(slot)
             self._store[key] = value
             self._store.move_to_end(key)
@@ -300,10 +313,12 @@ class GramBlockCache:
             self._misplaced.clear()
             self._pinned = frozenset()
             self._sweep_specs = {}
+            self._pending_promos = {}
             self.hits = 0
             self.misses = 0
             self.evictions = 0
             self.promotions = 0
+            self.promotion_uploads = 0
             self.spills = 0
             self.bank_fallbacks = 0
 
@@ -345,9 +360,13 @@ class GramBlockCache:
                 self.spill_device()
 
     def bank_data(self, widths: tuple):
-        """The (n_slots, q, wa, wb) device tensor for a width pair, or None."""
+        """The (n_slots, q, wa, wb) device tensor for a width pair, or None.
+        Queued promotions for the width flush first, so every reader sees
+        the promoted blocks."""
         with self._lock:
-            bank = self._banks.get(tuple(widths))
+            widths = tuple(widths)
+            self._flush_promos_locked(widths)
+            bank = self._banks.get(widths)
             return None if bank is None else bank.data
 
     def set_bank_data(self, widths: tuple, data) -> None:
@@ -360,6 +379,7 @@ class GramBlockCache:
     def _spill(self, key) -> None:
         """Move a device entry's block to the host tier (frees its slot)."""
         widths, slot, ea, eb = self._dev.pop(key)
+        self._flush_promos_locked(widths)  # the block may still be queued
         bank = self._banks[widths]
         self._store[key] = np.ascontiguousarray(
             np.asarray(bank.data[slot])[:, :ea, :eb]
@@ -455,6 +475,7 @@ class GramBlockCache:
 
     def end_device_sweep(self) -> None:
         with self._lock:
+            self._flush_promos_locked()  # commit every queued promotion
             self._pinned = frozenset()
             self._sweep_specs = {}
             self._enforce_entry_bound()
@@ -462,7 +483,14 @@ class GramBlockCache:
     def device_lookup(self, key):
         """Counted device lookup during a sweep: returns the key's slot (a
         host-tier hit is promoted into a fresh slot first), or None on miss
-        — the caller computes the block and ``device_adopt``s it."""
+        — the caller computes the block and ``device_adopt``s it.
+
+        Promotions are DEFERRED: the padded row is queued per bucket width
+        and the whole batch uploads as one donated scatter at the next
+        bank-read seam (``bank_data`` / ``get`` / ``_spill`` /
+        ``end_device_sweep``) — one dispatch per width per sweep instead
+        of one per block.  ``promotions`` keeps block-count semantics;
+        ``promotion_uploads`` counts the actual scatter dispatches."""
         with self._lock:
             ent = self._dev.get(key)
             if ent is not None:
@@ -478,13 +506,50 @@ class GramBlockCache:
                 bank = self._banks[(wa, wb)]
                 row = np.zeros((bank.q, wa, wb), bank.dtype)
                 row[:, : blk.shape[1], : blk.shape[2]] = blk
-                bank.data = _bank_set_row(
-                    bank.data, np.int32(slot), jnp.asarray(row)
-                )
+                pending = self._pending_promos.setdefault((wa, wb), [])
+                if any(s == slot for s, _ in pending):
+                    # a freed-and-readopted slot with a stale queued row:
+                    # flush so scatter order can never interleave slots
+                    self._flush_promos_locked((wa, wb))
+                    pending = self._pending_promos.setdefault((wa, wb), [])
+                pending.append((slot, row))
                 self.promotions += 1
                 return slot
             self.misses += 1
             return None
+
+    def _flush_promos_locked(self, widths=None) -> None:
+        """Apply queued host->device promotions — one donated pow2-padded
+        scatter per bucket width (padding rows target the write-only
+        SCRATCH_SLOT so row counts stay jit-shape-stable).  ``widths``
+        limits the flush to one width pair; None flushes everything.
+        Caller holds the state lock."""
+        if not self._pending_promos:
+            return
+        targets = (
+            [widths] if widths is not None else list(self._pending_promos)
+        )
+        for w in targets:
+            pending = self._pending_promos.pop(w, None)
+            if not pending:
+                continue
+            bank = self._banks.get(w)
+            if bank is None:
+                continue  # width dropped wholesale (clear/spill_device)
+            pad = _pow2_slots(len(pending)) - len(pending)
+            slots = np.asarray(
+                [s for s, _ in pending]
+                + [DeviceGramBank.SCRATCH_SLOT] * pad,
+                np.int32,
+            )
+            rows = np.stack(
+                [r for _, r in pending]
+                + [np.zeros_like(pending[0][1])] * pad
+            )
+            bank.data = _bank_set_rows(
+                bank.data, jnp.asarray(slots), jnp.asarray(rows)
+            )
+            self.promotion_uploads += 1
 
     def device_adopt(self, key) -> int:
         """Assign a slot to a freshly computed block (capacity was arranged
@@ -516,6 +581,7 @@ class GramBlockCache:
                 "device_bytes": self.device_nbytes,
                 "device_bank_mb": self.device_bank_mb,
                 "promotions": self.promotions,
+                "promotion_uploads": self.promotion_uploads,
                 "spills": self.spills,
                 "bank_fallbacks": self.bank_fallbacks,
             }

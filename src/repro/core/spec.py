@@ -45,6 +45,7 @@ DEFAULT_DEVICE_BANK_MB = 256
 VARIABLE_KINDS = ("continuous", "discrete")
 ENGINES = ("batched", "sequential", "sharded")
 PRECISIONS = ("bitwise", "f32_gram")
+RESTRICTS = ("none", "skeleton")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -401,6 +402,22 @@ class EngineOptions:
       proves the two paths bitwise-equal).  Sweep-log entries record the
       carried/delta/invalidated counts either way.
 
+    restrict / ci_alpha / ci_max_cond: the constraint phase
+      (`repro.constraint` — docs/ARCHITECTURE.md §12).
+      ``restrict="skeleton"`` makes the `DiscoverySession` estimate a
+      PC-stable skeleton with factor-based kernel CI tests *before* the
+      score phase and gate every GES forward frontier with the resulting
+      `EdgeMask` — masked-out pairs never become insert candidates and
+      never enter the incremental frontier-delta bookkeeping; deletes
+      and reversals are never gated.  The CI tests fetch factors through
+      the session's FeatureBank (zero duplicate builds) and pre-warm the
+      Gram-block cache with engine-keyed blocks.  ``ci_alpha`` is the
+      per-test significance level (an edge is severed when independence
+      is NOT rejected, p >= alpha, so *larger* alpha keeps more edges);
+      ``ci_max_cond`` caps the conditioning-set size (PC level).
+      ``restrict="none"`` (default) is bitwise-identical to the ungated
+      engine on every path.  Requires ``method="cvlr"``.
+
     score_memo_entries: optional LRU bound on the scorer's (node,
       parents) -> score memo (`ScorerBase._score_cache`), which is
       otherwise unbounded — a long multi-tenant session's memo can only
@@ -428,6 +445,9 @@ class EngineOptions:
     shard_timeout_s: float | None = None
     deadline_s: float | None = None
     incremental: bool = True
+    restrict: str = "none"
+    ci_alpha: float = 0.05
+    ci_max_cond: int = 2
     score_memo_entries: int | None = None
 
     def __post_init__(self):
@@ -498,6 +518,21 @@ class EngineOptions:
                 )
             object.__setattr__(self, "deadline_s", dl)
         object.__setattr__(self, "incremental", bool(self.incremental))
+        if self.restrict not in RESTRICTS:
+            raise ValueError(
+                f"restrict must be one of {RESTRICTS}, got {self.restrict!r}"
+            )
+        a = float(self.ci_alpha)
+        if math.isnan(a) or not 0.0 < a < 1.0:
+            raise ValueError(
+                f"ci_alpha must be in (0, 1), got {self.ci_alpha!r}"
+            )
+        object.__setattr__(self, "ci_alpha", a)
+        if int(self.ci_max_cond) < 0:
+            raise ValueError(
+                f"ci_max_cond must be >= 0, got {self.ci_max_cond!r}"
+            )
+        object.__setattr__(self, "ci_max_cond", int(self.ci_max_cond))
         if self.score_memo_entries is not None:
             if int(self.score_memo_entries) < 1:
                 raise ValueError(

@@ -197,6 +197,15 @@ class SessionManager:
             "evict_to_host": 0,
             "reroute_backend": 0,
         }
+        # aggregated constraint-phase counters across finished sessions
+        # (restrict="skeleton" tenants; see repro.constraint)
+        self.constraint_totals = {
+            "sessions": 0,
+            "ci_tests": 0,
+            "cached": 0,
+            "pruned_pairs": 0,
+            "skeleton_s": 0.0,
+        }
         self._pool = ThreadPoolExecutor(
             max_workers=self.serving.max_concurrent,
             thread_name_prefix="discovery",
@@ -421,10 +430,20 @@ class SessionManager:
                 self._running -= 1
             raise
         ticket.latency_s = time.monotonic() - t0
+        constraint = getattr(session, "_constraint", None)
         with self._lock:
             self.stats["completed"] += 1
             self._lat.append(ticket.latency_s)
             self._running -= 1
+            if constraint:
+                tot = self.constraint_totals
+                tot["sessions"] += 1
+                for k in ("ci_tests", "cached", "pruned_pairs"):
+                    tot[k] += int(constraint.get(k, 0))
+                tot["skeleton_s"] = round(
+                    tot["skeleton_s"] + float(constraint.get("skeleton_s", 0.0)),
+                    6,
+                )
         return result
 
     # -- lifecycle / telemetry --------------------------------------------
@@ -474,9 +493,11 @@ class SessionManager:
             }
             stats = dict(self.stats)
             degradations = dict(self.degradations)
+            constraint = dict(self.constraint_totals)
         return {
             "stats": stats,
             "degradations": degradations,
+            "constraint": constraint,
             "latency": self.latency_percentiles(),
             "feature_bank": self.feature_bank.stats,
             "gram_caches": caches,

@@ -1,0 +1,395 @@
+"""Constraint subsystem: kernel CI tests, PC-stable skeleton, EdgeMask
+gating, RunState persistence, and the batched device-bank promotions.
+
+Acceptance bar (PR 9 tentpole): CI-test calibration (type-I <= alpha +
+tol on independent fixtures, power >= floor on dependent ones) across
+continuous/discrete/mixed data and rff/nystrom/icl backends; the
+estimated skeleton a superset of the true skeleton at generous alpha on
+linear-Gaussian fixtures (property-tested); `restrict="none"` bitwise
+identical to an unrestricted session; `restrict="skeleton"` pruning
+frontiers with zero duplicate FeatureBank builds; checkpoint/resume
+reusing the persisted skeleton without re-estimation.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.constraint import EdgeMask, KernelCITest, estimate_skeleton
+from repro.core.api import DiscoverySession, make_scorer
+from repro.core.graph import random_dag, skeleton as graph_skeleton
+from repro.core.runstate import FaultPlan, InjectedFault
+from repro.core.score_common import GramBlockCache
+from repro.core.spec import EngineOptions
+from repro.features.policy import FeaturePolicy
+
+ALPHA = 0.05
+# binomial slack for the empirical type-I fraction over ~60+ pairs
+TYPE_I_TOL = 0.06
+POWER_FLOOR = 0.7
+
+
+def _chain_data(n, d, seed, noise=0.5):
+    rng = np.random.default_rng(seed)
+    cols = [rng.standard_normal(n)]
+    for _ in range(d - 1):
+        cols.append(np.tanh(cols[-1]) + noise * rng.standard_normal(n))
+    return np.stack(cols, axis=1)
+
+
+def _independent_data(n, d, seed, kind="continuous"):
+    rng = np.random.default_rng(seed)
+    cols = []
+    for j in range(d):
+        if kind == "discrete" or (kind == "mixed" and j % 2 == 1):
+            cols.append(rng.integers(0, 3, size=n).astype(np.float64))
+        else:
+            cols.append(rng.standard_normal(n))
+    return np.stack(cols, axis=1)
+
+
+def _policy(backend):
+    if backend == "icl":
+        return None  # FeaturePolicy.default() routes continuous -> icl
+    return FeaturePolicy(continuous=backend, mixed=backend)
+
+
+# -- calibration: type-I error and power ----------------------------------
+
+
+@pytest.mark.parametrize("backend", ["icl", "rff", "nystrom"])
+@pytest.mark.parametrize("kind", ["continuous", "discrete", "mixed"])
+def test_type_one_error_within_tolerance(backend, kind):
+    """On jointly independent fixtures the rejection rate at ALPHA must
+    stay within binomial slack of ALPHA — per data kind x backend."""
+    data = _independent_data(500, 12, seed=hash((backend, kind)) % 2**16)
+    opts = EngineOptions(features=_policy(backend))
+    ci = KernelCITest(make_scorer(data, options=opts))
+    tests = [(x, y, ()) for x, y in itertools.combinations(range(12), 2)]
+    ps = np.asarray(ci.batch(tests))
+    assert ps.shape == (66,)
+    assert np.all((ps >= 0.0) & (ps <= 1.0))
+    frac = float((ps < ALPHA).mean())
+    assert frac <= ALPHA + TYPE_I_TOL, (
+        f"type-I {frac:.3f} > {ALPHA} + {TYPE_I_TOL} ({backend}/{kind})"
+    )
+
+
+@pytest.mark.parametrize("backend", ["icl", "rff", "nystrom"])
+def test_power_on_dependent_pairs(backend):
+    """Adjacent chain pairs are strongly dependent: the test must reject
+    at ALPHA for at least POWER_FLOOR of them."""
+    d = 6
+    data = _chain_data(600, d, seed=1, noise=0.4)
+    opts = EngineOptions(features=_policy(backend))
+    ci = KernelCITest(make_scorer(data, options=opts))
+    ps = np.asarray(ci.batch([(j, j + 1, ()) for j in range(d - 1)]))
+    power = float((ps < ALPHA).mean())
+    assert power >= POWER_FLOOR, f"power {power:.2f} < {POWER_FLOOR} ({backend})"
+
+
+def test_conditional_independence_detected():
+    """x0 -> x1 -> x2: marginally dependent, independent given x1."""
+    data = _chain_data(600, 3, seed=0)
+    ci = KernelCITest(make_scorer(data))
+    assert ci.pvalue(0, 2) < ALPHA
+    assert ci.pvalue(0, 2, (1,)) > ALPHA
+    # symmetric in (x, y) and served from the result cache
+    before = dict(ci.stats)
+    assert ci.pvalue(2, 0, (1,)) == ci.pvalue(0, 2, (1,))
+    assert ci.stats["ci_tests"] == before["ci_tests"]
+    assert ci.stats["cached"] > before["cached"]
+
+
+def test_permutation_null_agrees_with_gamma():
+    data = _chain_data(500, 3, seed=2)
+    sc = make_scorer(data)
+    gamma = KernelCITest(sc)
+    perm = KernelCITest(sc, null="permutation", n_perm=300)
+    for args in [(0, 1, ()), (0, 2, (1,))]:
+        pg, pp = gamma.pvalue(*args), perm.pvalue(*args)
+        # same accept/reject decision at the default level
+        assert (pg < ALPHA) == (pp < ALPHA), (args, pg, pp)
+    assert perm.stats["permutation"] == 2
+
+
+def test_ci_test_zero_duplicate_builds():
+    """Every factor the CI tests touch comes from the scorer's
+    FeatureBank: builds == entries even after the score phase reuses
+    the same sets."""
+    data = _chain_data(300, 4, seed=3)
+    sc = make_scorer(data)
+    ci = KernelCITest(sc)
+    estimate_skeleton(ci, 4, alpha=ALPHA, max_cond=1)
+    sc.prefetch([(0, ()), (1, (0,)), (2, (1,)), (3, (2,))])
+    bank = sc.feature_bank.stats
+    assert bank["builds"] == bank["entries"]
+
+
+def test_ci_test_input_validation():
+    data = _chain_data(200, 3, seed=4)
+    sc = make_scorer(data)
+    with pytest.raises(ValueError, match="gamma"):
+        KernelCITest(sc, null="bootstrap")
+    ci = KernelCITest(sc)
+    with pytest.raises(ValueError, match="x != y"):
+        ci.pvalue(1, 1)
+    with pytest.raises(ValueError, match="exclude"):
+        ci.pvalue(0, 1, (1,))
+
+
+# -- skeleton: EdgeMask + superset property -------------------------------
+
+
+def test_edge_mask_contract():
+    m = EdgeMask.full(4)
+    assert m.pruned_pairs == 0 and m.allows(0, 3)
+    rt = EdgeMask.from_list(m.to_list())
+    assert np.array_equal(rt.allowed, m.allowed)
+    with pytest.raises(ValueError, match="diagonal"):
+        EdgeMask(np.ones((3, 3), dtype=bool))
+    bad = np.zeros((3, 3), dtype=bool)
+    bad[0, 1] = True  # not symmetric
+    with pytest.raises(ValueError, match="symmetric"):
+        EdgeMask(bad)
+
+
+def test_skeleton_on_chain():
+    data = _chain_data(600, 4, seed=5, noise=0.4)
+    ci = KernelCITest(make_scorer(data))
+    mask, info = estimate_skeleton(ci, 4, alpha=ALPHA, max_cond=2)
+    # every true chain edge survives
+    for j in range(3):
+        assert mask.allows(j, j + 1), f"true edge {j}-{j+1} was pruned"
+    assert info["pruned_pairs"] == mask.pruned_pairs > 0
+    assert info["ci_tests"] > 0 and info["skeleton_s"] > 0
+    assert info["levels"][0]["tests"] == 6  # level 0: all unordered pairs
+
+
+def _linear_gaussian(dag, n, seed):
+    d = dag.shape[0]
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.7, 1.3, size=(d, d)) * np.sign(
+        rng.standard_normal((d, d))
+    )
+    data = np.zeros((n, d))
+    done: set = set()
+    while len(done) < d:  # topological fill (random_dag permutes order)
+        for j in range(d):
+            parents = np.flatnonzero(dag[:, j])
+            if j in done or not set(parents) <= done:
+                continue
+            data[:, j] = rng.standard_normal(n)
+            for p in parents:
+                data[:, j] += w[p, j] * data[:, p]
+            done.add(j)
+    return data
+
+
+@pytest.mark.parametrize("seed", [0, 7, 41])
+def test_skeleton_superset_on_linear_gaussian(seed):
+    """At generous alpha the estimated skeleton contains every true edge
+    of a linear-Gaussian SCM — gating never deletes edges the score
+    phase needs (larger alpha => fewer edges severed).  Randomized-seed
+    version in tests/test_constraint_props.py (hypothesis)."""
+    d = 6
+    dag = random_dag(d, 0.3, np.random.default_rng(seed))
+    data = _linear_gaussian(dag, n=500, seed=seed)
+    ci = KernelCITest(make_scorer(data))
+    mask, _ = estimate_skeleton(ci, d, alpha=0.25, max_cond=2)
+    true_skel = graph_skeleton(dag)
+    missing = [
+        (x, y)
+        for x, y in zip(*np.nonzero(true_skel))
+        if not mask.allows(int(x), int(y))
+    ]
+    assert not missing, f"true edges pruned at generous alpha: {missing}"
+
+
+def test_cap_only_keeps_more_edges():
+    """max_sets_per_edge caps enumeration — it can only *keep* edges a
+    full enumeration might remove, never remove more."""
+    data = _chain_data(500, 5, seed=6)
+    sc = make_scorer(data)
+    ci = KernelCITest(sc)
+    capped, _ = estimate_skeleton(ci, 5, alpha=ALPHA, max_cond=2,
+                                  max_sets_per_edge=1)
+    full, _ = estimate_skeleton(ci, 5, alpha=ALPHA, max_cond=2,
+                                max_sets_per_edge=64)
+    assert np.all(capped.allowed >= full.allowed)
+
+
+# -- EngineOptions / session threading ------------------------------------
+
+
+def test_engine_options_validation():
+    with pytest.raises(ValueError, match="restrict"):
+        EngineOptions(restrict="pc")
+    with pytest.raises(ValueError, match="ci_alpha"):
+        EngineOptions(ci_alpha=1.5)
+    with pytest.raises(ValueError, match="ci_max_cond"):
+        EngineOptions(ci_max_cond=-1)
+    opts = EngineOptions(restrict="skeleton", ci_alpha=0.1, ci_max_cond=1)
+    assert (opts.restrict, opts.ci_alpha, opts.ci_max_cond) == (
+        "skeleton", 0.1, 1,
+    )
+    with pytest.raises(ValueError, match="cvlr"):
+        DiscoverySession(
+            _chain_data(100, 3, seed=0),
+            options=EngineOptions(restrict="skeleton"),
+            method="cv",
+        )
+
+
+def test_full_mask_bitwise_identical():
+    """An all-allowed EdgeMask is the identity: gating with it produces
+    the bitwise-identical run to no mask at all (the restrict="none"
+    contract, exercised through the session seam ges() actually reads)."""
+    data = _chain_data(200, 4, seed=7)
+    ref_sess = DiscoverySession(data, options=EngineOptions())
+    ref = ref_sess.run()
+    sess = DiscoverySession(data, options=EngineOptions())
+    sess.edge_mask = EdgeMask.full(4)
+    res = sess.run()
+    assert np.array_equal(res.cpdag, ref.cpdag)
+    assert res.score == ref.score
+    assert [tuple(s) for s in res.trace] == [tuple(s) for s in ref.trace]
+
+
+@pytest.mark.parametrize("engine", ["batched", "sequential"])
+def test_restrict_skeleton_end_to_end(engine):
+    data = _chain_data(400, 5, seed=8, noise=0.4)
+    sess = DiscoverySession(
+        data, options=EngineOptions(engine=engine, restrict="skeleton")
+    )
+    res = sess.run()
+    assert sess.edge_mask is not None
+    rec = sess.sweep_log[0]["constraint"]
+    assert rec["pruned_pairs"] == sess.edge_mask.pruned_pairs > 0
+    assert rec["ci_tests"] > 0 and rec["skeleton_s"] > 0
+    # zero duplicate factor builds across constraint + score phases
+    bank = sess.feature_bank.stats
+    assert bank["builds"] == bank["entries"]
+    # the estimated CPDAG respects the mask: every edge is an allowed pair
+    adj = (res.cpdag + res.cpdag.T) > 0
+    assert np.all(~adj | sess.edge_mask.allowed)
+
+
+def test_gated_frontier_smaller_and_delta_composed():
+    """Gating shrinks the forward frontier and composes with the
+    incremental delta engine: pruned pairs never enter the enumeration
+    cache's bookkeeping (pairs_full + pairs_carried counts allowed
+    forward pairs only)."""
+    data = _chain_data(400, 6, seed=9, noise=0.4)
+    plain = DiscoverySession(data, options=EngineOptions())
+    plain.run()
+    gated = DiscoverySession(
+        data, options=EngineOptions(restrict="skeleton")
+    )
+    gated.run()
+    n_allowed = int(gated.edge_mask.allowed.sum())
+    d = 6
+    for rec in gated.sweep_log:
+        if rec["phase"] != "forward" or "enum" not in rec:
+            continue
+        enumerated = rec["enum"]["pairs_full"] + rec["enum"]["pairs_carried"]
+        assert enumerated <= n_allowed < d * (d - 1)
+    assert (
+        gated.sweep_log[0]["n_configs"] <= plain.sweep_log[0]["n_configs"]
+    )
+
+
+def test_skeleton_resume_skips_reestimation(tmp_path):
+    """A killed gated run resumes from its checkpointed skeleton: the
+    fingerprint matches, no CI test re-runs, and the final CPDAG equals
+    the uninterrupted gated run's."""
+    data = _chain_data(400, 5, seed=10, noise=0.4)
+    opts = EngineOptions(
+        restrict="skeleton", checkpoint_dir=str(tmp_path / "ckpt")
+    )
+    ref = DiscoverySession(data, options=EngineOptions(restrict="skeleton"))
+    ref_res = ref.run()
+
+    crash = DiscoverySession(
+        data, options=opts, fault_plan=FaultPlan(kill_at_sweep=2)
+    )
+    with pytest.raises(InjectedFault):
+        crash.run()
+    assert crash.run_state.skeleton is not None
+
+    resumed = DiscoverySession(data, options=opts, resume="auto")
+    res = resumed.run()
+    assert resumed._constraint.get("restored") is True
+    assert resumed._constraint["ci_tests"] == 0
+    assert np.array_equal(resumed.edge_mask.allowed, ref.edge_mask.allowed)
+    assert np.array_equal(res.cpdag, ref_res.cpdag)
+    assert res.score == ref_res.score
+
+
+def test_skeleton_fp_mismatch_reestimates(tmp_path):
+    """A resume under different CI knobs must NOT reuse the persisted
+    skeleton (the fingerprint guards alpha/max_cond)."""
+    data = _chain_data(300, 4, seed=11)
+    dir_ = str(tmp_path / "ckpt")
+    first = DiscoverySession(
+        data, options=EngineOptions(restrict="skeleton", checkpoint_dir=dir_)
+    )
+    first.run()
+    second = DiscoverySession(
+        data,
+        options=EngineOptions(
+            restrict="skeleton", checkpoint_dir=dir_, ci_alpha=0.2
+        ),
+        resume="auto",
+    )
+    second.run()
+    assert "restored" not in (second._constraint or {})
+    assert second._constraint["ci_tests"] > 0
+
+
+# -- satellite: batched device-bank promotions ----------------------------
+
+
+def test_promotions_batched_per_width():
+    """Host-tier hits found during a sweep upload as ONE scatter per
+    bucket width (promotion_uploads), not one per block (promotions)."""
+    q, w = 4, 8
+    cache = GramBlockCache(device_bank_mb=64)
+    blocks = {
+        (("k", i), ("k", i)): np.full((q, 5, 5), float(i + 1))
+        for i in range(6)
+    }
+    for k, v in blocks.items():
+        cache.put(k, v)  # host tier
+    specs = {k: (w, w, 5, 5) for k in blocks}
+    assert cache.begin_device_sweep(specs, q, np.float64)
+    slots = {k: cache.device_lookup(k) for k in blocks}
+    assert all(s is not None for s in slots.values())
+    st = cache.stats
+    assert st["promotions"] == 6
+    assert st["promotion_uploads"] == 0, "uploads must be deferred"
+    # the read seam flushes: one scatter for the whole width group
+    data = cache.bank_data((w, w))
+    assert cache.stats["promotion_uploads"] == 1
+    for k, v in blocks.items():
+        got = np.asarray(data[slots[k]])[:, :5, :5]
+        np.testing.assert_array_equal(got, v)
+    cache.end_device_sweep()
+    # blocks stay readable through the host interface afterwards
+    for k, v in blocks.items():
+        np.testing.assert_array_equal(cache.get(k), v)
+
+
+def test_promotion_flush_before_spill():
+    """Spilling a device entry whose promotion is still queued must see
+    the queued block, not the zero-initialized slot."""
+    q, w = 2, 8
+    cache = GramBlockCache(device_bank_mb=64)
+    blk = np.full((q, 3, 3), 7.0)
+    cache.put(("a",), blk)
+    assert cache.begin_device_sweep({("a",): (w, w, 3, 3)}, q, np.float64)
+    assert cache.device_lookup(("a",)) is not None  # queued, not uploaded
+    cache.end_device_sweep()
+    assert cache.spill_device() == 1
+    np.testing.assert_array_equal(cache.get(("a",)), blk)

@@ -1,0 +1,38 @@
+"""Property tests for the constraint subsystem (hypothesis).
+
+The superset invariant the hybrid pipeline rests on: at a generous
+alpha, `estimate_skeleton` keeps every true edge of a linear-Gaussian
+SCM, so skeleton gating never severs an edge the score phase needs.
+Fixed-seed spot checks of the same property live in
+tests/test_constraint.py (`test_skeleton_superset_on_linear_gaussian`);
+this module fuzzes the SCM seed.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
+from hypothesis import given, settings, strategies as st
+
+from repro.constraint import KernelCITest, estimate_skeleton
+from repro.core.api import make_scorer
+from repro.core.graph import random_dag, skeleton as graph_skeleton
+
+from test_constraint import _linear_gaussian
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_skeleton_superset_property(seed):
+    d = 6
+    dag = random_dag(d, 0.3, np.random.default_rng(seed))
+    data = _linear_gaussian(dag, n=500, seed=seed)
+    ci = KernelCITest(make_scorer(data))
+    mask, _ = estimate_skeleton(ci, d, alpha=0.25, max_cond=2)
+    true_skel = graph_skeleton(dag)
+    missing = [
+        (x, y)
+        for x, y in zip(*np.nonzero(true_skel))
+        if not mask.allows(int(x), int(y))
+    ]
+    assert not missing, f"true edges pruned at generous alpha: {missing}"

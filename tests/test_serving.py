@@ -516,3 +516,35 @@ def test_engine_options_deadline_validation():
     with pytest.raises(ValueError, match="deadline_s"):
         EngineOptions(deadline_s=float("nan"))
     assert EngineOptions(deadline_s=None).deadline_s is None
+
+
+# -- constraint telemetry across tenants (PR 9 satellite) -----------------
+
+
+def test_two_tenant_skeleton_shared_builds():
+    """Two tenants under restrict="skeleton" with identical workload
+    fingerprints: the constraint phase's factor fetches ride the shared
+    FeatureBank (builds == entries — zero duplicate builds across BOTH
+    tenants' CI tests and score sweeps), and the manager aggregates
+    per-session constraint telemetry."""
+    with SessionManager(
+        DATA,
+        options=EngineOptions(restrict="skeleton"),
+        serving=ServingOptions(max_concurrent=2),
+    ) as mgr:
+        ta = mgr.submit(DiscoveryRequest(tenant="alice"))
+        tb = mgr.submit(DiscoveryRequest(tenant="bob"))
+        res_a = ta.result(timeout=600)
+        res_b = tb.result(timeout=600)
+        assert np.array_equal(res_a.cpdag, res_b.cpdag)
+        assert ta.session.edge_mask is not None
+        assert np.array_equal(
+            ta.session.edge_mask.allowed, tb.session.edge_mask.allowed
+        )
+        bank = mgr.feature_bank.stats
+        assert bank["builds"] == bank["entries"]
+        tele = mgr.telemetry()["constraint"]
+    assert tele["sessions"] == 2
+    assert tele["ci_tests"] > 0
+    assert tele["pruned_pairs"] == 2 * ta.session.edge_mask.pruned_pairs
+    assert tele["skeleton_s"] > 0
