@@ -1,0 +1,93 @@
+"""Shared benchmark-report writer: every BENCH_*.json carries provenance.
+
+Benchmark numbers with no record of *what produced them* are
+uncomparable across the PR trajectory — a regression against a number
+measured on a different commit, jax version, or device kind is noise.
+`write_bench` is the single sink all benchmark drivers write through:
+it stamps the payload with a ``provenance`` block (commit sha, dirty
+flag, jax version, backend + device kind, host, python, UTC timestamp)
+and runs it through `repro.obs.json_safe` so a stray numpy scalar in a
+result dict fails loudly at write time, not in a downstream reader.
+
+Every field is collected fault-tolerantly: a benchmark run outside a
+git checkout, or before jax is importable, still writes — the missing
+fields read ``None``.
+"""
+
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import platform
+import subprocess
+
+from repro.obs import json_safe
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _git(*args: str) -> str | None:
+    try:
+        out = subprocess.run(
+            ("git", *args),
+            cwd=_REPO_ROOT,
+            capture_output=True,
+            text=True,
+            timeout=10,
+        )
+    except (OSError, subprocess.SubprocessError):
+        return None
+    if out.returncode != 0:
+        return None
+    return out.stdout.strip()
+
+
+def provenance() -> dict:
+    """Identity of this benchmark run: commit, toolchain, device, time."""
+    sha = _git("rev-parse", "HEAD")
+    dirty = None
+    if sha is not None:
+        status = _git("status", "--porcelain")
+        dirty = bool(status) if status is not None else None
+    jax_version = backend = device_kind = None
+    try:
+        import jax
+
+        jax_version = jax.__version__
+        dev = jax.devices()[0]
+        backend = dev.platform
+        device_kind = dev.device_kind
+    except Exception:
+        pass
+    return {
+        "commit": sha,
+        "dirty": dirty,
+        "jax": jax_version,
+        "backend": backend,
+        "device_kind": device_kind,
+        "hostname": platform.node(),
+        "python": platform.python_version(),
+        "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"
+        ),
+    }
+
+
+def write_bench(path: str, payload: dict) -> dict:
+    """Stamp ``payload`` with provenance and write it as indented JSON.
+
+    Returns the stamped payload (what landed on disk).  Raises
+    ``TypeError`` naming the offending key when the payload carries a
+    non-JSON-serializable value (device arrays, numpy scalars)."""
+    if not isinstance(payload, dict):
+        raise TypeError(
+            f"benchmark payload must be a dict, got {type(payload).__name__}"
+        )
+    stamped = dict(payload)
+    stamped["provenance"] = provenance()
+    stamped = json_safe(stamped, path=os.path.basename(path))
+    with open(path, "w") as fh:
+        json.dump(stamped, fh, indent=2)
+        fh.write("\n")
+    return stamped

@@ -35,6 +35,8 @@ import time
 
 import numpy as np
 
+from benchmarks._writer import write_bench
+
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_PATH = os.path.join(REPO_ROOT, "BENCH_recovery.json")
 
@@ -203,9 +205,7 @@ def run(quick=False, out=OUT_PATH):
         "kill_resume": bench_kill_resume(data, cfg),
         "shard_death": bench_shard_death(data, cfg),
     }
-    with open(out, "w") as f:
-        json.dump(report, f, indent=2)
-        f.write("\n")
+    report = write_bench(out, report)
     print(f"recovery,report={out}")
     return report
 

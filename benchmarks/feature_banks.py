@@ -35,6 +35,8 @@ import time
 
 import numpy as np
 
+from benchmarks._writer import write_bench
+
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_PATH = os.path.join(REPO_ROOT, "BENCH_features.json")
 
@@ -187,9 +189,7 @@ def run(quick: bool = False, out_path: str = OUT_PATH) -> dict:
         "quick": quick,
         "cells": cells,
     }
-    with open(out_path, "w") as f:
-        json.dump(result, f, indent=2)
-        f.write("\n")
+    result = write_bench(out_path, result)
     print(f"wrote {out_path}")
     return result
 

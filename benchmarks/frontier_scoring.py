@@ -9,8 +9,9 @@ so the comparison isolates the scoring engine).  Since PR 3 each cell also
 times the batched engine with the device-bank tier disabled
 (``device_bank_mb=0`` — the PR-2 host-assembly path) and records a
 per-stage wall split (Gram / z-cores / fold) for both engine paths via the
-engine's opt-in profiler, so the fold-stage host-assembly cost the
-device-resident pipeline removes stays visible in the json.  Emits
+`repro.obs` span layer (`engine_stage_split` over a trace Recorder), so
+the fold-stage host-assembly cost the device-resident pipeline removes
+stays visible in the json.  Emits
 BENCH_frontier.json at the repo root so future PRs track the trajectory.
 
 ``python -m benchmarks.frontier_scoring``            — full grid
@@ -38,6 +39,8 @@ import time
 
 import numpy as np
 
+from benchmarks._writer import write_bench
+
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_PATH = os.path.join(REPO_ROOT, "BENCH_frontier.json")
 
@@ -55,6 +58,8 @@ def _bench_cell(
     from repro.core.score_lowrank import CVLRScorer
     from repro.core.spec import EngineOptions
     from repro.data.synthetic import generate_scm_data
+    from repro.obs import Recorder, engine_stage_split
+    from repro.obs import trace as obs_trace
 
     ds = generate_scm_data(d=d, n=n, density=0.3, kind="continuous", seed=seed)
     configs = _frontier_configs(d)
@@ -123,14 +128,18 @@ def _bench_cell(
     # -- batched engine, host-assembly path (device banks off: PR-2) ------
     host_cold, rate_host = _timed_cold(device_bank_mb=0)
     rate_warm_host = _timed_warm(host_cold)
-    # -- per-stage wall split, both paths (profiled passes sync at stage
-    # boundaries, so they are NOT the headline rates) ---------------------
+    # -- per-stage wall split, both paths (an active recorder makes the
+    # engine sync at stage boundaries, so these are NOT the headline
+    # rates; repro.obs.engine_stage_split folds the stage spans back
+    # into the per-stage keys this json has carried since PR 2) -----------
     stage_split = {}
     for name, kw in (("device", {}), ("host", {"device_bank_mb": 0})):
-        t: dict = {}
-        _mk(**kw).prefetch(configs, timings=t)
-        assert t.pop("path") == name
-        stage_split[name] = {k: round(v, 4) for k, v in t.items()}
+        rec = Recorder(mode="trace")
+        with obs_trace.use(rec):
+            _mk(**kw).prefetch(configs)
+        split = engine_stage_split(rec)
+        assert split.pop("path") == name
+        stage_split[name] = {k: round(v, 4) for k, v in split.items()}
 
     # -- opt-in: the f32_gram precision policy ----------------------------
     f32 = None
@@ -318,9 +327,7 @@ def run(
         "quick": quick,
         "cells": cells,
     }
-    with open(out_path, "w") as f:
-        json.dump(result, f, indent=2)
-        f.write("\n")
+    result = write_bench(out_path, result)
     print(f"wrote {out_path}")
     return result
 

@@ -32,6 +32,8 @@ import time
 
 import numpy as np
 
+from benchmarks._writer import write_bench
+
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_PATH = os.path.join(REPO_ROOT, "BENCH_serving.json")
 
@@ -202,9 +204,7 @@ def main():
         "cells": cells,
         "shed": shed_row,
     }
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
+    write_bench(args.out, payload)
     print(f"wrote {args.out}")
 
 

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 from repro.core.score_common import set_key
 from repro.core.score_lowrank import _bucket, _pow2_pad
 from repro.kernels.ops import fold_gram_strip
+from repro.obs import trace as obs_trace
 
 # Blocks per fold_gram_strip dispatch (pow2-padded); same scale the
 # batched engine uses for its small-batch pair chunks.
@@ -185,11 +186,14 @@ class KernelCITest:
         self.stats["cached"] += sum(1 for k in keys if k in self._cache)
         if todo:
             guard = getattr(self.scorer.gram_cache, "sweep_guard", None)
-            if guard is not None:
-                with guard():
+            with obs_trace.span(
+                "ci_batch", cat="stage", attrs={"tests": len(todo)}
+            ):
+                if guard is not None:
+                    with guard():
+                        self._compute(todo)
+                else:
                     self._compute(todo)
-            else:
-                self._compute(todo)
             self.stats["ci_tests"] += len(todo)
         return [float(self._cache[k]) for k in keys]
 

@@ -25,6 +25,8 @@ import time
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
+
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class EdgeMask:
@@ -127,7 +129,12 @@ def estimate_skeleton(
                     owner.append((x, y))
         if not tests:
             break
-        pvals = ci.batch(tests)
+        with obs_trace.span(
+            "skeleton_level",
+            cat="stage",
+            attrs={"level": level, "tests": len(tests)},
+        ):
+            pvals = ci.batch(tests)
         removed = 0
         dropped: set = set()
         for (x, y), p in zip(owner, pvals):

@@ -24,12 +24,14 @@ docs/ARCHITECTURE.md for the engine behind the options.
 
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import time
 
 import numpy as np
 
 from repro.checkpoint.store import AsyncCheckpointer
+from repro.obs import Recorder, json_safe, trace
 from repro.core.ges import ges, GESResult
 from repro.core.runstate import (
     DeadlineExceeded,
@@ -217,6 +219,7 @@ class DiscoverySession:
         cancel_event=None,
         deadline_at: float | None = None,
         serving_info: dict | None = None,
+        metrics_registry=None,
     ):
         self.options = _resolve_options(options)
         self.tenant = tenant
@@ -256,6 +259,26 @@ class DiscoverySession:
             f"{self._score_fp}|{self.options.ci_alpha}"
             f"|{self.options.ci_max_cond}".encode()
         ).hexdigest()
+        # Observability (EngineOptions.obs; repro.obs): the session owns
+        # the recorder's lifecycle — spans open at the sweep seams, the
+        # scorer/kernels pick the recorder up from the ambient trace
+        # context, and `run()` flushes the trace files on exit.  With a
+        # shared `metrics_registry` (the SessionManager's), the stats
+        # sources register under a per-tenant prefix so tenants never
+        # collide in one process-wide snapshot.
+        self.recorder = None
+        if self.options.obs != "off":
+            labels = {"session": self._score_fp[:8]}
+            if tenant is not None:
+                labels["tenant"] = tenant
+            self.recorder = Recorder(
+                mode=self.options.obs,
+                labels=labels,
+                registry=metrics_registry,
+                trace_dir=self.options.trace_dir,
+                name=tenant if tenant is not None else f"session-{self._score_fp[:8]}",
+            )
+            self._register_metric_sources()
         self.max_subset = max_subset
         self.verbose = verbose
         self.sweep_log: list = []
@@ -312,6 +335,40 @@ class DiscoverySession:
             self.run_state = RunState.fresh(d)
             self.run_state.sweep_log = self.sweep_log  # aliased
             self.resumed_from = None
+
+    def _obs_source_prefix(self) -> str:
+        return f"tenant.{self.tenant}." if self.tenant is not None else ""
+
+    def _register_metric_sources(self) -> None:
+        """Re-register the session's scattered stats dicts as lazy
+        registry sources — the dicts themselves (and every sweep_log /
+        telemetry key computed from them) stay untouched."""
+        reg = self.recorder.registry
+        pre = self._obs_source_prefix()
+        cache = getattr(self.scorer, "gram_cache", None)
+        if cache is not None:
+            reg.register_source(pre + "gram_cache", lambda c=cache: c.stats)
+        if self.feature_bank is not None:
+            reg.register_source(
+                pre + "feature_bank", lambda b=self.feature_bank: b.stats
+            )
+        deg = getattr(self.scorer, "degradations", None)
+        if deg is not None:
+            reg.register_source(pre + "degradations", lambda d=deg: d)
+        reg.register_source(
+            pre + "constraint", lambda s=self: s._constraint or {}
+        )
+
+    def close_obs(self) -> None:
+        """Flush the recorder (JSONL + Chrome/Perfetto timeline when
+        `trace_dir` is set) and detach this session's metric sources
+        from a shared registry.  Idempotent; no-op when obs='off'."""
+        if self.recorder is None:
+            return
+        pre = self._obs_source_prefix()
+        for name in ("gram_cache", "feature_bank", "degradations", "constraint"):
+            self.recorder.registry.unregister_source(pre + name)
+        self.recorder.close()
 
     def _score_fingerprint(self, method: str) -> str:
         """Identity of everything a memo'd local score depends on: the raw
@@ -422,6 +479,11 @@ class DiscoverySession:
             else None,
             "_deg0": dict(deg) if deg is not None else None,
         }
+        if self.recorder is not None:
+            self.recorder.set_label("sweep", sweep_idx)
+            self._active["_span"] = self.recorder.begin(
+                "sweep", cat="sweep", attrs={"phase": phase}
+            )
 
     def score_frontier(self, configs) -> int:
         """Evaluate one sweep's (node, parents) frontier through the
@@ -461,38 +523,42 @@ class DiscoverySession:
                 }
         if self.incremental:
             self._prev_frontier = cur
-        if self._sharded_hook is not None:
-            tel: dict = {}
-            n = (
-                self._sharded_hook(
-                    self.scorer,
-                    to_score,
-                    options=self.options,
-                    fault_plan=self.fault_plan,
-                    sweep=self._active["sweep"],
-                    telemetry=tel,
+        # ambient recorder for the engine's stage/kernel spans — a no-op
+        # context when obs is off, and redundant-but-harmless when run()
+        # already activated it (seam-driven sessions have no run() frame)
+        with trace.use(self.recorder):
+            if self._sharded_hook is not None:
+                tel: dict = {}
+                n = (
+                    self._sharded_hook(
+                        self.scorer,
+                        to_score,
+                        options=self.options,
+                        fault_plan=self.fault_plan,
+                        sweep=self._active["sweep"],
+                        telemetry=tel,
+                    )
+                    if to_score
+                    else 0
                 )
-                if to_score
-                else 0
-            )
-            if any(
-                tel.get(k)
-                for k in ("retries", "resharded", "dead_workers", "fallback_keys")
-            ):
-                self._active["shards"] = tel
-        elif self.options.batched:
-            prefetch = getattr(self.scorer, "prefetch", None)
-            # warm incremental sweeps (prev frontier known) mark their
-            # delta small-batch-eligible: the uncached count is a
-            # sweep-over-sweep delta, and the engine's small-batch path
-            # sidesteps the device pipeline's bank-shaped recompiles
-            n = (
-                prefetch(to_score, small_batch=prev is not None)
-                if prefetch is not None and to_score
-                else 0
-            )
-        else:
-            n = 0  # sequential: ges falls back to lazy local_score
+                if any(
+                    tel.get(k)
+                    for k in ("retries", "resharded", "dead_workers", "fallback_keys")
+                ):
+                    self._active["shards"] = tel
+            elif self.options.batched:
+                prefetch = getattr(self.scorer, "prefetch", None)
+                # warm incremental sweeps (prev frontier known) mark their
+                # delta small-batch-eligible: the uncached count is a
+                # sweep-over-sweep delta, and the engine's small-batch path
+                # sidesteps the device pipeline's bank-shaped recompiles
+                n = (
+                    prefetch(to_score, small_batch=prev is not None)
+                    if prefetch is not None and to_score
+                    else 0
+                )
+            else:
+                n = 0  # sequential: ges falls back to lazy local_score
         self._active["n_scored"] = int(n)
         return int(n)
 
@@ -501,6 +567,7 @@ class DiscoverySession:
         if rec is None:
             return
         self._check_interrupt(rec["sweep"])
+        sweep_span = rec.pop("_span", None)
         rec["step"] = _norm_step(step)
         rec["elapsed_s"] = round(time.perf_counter() - rec.pop("_t0"), 6)
         enum = rec.pop("_enum", None)
@@ -545,8 +612,17 @@ class DiscoverySession:
             # admission-controller degradation counters (live dict shared
             # with the SessionManager): snapshot per sweep
             rec["serving"] = dict(self.serving_info)
+        # hygiene at the seam: every sweep record must be json.dumps-able
+        # before it can reach RunState (checkpoint payloads serialize the
+        # whole log) — numpy/jax scalars unwrap, device arrays fail loudly
+        rec = json_safe(rec, path=f"sweep_log[{rec['sweep']}]")
         self.sweep_log.append(rec)
-        self._advance_run_state(rec, cpdag)
+        try:
+            self._advance_run_state(rec, cpdag)
+        finally:
+            if sweep_span is not None:
+                self.recorder.end(sweep_span)
+                self.recorder.pop_label("sweep")
 
     def _advance_run_state(self, rec: dict, cpdag) -> None:
         """Fold one completed sweep into `run_state` and checkpoint on
@@ -639,14 +715,15 @@ class DiscoverySession:
             }
             return
         self._check_interrupt(len(self.sweep_log))
-        ci = KernelCITest(self.scorer, alpha=self.options.ci_alpha)
-        mask, info = estimate_skeleton(
-            ci,
-            self.spec.num_vars,
-            alpha=self.options.ci_alpha,
-            max_cond=self.options.ci_max_cond,
-            verbose=self.verbose,
-        )
+        with trace.use(self.recorder), trace.span("constraint", cat="stage"):
+            ci = KernelCITest(self.scorer, alpha=self.options.ci_alpha)
+            mask, info = estimate_skeleton(
+                ci,
+                self.spec.num_vars,
+                alpha=self.options.ci_alpha,
+                max_cond=self.options.ci_max_cond,
+                verbose=self.verbose,
+            )
         self.edge_mask = mask
         self._constraint = {
             "ci_tests": int(info["ci_tests"]),
@@ -658,7 +735,13 @@ class DiscoverySession:
         rs.skeleton_fp = self._skeleton_fp
 
     def _checkpoint(self, step: int) -> None:
-        self._checkpointer.save(step, self.run_state.to_tree())
+        ckpt_span = (
+            self.recorder.span("checkpoint", cat="stage", attrs={"step": step})
+            if self.recorder is not None
+            else contextlib.nullcontext()
+        )
+        with ckpt_span:
+            self._checkpointer.save(step, self.run_state.to_tree())
         self._last_ckpt = step
         if (
             self.fault_plan is not None
@@ -676,7 +759,19 @@ class DiscoverySession:
         `GESResult` whose `cpdag` is the estimated equivalence class.
         Resumes from the restored `run_state` when the session was built
         with `resume="auto"` (a fresh state replays from scratch, which
-        is the ordinary run)."""
+        is the ordinary run).  With `EngineOptions(obs=)` enabled the
+        whole run executes under a root "session" span and the trace
+        files flush on exit (even on a crash)."""
+        rec_obs = self.recorder
+        if rec_obs is None:
+            return self._run_inner()
+        try:
+            with rec_obs.activate(), rec_obs.span("session", cat="session"):
+                return self._run_inner()
+        finally:
+            self.recorder.close()
+
+    def _run_inner(self) -> GESResult:
         self._ensure_constraint()
         try:
             self.result = ges(

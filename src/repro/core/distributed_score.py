@@ -44,6 +44,7 @@ from repro.core.score_common import config_key
 from repro.core.score_lowrank import scores_from_fold_blocks
 from repro.distributed.fault_tolerance import HeartbeatMonitor
 from repro.kernels import fold_gram_blocks
+from repro.obs import trace as obs_trace
 
 try:  # jax >= 0.5 exports shard_map at top level
     _shard_map = jax.shard_map
@@ -273,14 +274,30 @@ def _run_resharding(
     attempts = {w: 0 for w in range(workers)}
     results: dict = {}
 
+    # The active recorder is captured HERE, on the dispatching thread:
+    # contextvars do not propagate into pool workers, so each job
+    # re-enters the trace context explicitly and tags its span with the
+    # shard id and retry epoch (a no-op end to end when obs is off).
+    rec = obs_trace.get_recorder()
+
     def job(w, keys):
-        if fault_plan is not None and fault_plan.shard_faulted(w, sweep):
-            if fault_plan.shard_fault == "hang":
-                time.sleep(fault_plan.shard_hang_s)  # straggler: trips the
-                # per-shard timeout; the raise below keeps the late result
-                # from ever landing
-            raise InjectedFault(f"injected shard fault: worker {w}")
-        return _stacked_scores_for_keys(scorer, keys, lmbda, gamma, precision)
+        with obs_trace.use(rec), obs_trace.span(
+            "shard",
+            cat="stage",
+            attrs={
+                "shard": w,
+                "epoch": attempts[w],
+                "keys": len(keys),
+                "sweep": sweep,
+            },
+        ):
+            if fault_plan is not None and fault_plan.shard_faulted(w, sweep):
+                if fault_plan.shard_fault == "hang":
+                    time.sleep(fault_plan.shard_hang_s)  # straggler: trips
+                    # the per-shard timeout; the raise below keeps the late
+                    # result from ever landing
+                raise InjectedFault(f"injected shard fault: worker {w}")
+            return _stacked_scores_for_keys(scorer, keys, lmbda, gamma, precision)
 
     # +2 headroom: a timed-out attempt's thread cannot be interrupted, so
     # its retry must not have to wait for the straggler to release a slot
@@ -396,8 +413,11 @@ def sharded_batch_hook(
         # at the last ulp), so recovery stays bitwise-identical to an
         # undisturbed sweep
         tel["fallback_keys"] += len(stranded)
-        scores = _stacked_scores_for_keys(
-            scorer, stranded, cfg.lmbda, cfg.gamma, precision
-        )
+        with obs_trace.span(
+            "shard_fallback", cat="stage", attrs={"keys": len(stranded)}
+        ):
+            scores = _stacked_scores_for_keys(
+                scorer, stranded, cfg.lmbda, cfg.gamma, precision
+            )
         _finalize_scores(scorer, stranded, scores, sweep=sweep)
     return len(todo)

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core import graph as g
 from repro.core.score_common import config_key
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -351,10 +352,11 @@ def ges(
         steps = 0
         gen = _forward_candidates if phase == "forward" else _backward_candidates
         while True:
-            if delta_cache is not None:
-                cands = delta_cache.candidates(a, phase)
-            else:
-                cands = list(gen(a, max_subset, allowed))
+            with obs_trace.span("enumerate", cat="stage", attrs={"phase": phase}):
+                if delta_cache is not None:
+                    cands = delta_cache.candidates(a, phase)
+                else:
+                    cands = list(gen(a, max_subset, allowed))
             if not cands:
                 break
             configs = set()
@@ -378,13 +380,14 @@ def ges(
                 prefetch = getattr(scorer, "prefetch", None)
                 if prefetch is not None:
                     prefetch(configs)
-            best_delta, best = 0.0, None
-            for op, x, y, sub, with_set, without_set in cands:
-                delta = scorer.local_score(y, with_set) - scorer.local_score(
-                    y, without_set
-                )
-                if delta > best_delta + 1e-12:
-                    best_delta, best = delta, (op, x, y, sub)
+            with obs_trace.span("select", cat="stage", attrs={"n_cands": len(cands)}):
+                best_delta, best = 0.0, None
+                for op, x, y, sub, with_set, without_set in cands:
+                    delta = scorer.local_score(y, with_set) - scorer.local_score(
+                        y, without_set
+                    )
+                    if delta > best_delta + 1e-12:
+                        best_delta, best = delta, (op, x, y, sub)
             step = None
             if best is not None:
                 op, x, y, sub = best

@@ -721,9 +721,7 @@ class ScorerBase:
             self._score_cache.move_to_end(key)
         return cached
 
-    def prefetch(
-        self, configs, timings: dict | None = None, small_batch: bool = False
-    ) -> int:
+    def prefetch(self, configs, small_batch: bool = False) -> int:
         """Batch-evaluate ``(node, parents)`` configurations ahead of the
         `local_score` lookups of a GES sweep.  Returns the number of scores
         actually computed.  The base implementation is lazy (0 computed;

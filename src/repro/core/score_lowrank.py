@@ -72,6 +72,7 @@ from repro.core.spec import (
 from repro.features.bank import FeatureBank
 from repro.features.policy import FeaturePolicy
 from repro.kernels import fold_gram_strip, fold_gram_strip_banked
+from repro.obs import trace as obs_trace
 from repro.core.score_common import (
     DeviceGramBank,
     GramBlockCache,
@@ -384,7 +385,6 @@ def cvlr_scores_batched(
     gram_cache: GramBlockCache | None = None,
     pair_chunk: int = 32,
     score_chunk: int = 64,
-    timings: dict | None = None,
     precision: str = "bitwise",
     small_batch: bool = False,
 ) -> np.ndarray:
@@ -435,11 +435,15 @@ def cvlr_scores_batched(
     fixed chunk heights, so the jit cache stays small and no call
     dispatches more than O(B / chunk) kernels.
 
-    timings: optional dict; when given, per-stage wall times are
-    accumulated into it ("gram_s", "zcores_s", "fold_s", plus "path" =
-    "device"|"host") with device syncs at the stage boundaries — profiling
-    support for benchmarks/frontier_scoring.py, off by default because the
-    syncs defeat async dispatch.
+    Stage profiling (the former benchmark-only ``timings=`` dict) now
+    rides the observability layer: when a `repro.obs` recorder is active
+    (``trace.use(recorder)`` / `EngineOptions(obs=...)`), the engine emits
+    "gram" / "zcores" / "fold" stage spans — tiling the call's wall time,
+    with device syncs at the boundaries so the splits are honest, and
+    carrying ``path`` ("device"|"host") and ``small_batch`` attrs.  With
+    no recorder active there are no syncs and async dispatch is
+    untouched; `repro.obs.engine_stage_split` reproduces the historical
+    ``{"gram_s", "zcores_s", "fold_s", "path"}`` dict from a recorder.
 
     precision: the Gram accumulation policy
     (`repro.core.spec.EngineOptions.precision`) forwarded to the fold-Gram
@@ -503,16 +507,22 @@ def cvlr_scores_batched(
         if m_eff_z[i] > 0
     }
 
+    # Stage spans (repro.obs): each _mark closes the interval since the
+    # previous mark as one span, so the three stage spans tile this call.
+    # The block_until_ready syncs run ONLY when a recorder is active —
+    # the obs="off" path keeps full async dispatch.
+    tr = obs_trace.get_recorder()
     t_mark = [time.perf_counter()]
+    stage_attrs: dict = {}
 
     def _mark(name, sync=()):
-        if timings is None:
+        if tr is None:
             return
         for arr in sync:
             if arr is not None:
                 arr.block_until_ready()
         now = time.perf_counter()
-        timings[name] = timings.get(name, 0.0) + (now - t_mark[0])
+        tr.complete(name, t_mark[0], now, cat="stage", attrs=dict(stage_attrs))
         t_mark[0] = now
 
     def _take(a, w):
@@ -600,10 +610,9 @@ def cvlr_scores_batched(
         and (not conflict[0])
         and cache.begin_device_sweep(specs, q=q, dtype=dtype)
     )
-    if timings is not None:
-        timings["path"] = "device" if use_banks else "host"
-        if small_batch:
-            timings["small_batch"] = True
+    stage_attrs["path"] = "device" if use_banks else "host"
+    if small_batch:
+        stage_attrs["small_batch"] = True
 
     def _gather_missing(needed):
         """One counted cache lookup per needed key; returns keys to compute."""
@@ -745,7 +754,7 @@ def cvlr_scores_batched(
             lambda ab: (m_effs[ab[0][0]][ab[0][1]], m_effs[ab[1][0]][ab[1][1]]),
         )
         _mark(
-            "gram_s",
+            "gram",
             sync=[cache.bank_data(w[:2]) for w in specs.values()]
             if use_banks
             else (),
@@ -797,7 +806,7 @@ def cvlr_scores_batched(
                 s_bank = jnp.asarray(s_host)
                 f_bank, chol_bank = _z_fold_cores(s_bank, n1l)
                 z_cores[w] = (s_bank, f_bank, chol_bank)
-        _mark("zcores_s", sync=[c[2] for c in z_cores.values()])
+        _mark("zcores", sync=[c[2] for c in z_cores.values()])
 
         # -- fold algebra: grouped by (bucket_z, bucket_x), fixed chunks --
         scores = np.empty((n_pairs,), dtype=np.float64)
@@ -899,7 +908,7 @@ def cvlr_scores_batched(
                 c0 = hi
         for out, target in in_flight:
             scores[target] = np.asarray(out)[: target.shape[0]]
-        _mark("fold_s")
+        _mark("fold")
     finally:
         if use_banks:
             cache.end_device_sweep()
@@ -1218,14 +1227,14 @@ class CVLRScorer(ScorerBase):
     # pipeline's recompiles).
     SMALL_BATCH_CONFIGS = 128
 
-    def prefetch(
-        self, configs, timings: dict | None = None, small_batch: bool = False
-    ) -> int:
+    def prefetch(self, configs, small_batch: bool = False) -> int:
         """Batched frontier engine: evaluate every uncached (node, parents)
         configuration through `cvlr_scores_batched`, sharing Gram blocks via
         `self.gram_cache` (device-resident when its device tier is enabled).
-        Called by ges() once per sweep iteration; `timings` is forwarded to
-        the engine's per-stage profiler (benchmarks only).
+        Called by ges() once per sweep iteration.  When a `repro.obs`
+        recorder is active, the dispatch emits a "features" span for the
+        factor builds plus the engine's "gram"/"zcores"/"fold" stage spans
+        (the span layer replaced the old benchmark-only ``timings=`` dict).
 
         small_batch: marks this dispatch small-batch-ELIGIBLE — the
         incremental session seam passes True for warm delta sweeps, whose
@@ -1256,11 +1265,14 @@ class CVLRScorer(ScorerBase):
         # never interleave with a competing session's sweep over a shared
         # cache.  A private cache pays one uncontended acquire.
         with self.gram_cache.sweep_guard():
-            lam_x_bank = [self.features(k) for k in x_sets]
-            zero = jnp.zeros_like(lam_x_bank[0])
-            lam_z_bank = [self.features(k) if k else zero for k in z_sets]
-            m_eff_x = [self.m_eff_log[k] for k in x_sets]
-            m_eff_z = [self.m_eff_log[k] if k else 0 for k in z_sets]
+            with obs_trace.span(
+                "features", cat="stage", attrs={"sets": len(x_sets) + len(z_sets)}
+            ):
+                lam_x_bank = [self.features(k) for k in x_sets]
+                zero = jnp.zeros_like(lam_x_bank[0])
+                lam_z_bank = [self.features(k) if k else zero for k in z_sets]
+                m_eff_x = [self.m_eff_log[k] for k in x_sets]
+                m_eff_z = [self.m_eff_log[k] if k else 0 for k in z_sets]
             pairs = np.array([[x_index[(i,)], z_index[ps]] for i, ps in todo])
             scores = cvlr_scores_batched(
                 lam_x_bank,
@@ -1274,7 +1286,6 @@ class CVLRScorer(ScorerBase):
                 x_keys=x_sets,
                 z_keys=z_sets,
                 gram_cache=self.gram_cache,
-                timings=timings,
                 precision=self.precision,
                 small_batch=small_batch and len(todo) <= self.SMALL_BATCH_CONFIGS,
             )

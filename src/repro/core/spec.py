@@ -46,6 +46,7 @@ VARIABLE_KINDS = ("continuous", "discrete")
 ENGINES = ("batched", "sequential", "sharded")
 PRECISIONS = ("bitwise", "f32_gram")
 RESTRICTS = ("none", "skeleton")
+OBS_MODES = ("off", "metrics", "trace")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -431,6 +432,23 @@ class EngineOptions:
       unbounded run to the engine==oracle 1e-8 tolerance, because
       evicted configurations are recomputed through the lazy per-config
       path.  None (default) = unbounded.
+
+    obs / trace_dir: the observability layer (`repro.obs` —
+      docs/ARCHITECTURE.md §13).
+      * ``"off"`` (default) — no recorder; `repro.obs.trace.span` is a
+        shared no-op and the engine's results/wall-clock are unchanged.
+      * ``"metrics"`` — the session owns a `repro.obs.Recorder` feeding
+        a `repro.obs.MetricsRegistry` (span latency histograms, compile
+        counters, cache/bank/ladder sources) with no event retention.
+      * ``"trace"`` — additionally retains structured trace events
+        (session → sweep → stage → kernel spans, jit compile spans) and,
+        when ``trace_dir`` is set, streams them to an append-only JSONL
+        log and writes a Chrome/Perfetto ``trace_event`` timeline at
+        session close.  ``trace_dir`` requires ``obs="trace"``.
+      Either mode adds per-stage device syncs inside the batched engine
+      (the span boundaries are honest), so `obs != "off"` trades a few
+      percent of wall-clock for measurement; ``"off"`` is the
+      production-default zero-overhead path.
     """
 
     engine: str = "batched"
@@ -449,6 +467,8 @@ class EngineOptions:
     ci_alpha: float = 0.05
     ci_max_cond: int = 2
     score_memo_entries: int | None = None
+    obs: str = "off"
+    trace_dir: str | None = None
 
     def __post_init__(self):
         if self.engine not in ENGINES:
@@ -542,6 +562,20 @@ class EngineOptions:
             object.__setattr__(
                 self, "score_memo_entries", int(self.score_memo_entries)
             )
+        if self.obs not in OBS_MODES:
+            raise ValueError(
+                f"obs must be one of {OBS_MODES}, got {self.obs!r}"
+            )
+        if self.trace_dir is not None:
+            if not isinstance(self.trace_dir, str):
+                raise ValueError(
+                    f"trace_dir must be a path string or None, got "
+                    f"{self.trace_dir!r}"
+                )
+            if self.obs != "trace":
+                raise ValueError(
+                    f"trace_dir requires obs='trace', got obs={self.obs!r}"
+                )
 
     @property
     def batched(self) -> bool:

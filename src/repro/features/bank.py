@@ -39,6 +39,8 @@ import collections
 import threading
 import time
 
+from repro.obs import trace as obs_trace
+
 
 class _InFlight:
     """One in-progress build: followers wait on `done`, the leader
@@ -135,7 +137,12 @@ class FeatureBank:
     def _build_as_leader(self, key, slot, build_fn):
         t0 = time.perf_counter()
         try:
-            res = build_fn()
+            # leader-only span: followers wait, so one build = one span;
+            # no-op without an active repro.obs recorder
+            with obs_trace.span(
+                "feature_build", cat="build", attrs={"vars": list(key[0])}
+            ):
+                res = build_fn()
         except BaseException as exc:
             slot.exc = exc
             with self._lock:

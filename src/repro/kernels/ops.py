@@ -32,6 +32,15 @@ from repro.kernels.fold_gram import (
     fold_gram_strip_pallas,
 )
 from repro.kernels.rbf_gram import rbf_gram_pallas
+from repro.obs.trace import traced
+
+# Kernel-dispatch spans (repro.obs): the host-side dispatchers below are
+# wrapped with @traced(cat="kernel") — a no-op without an active recorder.
+# The spans time *dispatch* (host prep + async enqueue); device execute
+# time surfaces in the engine's synced stage spans and the separate
+# cat="compile" spans from jax's jit cache-miss monitoring events.
+# `fold_gram_blocks` is deliberately NOT traced: it composes under
+# jit/shard_map, where a host-side span would fire at trace time only.
 
 
 def _on_tpu() -> bool:
@@ -58,6 +67,7 @@ def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
     return jnp.pad(x, widths)
 
 
+@traced("rbf_gram", cat="kernel")
 def rbf_gram(
     x,
     y,
@@ -105,6 +115,7 @@ def _feature_strip_jnp(x, pivots, width, kind: str):
     raise ValueError(f"unknown kernel kind {kind!r}")
 
 
+@traced("feature_strip", cat="kernel")
 def feature_strip(
     x,
     pivots,
@@ -180,6 +191,7 @@ def _fold_gram_jnp(bank_a, bank_b, ia, ib, q: int, precision: str = "bitwise"):
     return jnp.einsum("cqni,cqnj->cqij", fa, fb)
 
 
+@traced("fold_gram_strip", cat="kernel")
 def fold_gram_strip(
     bank_a,
     bank_b,
@@ -257,6 +269,7 @@ def _fold_gram_banked_jnp(
     return out_bank.at[slots].set(grams.astype(out_bank.dtype))
 
 
+@traced("fold_gram_strip_banked", cat="kernel")
 def fold_gram_strip_banked(
     bank_a,
     bank_b,
@@ -385,6 +398,7 @@ def fold_gram_blocks(
     return out.reshape(lead + (q, ma, mb))
 
 
+@traced("centered_gram", cat="kernel")
 def centered_gram(
     lam, *, block_n: int = 512, interpret: bool | None = None
 ) -> jnp.ndarray:

@@ -97,10 +97,21 @@ def serve_discovery(
     max_concurrent: int = 4,
     queue_limit: int = 16,
     device_budget_mb: float | None = None,
+    obs: str = "off",
+    trace_dir: str | None = None,
+    metrics_out: str | None = None,
+    metrics_port: int | None = None,
 ):
     """The ``--mode discovery`` request loop: submit one request per
     tenant, drain the tickets, print one structured line per request and
-    a final telemetry report."""
+    a final telemetry report.
+
+    Observability: ``obs``/``trace_dir`` ride into
+    `repro.serving.ServingOptions` — every tenant's session records
+    spans into per-tenant trace files and the manager's shared metrics
+    registry.  ``metrics_out`` writes the final Prometheus text
+    exposition to a file; ``metrics_port`` serves a live ``/metrics``
+    endpoint for the duration of the loop (0 picks a free port)."""
     from repro.serving import (
         DiscoveryRequest,
         RequestShed,
@@ -115,9 +126,20 @@ def serve_discovery(
         queue_limit=queue_limit,
         default_deadline_s=deadline_s,
         device_budget_mb=device_budget_mb,
+        obs=obs,
+        trace_dir=trace_dir,
     )
     results = []
     with SessionManager(data, serving=serving) as mgr:
+        server = None
+        if metrics_port is not None:
+            from repro.obs import start_metrics_server
+
+            server = start_metrics_server(mgr.metrics, port=int(metrics_port))
+            print(
+                f"[serve.discovery] metrics at "
+                f"http://127.0.0.1:{server.server_address[1]}/metrics"
+            )
         tickets = []
         for i in range(tenants):
             req = DiscoveryRequest(tenant=f"tenant-{i}")
@@ -142,6 +164,12 @@ def serve_discovery(
             results.append(payload)
             print(f"[serve.discovery] {json.dumps(payload)}")
         telemetry = mgr.telemetry()
+        if metrics_out is not None:
+            with open(metrics_out, "w") as fh:
+                fh.write(mgr.prometheus())
+            print(f"[serve.discovery] metrics written to {metrics_out}")
+        if server is not None:
+            server.shutdown()
     print(f"[serve.discovery] telemetry {json.dumps(telemetry)}")
     return results, telemetry
 
@@ -167,6 +195,23 @@ def main():
     ap.add_argument("--max-concurrent", type=int, default=4)
     ap.add_argument("--queue-limit", type=int, default=16)
     ap.add_argument("--device-budget-mb", type=float, default=None)
+    ap.add_argument(
+        "--obs", choices=("off", "metrics", "trace"), default="off",
+        help="observability mode for every admitted session "
+        "(see repro.core.spec.EngineOptions)",
+    )
+    ap.add_argument(
+        "--trace-dir", default=None,
+        help='directory for per-tenant JSONL/Chrome traces (obs="trace")',
+    )
+    ap.add_argument(
+        "--metrics-out", default=None,
+        help="write the final Prometheus text exposition to this file",
+    )
+    ap.add_argument(
+        "--metrics-port", type=int, default=None,
+        help="serve a live /metrics endpoint on this port (0 = free port)",
+    )
     args = ap.parse_args()
     if args.mode == "discovery":
         serve_discovery(
@@ -178,6 +223,10 @@ def main():
             max_concurrent=args.max_concurrent,
             queue_limit=args.queue_limit,
             device_budget_mb=args.device_budget_mb,
+            obs=args.obs,
+            trace_dir=args.trace_dir,
+            metrics_out=args.metrics_out,
+            metrics_port=args.metrics_port,
         )
     else:
         serve(args.arch, args.batch, args.prompt_len, args.gen)

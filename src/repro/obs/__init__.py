@@ -1,0 +1,78 @@
+"""Unified observability layer: tracing, metrics, exportable timelines.
+
+Public surface:
+
+- :mod:`repro.obs.trace` — ``trace.span(...)`` / ``@traced`` /
+  ``trace.use(recorder)``; :class:`Recorder` owning event emission,
+  JSONL + Chrome/Perfetto output, and jit compile-span capture.
+- :class:`MetricsRegistry` — process-wide counters/gauges/histograms
+  plus lazily-evaluated stats-dict sources.
+- :mod:`repro.obs.export` — JSONL/Chrome/Prometheus writers, the trace
+  event schema validator, and the ``json_safe`` sweep-record converter.
+
+Enabled through ``EngineOptions(obs="metrics"|"trace", trace_dir=...)``
+and ``ServingOptions``; everything is zero-overhead when ``obs="off"``
+(no recorder active — ``trace.span`` returns a shared no-op).
+"""
+
+from . import trace
+from .export import (
+    chrome_trace,
+    json_safe,
+    prometheus_text,
+    read_jsonl,
+    start_metrics_server,
+    validate_events,
+    write_chrome_trace,
+)
+from .metrics import LATENCY_BUCKETS_S, Counter, Gauge, Histogram, MetricsRegistry
+from .trace import Recorder, get_recorder, span, traced, use
+
+
+def engine_stage_split(recorder) -> dict:
+    """Aggregate a recorder's engine stage spans into the historical
+    per-stage split shape: ``{"gram_s":…, "zcores_s":…, "fold_s":…,
+    "path": "device"|"host"[, "small_batch": True]}`` — the keys
+    BENCH_frontier.json has carried since PR 2."""
+    out: dict = {}
+    path = None
+    small = False
+    for ev in recorder.events():
+        if ev.get("ph") != "X" or ev.get("cat") != "stage":
+            continue
+        if ev["name"] not in ("gram", "zcores", "fold"):
+            continue
+        key = ev["name"] + "_s"
+        out[key] = out.get(key, 0.0) + ev["dur"] / 1e6
+        args = ev.get("args", {})
+        if args.get("path") is not None:
+            path = args["path"]
+        small = small or bool(args.get("small_batch"))
+    if path is not None:
+        out["path"] = path
+    if small:
+        out["small_batch"] = True
+    return out
+
+
+__all__ = [
+    "trace",
+    "Recorder",
+    "MetricsRegistry",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "LATENCY_BUCKETS_S",
+    "span",
+    "traced",
+    "use",
+    "get_recorder",
+    "json_safe",
+    "validate_events",
+    "chrome_trace",
+    "write_chrome_trace",
+    "read_jsonl",
+    "prometheus_text",
+    "start_metrics_server",
+    "engine_stage_split",
+]

@@ -1,0 +1,247 @@
+"""Exporters + hygiene helpers: JSONL, Chrome/Perfetto, Prometheus.
+
+Three formats, one event schema (see :func:`validate_events`):
+
+- **JSONL** — append-only, one ``trace_event`` dict per line, flushed per
+  write so a crash loses at most the partial final line (same posture as
+  the checkpoint store it sits alongside).
+- **Chrome/Perfetto** — ``{"traceEvents": [...]}`` with "X" complete
+  events; ts/dur are microseconds and nesting is implied per tid, so the
+  file loads directly in ``ui.perfetto.dev`` / ``chrome://tracing``.
+- **Prometheus text** — counters/gauges/histograms plus flattened
+  sources, rendered with a ``repro_`` prefix and sanitized names.
+
+Also home to :func:`json_safe`, the ``end_sweep``-seam converter that
+keeps jax/numpy scalars and device arrays out of ``RunState`` payloads.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+
+class JsonlWriter:
+    """Append-only, per-line-flushed JSONL sink."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._lock = threading.Lock()
+        self._f = open(path, "a", encoding="utf-8")
+
+    def write(self, obj) -> None:
+        line = json.dumps(obj, separators=(",", ":"))
+        with self._lock:
+            if self._f is None:
+                return
+            self._f.write(line + "\n")
+            self._f.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            if self._f is not None:
+                self._f.close()
+                self._f = None
+
+
+# -- Chrome / Perfetto --------------------------------------------------
+
+
+def chrome_trace(events, metadata: dict | None = None) -> dict:
+    doc = {"traceEvents": list(events), "displayTimeUnit": "ms"}
+    if metadata:
+        doc["metadata"] = dict(metadata)
+    return doc
+
+
+def write_chrome_trace(path: str, events, metadata: dict | None = None) -> str:
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(chrome_trace(events, metadata), f)
+    return path
+
+
+def read_jsonl(path: str) -> list:
+    """Load a JSONL event log, tolerating a torn final line (crash)."""
+    out = []
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(json.loads(line))
+            except json.JSONDecodeError:
+                break  # torn tail from a crash; everything before is good
+    return out
+
+
+# -- event schema -------------------------------------------------------
+
+_PHASES = ("X", "i")
+
+
+def validate_events(events) -> list:
+    """Schema-check trace events; returns a list of error strings.
+
+    Required for every event: str ``name``/``cat``, ``ph`` in {X, i},
+    numeric non-negative ``ts``, int ``pid``/``tid``, JSON-safe ``args``
+    dict.  "X" events additionally need numeric non-negative ``dur``.
+    """
+    errors = []
+    for i, ev in enumerate(events):
+        where = f"event[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: not a dict")
+            continue
+        name = ev.get("name")
+        if not isinstance(name, str) or not name:
+            errors.append(f"{where}: bad name {name!r}")
+        if not isinstance(ev.get("cat"), str):
+            errors.append(f"{where} ({name}): bad cat")
+        if ev.get("ph") not in _PHASES:
+            errors.append(f"{where} ({name}): ph must be one of {_PHASES}")
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            errors.append(f"{where} ({name}): bad ts {ts!r}")
+        if ev.get("ph") == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"{where} ({name}): bad dur {dur!r}")
+        for key in ("pid", "tid"):
+            if not isinstance(ev.get(key), int):
+                errors.append(f"{where} ({name}): bad {key}")
+        args = ev.get("args")
+        if not isinstance(args, dict):
+            errors.append(f"{where} ({name}): args must be a dict")
+        else:
+            try:
+                json.dumps(args)
+            except (TypeError, ValueError) as e:
+                errors.append(f"{where} ({name}): args not JSON-safe: {e}")
+    return errors
+
+
+# -- sweep-record hygiene ----------------------------------------------
+
+
+def json_safe(obj, path: str = "record"):
+    """Return ``obj`` with numpy/jax leaves converted to plain Python.
+
+    Container types are preserved (tuples stay tuples — ``json.dumps``
+    renders them as arrays, and ``RunState`` round-trips depend on the
+    step tuples keeping their type), scalar leaves are unwrapped via
+    ``.item()``, small arrays via ``.tolist()``.  Anything else raises
+    ``TypeError`` naming the offending key path, so a device array
+    leaking into a sweep record fails loudly at the ``end_sweep`` seam
+    instead of at checkpoint-serialization time.
+    """
+    if obj is None or isinstance(obj, (bool, str)):
+        return obj
+    if isinstance(obj, (int, float)):
+        # unwrap numeric subclasses too: np.float64 IS a float subclass,
+        # and a clean payload carries only stdlib leaves
+        if type(obj) in (int, float):
+            return obj
+        return int(obj) if isinstance(obj, int) else float(obj)
+    if isinstance(obj, dict):
+        out = {}
+        for k, v in obj.items():
+            if not isinstance(k, str):
+                raise TypeError(f"{path}: non-string key {k!r}")
+            out[k] = json_safe(v, f"{path}.{k}")
+        return out
+    if isinstance(obj, tuple):
+        return tuple(json_safe(v, f"{path}[{i}]") for i, v in enumerate(obj))
+    if isinstance(obj, list):
+        return [json_safe(v, f"{path}[{i}]") for i, v in enumerate(obj)]
+    # numpy scalars / 0-d arrays / small jax arrays: duck-typed so this
+    # module stays importable without jax.
+    shape = getattr(obj, "shape", None)
+    if shape == () and hasattr(obj, "item"):
+        v = obj.item()
+        if isinstance(v, (bool, int, float, str)):
+            return v
+    if shape is not None and hasattr(obj, "tolist"):
+        return json_safe(obj.tolist(), path)
+    raise TypeError(
+        f"{path} is not JSON-safe: {type(obj).__module__}.{type(obj).__name__}"
+    )
+
+
+# -- Prometheus ---------------------------------------------------------
+
+_NAME_RE = re.compile(r"[^a-zA-Z0-9_]")
+
+
+def _prom_name(name: str) -> str:
+    return "repro_" + _NAME_RE.sub("_", str(name))
+
+
+def _fmt(v: float) -> str:
+    f = float(v)
+    return str(int(f)) if f == int(f) else repr(f)
+
+
+def prometheus_text(registry) -> str:
+    """Render a :class:`~repro.obs.metrics.MetricsRegistry` snapshot as
+    Prometheus exposition text (counters, gauges, histograms, and
+    numeric source fields flattened to gauges)."""
+    snap = registry.snapshot()
+    lines = []
+    for name, value in sorted(snap["counters"].items()):
+        pn = _prom_name(name)
+        lines.append(f"# TYPE {pn} counter")
+        lines.append(f"{pn} {_fmt(value)}")
+    for name, value in sorted(snap["gauges"].items()):
+        pn = _prom_name(name)
+        lines.append(f"# TYPE {pn} gauge")
+        lines.append(f"{pn} {_fmt(value)}")
+    for name, h in sorted(snap["histograms"].items()):
+        pn = _prom_name(name)
+        lines.append(f"# TYPE {pn} histogram")
+        for le, cum in h["buckets"].items():
+            lines.append(f'{pn}_bucket{{le="{le}"}} {cum}')
+        lines.append(f'{pn}_bucket{{le="+Inf"}} {h["count"]}')
+        lines.append(f"{pn}_sum {_fmt(h['sum'])}")
+        lines.append(f"{pn}_count {h['count']}")
+    for source, stats in sorted(snap["sources"].items()):
+        for key, value in sorted(stats.items()):
+            if isinstance(value, bool) or not isinstance(value, (int, float)):
+                continue
+            pn = _prom_name(f"{source}.{key}")
+            lines.append(f"# TYPE {pn} gauge")
+            lines.append(f"{pn} {_fmt(value)}")
+    return "\n".join(lines) + "\n"
+
+
+class _MetricsHandler(BaseHTTPRequestHandler):
+    registry = None
+
+    def do_GET(self):  # noqa: N802 (stdlib API)
+        if self.path.rstrip("/") not in ("", "/metrics"):
+            self.send_error(404)
+            return
+        body = prometheus_text(self.registry).encode()
+        self.send_response(200)
+        self.send_header("Content-Type", "text/plain; version=0.0.4")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def log_message(self, *args):  # keep serving output clean
+        pass
+
+
+def start_metrics_server(registry, host: str = "127.0.0.1", port: int = 0):
+    """Serve ``/metrics`` on a daemon thread; returns the server (use
+    ``server.server_address[1]`` for the bound port, ``shutdown()`` to
+    stop)."""
+    handler = type("_Bound", (_MetricsHandler,), {"registry": registry})
+    server = ThreadingHTTPServer((host, port), handler)
+    thread = threading.Thread(
+        target=server.serve_forever, name="obs-metrics", daemon=True
+    )
+    thread.start()
+    return server

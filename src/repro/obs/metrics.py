@@ -1,0 +1,176 @@
+"""Process-wide metrics registry: counters, gauges, histograms, sources.
+
+The registry is the single sink the repo's scattered telemetry dicts
+re-register into (``GramBlockCache.stats``, ``FeatureBank.stats``, the
+degradation ladder, constraint counters, serving admission stats).  The
+owning objects keep their dicts — every pre-existing ``sweep_log`` /
+``telemetry()`` key stays bitwise-identical — and expose them here as
+*sources*: zero-arg callables returning a flat dict, evaluated lazily at
+:meth:`MetricsRegistry.snapshot` time.  New measurements (span latencies,
+compile events) use first-class typed instruments.
+
+Instrument names are dotted lowercase (``gram_cache.hits``,
+``span.fold.s``); the Prometheus renderer in :mod:`repro.obs.export`
+prefixes ``repro_`` and sanitizes the rest.
+"""
+
+from __future__ import annotations
+
+import bisect
+import threading
+
+# Fixed latency buckets (seconds) shared by every duration histogram so
+# percentiles stay comparable across subsystems.
+LATENCY_BUCKETS_S = (0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0, 15.0, 60.0)
+
+
+class Counter:
+    """Monotonic counter. ``inc`` is thread-safe."""
+
+    __slots__ = ("name", "_lock", "_value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._lock = threading.Lock()
+        self._value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        if n < 0:
+            raise ValueError(f"counter {self.name!r} cannot decrease (inc {n})")
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class Gauge:
+    """Last-write-wins instantaneous value."""
+
+    __slots__ = ("name", "_value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = 0.0
+
+    def set(self, v: float) -> None:
+        self._value = float(v)
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+
+class Histogram:
+    """Fixed-bucket histogram (cumulative render, Prometheus-style)."""
+
+    __slots__ = ("name", "buckets", "_lock", "_counts", "_sum", "_count")
+
+    def __init__(self, name: str, buckets: tuple = LATENCY_BUCKETS_S):
+        if tuple(sorted(buckets)) != tuple(buckets) or not buckets:
+            raise ValueError(f"histogram {name!r} buckets must be sorted, non-empty")
+        self.name = name
+        self.buckets = tuple(float(b) for b in buckets)
+        self._lock = threading.Lock()
+        self._counts = [0] * (len(self.buckets) + 1)  # last slot = +Inf
+        self._sum = 0.0
+        self._count = 0
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        idx = bisect.bisect_left(self.buckets, v)
+        with self._lock:
+            self._counts[idx] += 1
+            self._sum += v
+            self._count += 1
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    def to_dict(self) -> dict:
+        with self._lock:
+            counts = list(self._counts)
+            total, s = self._count, self._sum
+        cum, out = 0, {}
+        for le, c in zip(self.buckets, counts):
+            cum += c
+            out[le] = cum
+        return {"buckets": out, "count": total, "sum": s}
+
+
+class MetricsRegistry:
+    """Get-or-create instrument registry + lazy dict sources.
+
+    One :meth:`snapshot` call replaces reading five bespoke stats dicts;
+    the dicts themselves are untouched (back-compat is a hard
+    requirement — see ISSUE 10 acceptance criteria).
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: dict = {}
+        self._gauges: dict = {}
+        self._histograms: dict = {}
+        self._sources: dict = {}
+
+    def counter(self, name: str) -> Counter:
+        with self._lock:
+            c = self._counters.get(name)
+            if c is None:
+                c = self._counters[name] = Counter(name)
+            return c
+
+    def gauge(self, name: str) -> Gauge:
+        with self._lock:
+            g = self._gauges.get(name)
+            if g is None:
+                g = self._gauges[name] = Gauge(name)
+            return g
+
+    def histogram(self, name: str, buckets: tuple = LATENCY_BUCKETS_S) -> Histogram:
+        with self._lock:
+            h = self._histograms.get(name)
+            if h is None:
+                h = self._histograms[name] = Histogram(name, buckets)
+            return h
+
+    def register_source(self, name: str, supplier) -> None:
+        """Attach a zero-arg callable returning a flat stats dict.
+
+        Re-registering a name replaces the supplier (a resumed session
+        re-attaches its caches without error).
+        """
+        if not callable(supplier):
+            raise TypeError(f"source {name!r} supplier must be callable")
+        with self._lock:
+            self._sources[name] = supplier
+
+    def unregister_source(self, name: str) -> None:
+        with self._lock:
+            self._sources.pop(name, None)
+
+    def snapshot(self) -> dict:
+        """One call, every number: instruments + evaluated sources."""
+        with self._lock:
+            counters = {n: c.value for n, c in self._counters.items()}
+            gauges = {n: g.value for n, g in self._gauges.items()}
+            hists = {n: h.to_dict() for n, h in self._histograms.items()}
+            sources = dict(self._sources)
+        evaluated = {}
+        for name, supplier in sources.items():
+            try:
+                evaluated[name] = dict(supplier())
+            except Exception as e:  # a dead source must not poison the snapshot
+                evaluated[name] = {"error": f"{type(e).__name__}: {e}"}
+        return {
+            "counters": counters,
+            "gauges": gauges,
+            "histograms": hists,
+            "sources": evaluated,
+        }

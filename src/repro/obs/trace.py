@@ -1,0 +1,314 @@
+"""Structured tracing: spans, the active-recorder context, compile hooks.
+
+Zero-overhead-when-disabled contract: with no recorder active,
+:func:`span` costs one ``ContextVar.get`` plus a shared no-op context
+manager — no allocation, no branching in callees.  Hot code therefore
+instruments unconditionally::
+
+    from repro.obs import trace
+
+    with trace.span("fold_gram", attrs={"width": w}):
+        ...
+
+Span hierarchy (by monotonic ts/dur nesting per thread, the Perfetto
+convention — no explicit parent ids): session -> sweep -> stage
+(enumerate / features / gram / zcores / fold / select / constraint /
+checkpoint) -> kernel dispatch, with ``compile`` spans injected from
+jax's jit cache-miss monitoring events so warm-sweep compile churn is
+visible and separated from execute time.
+
+Recorders are owned by ``DiscoverySession`` / ``SessionManager`` and
+activated via :func:`use`.  The active recorder rides a ``contextvars``
+context, which does NOT propagate into ``ThreadPoolExecutor`` workers —
+sharded workers and serving threads re-enter with ``trace.use(rec)``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import functools
+import itertools
+import os
+import re
+import threading
+import time
+
+from .export import JsonlWriter, write_chrome_trace
+from .metrics import MetricsRegistry
+
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_obs_recorder", default=None
+)
+_SEQ = itertools.count()
+_COMPILE_PREFIX = "/jax/core/compile/"
+_hook_lock = threading.Lock()
+_hook_installed = False
+
+MODES = ("metrics", "trace")
+
+
+def get_recorder():
+    """The recorder active in this thread/context, or None."""
+    return _ACTIVE.get()
+
+
+@contextlib.contextmanager
+def use(recorder):
+    """Make ``recorder`` the active recorder for the dynamic extent.
+
+    ``use(None)`` is a no-op context — callers can pass an optional
+    recorder straight through without branching.
+    """
+    if recorder is None:
+        yield None
+        return
+    token = _ACTIVE.set(recorder)
+    try:
+        yield recorder
+    finally:
+        _ACTIVE.reset(token)
+
+
+class _NoopSpan:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NOOP_SPAN = _NoopSpan()
+
+
+class _Span:
+    __slots__ = ("_rec", "name", "cat", "attrs", "_t0")
+
+    def __init__(self, rec, name, cat, attrs):
+        self._rec = rec
+        self.name = name
+        self.cat = cat
+        self.attrs = attrs
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self._rec.complete(self.name, self._t0, time.perf_counter(), self.cat, self.attrs)
+        return False
+
+
+def span(name: str, cat: str = "stage", attrs: dict | None = None):
+    """Context manager timing a block under the active recorder."""
+    rec = _ACTIVE.get()
+    if rec is None:
+        return _NOOP_SPAN
+    return _Span(rec, name, cat, attrs)
+
+
+def traced(name: str | None = None, cat: str = "stage"):
+    """Decorator form of :func:`span` (label defaults to the qualname)."""
+
+    def deco(fn):
+        label = name or fn.__qualname__
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rec = _ACTIVE.get()
+            if rec is None:
+                return fn(*args, **kwargs)
+            t0 = time.perf_counter()
+            try:
+                return fn(*args, **kwargs)
+            finally:
+                rec.complete(label, t0, time.perf_counter(), cat, None)
+
+        return wrapper
+
+    return deco
+
+
+def _on_jax_event(event, duration_secs, **kw):
+    """Forward jax compile-duration monitoring events to the recorder
+    active in the compiling thread (jit compiles happen on the dispatch
+    thread, so the contextvar lookup lands on the right session)."""
+    if not event.startswith(_COMPILE_PREFIX):
+        return
+    rec = _ACTIVE.get()
+    if rec is None:
+        return
+    kind = event[len(_COMPILE_PREFIX):]
+    if kind.endswith("_duration"):
+        kind = kind[: -len("_duration")]
+    rec.compile_event(kind, float(duration_secs))
+
+
+def install_compile_listener() -> bool:
+    """Register the process-wide jax.monitoring listener once.
+
+    ``backend_compile`` events fire only on actual jit cache misses;
+    ``jaxpr_trace`` / ``jaxpr_to_mlir_module`` cover the tracing and
+    lowering stages.  Safe without jax installed (returns False).
+    """
+    global _hook_installed
+    if _hook_installed:
+        return True
+    with _hook_lock:
+        if _hook_installed:
+            return True
+        try:
+            from jax import monitoring
+        except Exception:
+            return False
+        monitoring.register_event_duration_secs_listener(_on_jax_event)
+        _hook_installed = True
+        return True
+
+
+def _slug(s: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]+", "-", str(s)) or "run"
+
+
+class Recorder:
+    """Per-session event sink: spans -> metrics, JSONL, Chrome trace.
+
+    mode="metrics": span durations feed the registry's histograms and
+    counters only — no event retention, no files.
+    mode="trace": additionally retains trace_event dicts in memory and,
+    when ``trace_dir`` is set, appends each event to a crash-safe JSONL
+    log as it completes (same durability posture as the checkpoint
+    store: a crash loses at most the partial last line).
+    """
+
+    def __init__(
+        self,
+        mode: str = "trace",
+        labels: dict | None = None,
+        registry: MetricsRegistry | None = None,
+        trace_dir: str | None = None,
+        name: str | None = None,
+    ):
+        if mode not in MODES:
+            raise ValueError(f"Recorder mode must be one of {MODES}, got {mode!r}")
+        self.mode = mode
+        self.labels = dict(labels or {})
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.name = _slug(name if name is not None else self.labels.get("session", "run"))
+        self.trace_dir = trace_dir
+        self._lock = threading.Lock()
+        self._events: list = []
+        self._jsonl = None
+        self.jsonl_path = None
+        self.chrome_path = None
+        if trace_dir is not None and mode == "trace":
+            os.makedirs(trace_dir, exist_ok=True)
+            stem = f"{self.name}-{os.getpid()}-{next(_SEQ)}"
+            self.jsonl_path = os.path.join(trace_dir, f"events-{stem}.jsonl")
+            self.chrome_path = os.path.join(trace_dir, f"trace-{stem}.json")
+            self._jsonl = JsonlWriter(self.jsonl_path)
+        install_compile_listener()
+
+    # -- labels ---------------------------------------------------------
+
+    def set_label(self, key: str, value) -> None:
+        with self._lock:
+            self.labels[key] = value
+
+    def pop_label(self, key: str) -> None:
+        with self._lock:
+            self.labels.pop(key, None)
+
+    # -- emission -------------------------------------------------------
+
+    def complete(self, name, t0, t1, cat="stage", attrs=None) -> None:
+        """Record a finished span [t0, t1] (perf_counter seconds)."""
+        dur = max(0.0, t1 - t0)
+        self.registry.counter(f"span.{name}.count").inc()
+        self.registry.histogram(f"span.{name}.s").observe(dur)
+        if self.mode != "trace":
+            return
+        with self._lock:
+            ev = {
+                "name": name,
+                "cat": cat,
+                "ph": "X",
+                "ts": round(t0 * 1e6, 3),
+                "dur": round(dur * 1e6, 3),
+                "pid": os.getpid(),
+                "tid": threading.get_ident(),
+                "args": {**self.labels, **(attrs or {})},
+            }
+            self._events.append(ev)
+            if self._jsonl is not None:
+                self._jsonl.write(ev)
+
+    def instant(self, name, cat="mark", attrs=None) -> None:
+        self.registry.counter(f"mark.{name}.count").inc()
+        if self.mode != "trace":
+            return
+        with self._lock:
+            ev = {
+                "name": name,
+                "cat": cat,
+                "ph": "i",
+                "s": "t",
+                "ts": round(time.perf_counter() * 1e6, 3),
+                "pid": os.getpid(),
+                "tid": threading.get_ident(),
+                "args": {**self.labels, **(attrs or {})},
+            }
+            self._events.append(ev)
+            if self._jsonl is not None:
+                self._jsonl.write(ev)
+
+    def compile_event(self, kind: str, duration_s: float) -> None:
+        """A jit compile stage reported by jax.monitoring; rendered as a
+        span ending now (the listener fires at stage completion)."""
+        t1 = time.perf_counter()
+        self.registry.counter("compile.events").inc()
+        self.registry.histogram("compile.s").observe(duration_s)
+        self.complete(f"compile:{kind}", t1 - duration_s, t1, cat="compile", attrs=None)
+
+    def span(self, name, cat="stage", attrs=None):
+        return _Span(self, name, cat, attrs)
+
+    def begin(self, name, cat="stage", attrs=None) -> dict:
+        """Open a span closed later by :meth:`end` — for spans that cross
+        method boundaries (begin_sweep/end_sweep)."""
+        return {"name": name, "cat": cat, "attrs": attrs, "t0": time.perf_counter()}
+
+    def end(self, handle: dict) -> None:
+        self.complete(
+            handle["name"], handle["t0"], time.perf_counter(),
+            handle["cat"], handle["attrs"],
+        )
+
+    def activate(self):
+        return use(self)
+
+    # -- inspection / shutdown -----------------------------------------
+
+    def events(self) -> list:
+        with self._lock:
+            return list(self._events)
+
+    def stage_seconds(self, cats=("stage",)) -> dict:
+        """Summed span seconds by name over the given categories."""
+        out: dict = {}
+        for ev in self.events():
+            if ev.get("ph") == "X" and ev.get("cat") in cats:
+                out[ev["name"]] = out.get(ev["name"], 0.0) + ev["dur"] / 1e6
+        return out
+
+    def close(self) -> None:
+        """Flush the JSONL log and write the Chrome/Perfetto timeline."""
+        with self._lock:
+            if self._jsonl is not None:
+                self._jsonl.close()
+                self._jsonl = None
+            events = list(self._events)
+        if self.chrome_path is not None:
+            write_chrome_trace(self.chrome_path, events)

@@ -57,9 +57,10 @@ from concurrent.futures import ThreadPoolExecutor
 
 from repro.core.api import DiscoverySession
 from repro.core.score_common import GramBlockCache, ScoreConfig
-from repro.core.spec import DataSpec, EngineOptions, resolve_spec
+from repro.core.spec import OBS_MODES, DataSpec, EngineOptions, resolve_spec
 from repro.features.bank import FeatureBank
 from repro.features.policy import FeaturePolicy
+from repro.obs import MetricsRegistry, prometheus_text
 from repro.serving.errors import RequestShed, structured_error
 
 
@@ -82,6 +83,13 @@ class ServingOptions:
     checkpoint_root: directory namespace for per-tenant checkpointing —
       a request with ``checkpoint=True`` gets
       ``checkpoint_root/<tenant>`` as its isolated checkpoint_dir.
+    obs: serving-level observability mode (see
+      `repro.core.spec.EngineOptions`); when not ``"off"`` it overrides
+      every admitted session's ``obs``/``trace_dir``, each session
+      records into the manager's shared `repro.obs.MetricsRegistry`,
+      and spans/sources are tagged with the request's tenant.
+    trace_dir: directory for per-tenant JSONL/Chrome trace files
+      (requires ``obs="trace"``).
     """
 
     max_concurrent: int = 4
@@ -91,6 +99,8 @@ class ServingOptions:
     device_budget_mb: float | None = None
     min_device_bank_mb: float = 16.0
     checkpoint_root: str | None = None
+    obs: str = "off"
+    trace_dir: str | None = None
 
     def __post_init__(self):
         if int(self.max_concurrent) < 1:
@@ -100,6 +110,15 @@ class ServingOptions:
         if int(self.queue_limit) < 0:
             raise ValueError(
                 f"queue_limit must be >= 0, got {self.queue_limit!r}"
+            )
+        if self.obs not in OBS_MODES:
+            raise ValueError(
+                f"obs must be one of {OBS_MODES}, got {self.obs!r}"
+            )
+        if self.trace_dir is not None and self.obs != "trace":
+            raise ValueError(
+                'trace_dir requires obs="trace", got '
+                f"obs={self.obs!r} with trace_dir={self.trace_dir!r}"
             )
         object.__setattr__(self, "max_concurrent", int(self.max_concurrent))
         object.__setattr__(self, "queue_limit", int(self.queue_limit))
@@ -206,10 +225,41 @@ class SessionManager:
             "pruned_pairs": 0,
             "skeleton_s": 0.0,
         }
+        # shared metrics registry: every admitted session's recorder
+        # (serving obs != "off") registers its counters/histograms here,
+        # plus the manager's own admission/ladder/bank suppliers.  Always
+        # constructed — it is a few dicts — so `metrics_snapshot()` and
+        # `prometheus()` work regardless of mode.
+        self.metrics = MetricsRegistry()
+        self.metrics.register_source("serving.stats", self._stats_source)
+        self.metrics.register_source(
+            "serving.degradations", self._degradations_source
+        )
+        self.metrics.register_source(
+            "serving.constraint", self._constraint_source
+        )
+        self.metrics.register_source(
+            "serving.feature_bank", lambda: dict(self.feature_bank.stats)
+        )
+        self.metrics.register_source(
+            "serving.latency", self.latency_percentiles
+        )
         self._pool = ThreadPoolExecutor(
             max_workers=self.serving.max_concurrent,
             thread_name_prefix="discovery",
         )
+
+    def _stats_source(self) -> dict:
+        with self._lock:
+            return dict(self.stats)
+
+    def _degradations_source(self) -> dict:
+        with self._lock:
+            return dict(self.degradations)
+
+    def _constraint_source(self) -> dict:
+        with self._lock:
+            return dict(self.constraint_totals)
 
     # -- shared-state plumbing --------------------------------------------
     def _policy_for(self, options: EngineOptions) -> FeaturePolicy:
@@ -388,6 +438,12 @@ class SessionManager:
                 options,
                 checkpoint_dir=os.path.join(root, str(request.tenant)),
             )
+        if self.serving.obs != "off":
+            options = dataclasses.replace(
+                options,
+                obs=self.serving.obs,
+                trace_dir=self.serving.trace_dir,
+            )
         return self._degrade(options, serving_info)
 
     def _serve(self, ticket, request, deadline_s, deadline_at):
@@ -415,9 +471,17 @@ class SessionManager:
                 cancel_event=ticket._cancel_event,
                 deadline_at=deadline_at,
                 serving_info=serving_info or None,
+                metrics_registry=self.metrics,
             )
             ticket.session = session
-            result = session.run()
+            try:
+                result = session.run()
+            finally:
+                # flush the tenant's trace files and drop its per-tenant
+                # sources from the shared registry (keeps the registry
+                # bounded over a long-lived manager); the recorder's
+                # counters/histograms stay — they aggregate across tenants
+                session.close_obs()
         except BaseException as exc:
             ticket.error = structured_error(exc)
             code = ticket.error.get("error")
@@ -483,6 +547,17 @@ class SessionManager:
             return round(lat[i], 4)
 
         return {"p50": _pct(0.50), "p95": _pct(0.95), "n": len(lat)}
+
+    def metrics_snapshot(self) -> dict:
+        """Point-in-time dump of the shared `repro.obs.MetricsRegistry`:
+        recorder counters/histograms plus the manager's registered
+        sources (admission stats, ladder, constraint totals, bank)."""
+        return self.metrics.snapshot()
+
+    def prometheus(self) -> str:
+        """The shared registry rendered as Prometheus text exposition
+        (see `repro.obs.prometheus_text`)."""
+        return prometheus_text(self.metrics)
 
     def telemetry(self) -> dict:
         """One dict for logs/benchmarks: admission stats, ladder counters,

@@ -27,6 +27,8 @@ from repro.core.score_lowrank import (
     cvlr_scores_batched,
 )
 from repro.data.synthetic import generate_scm_data
+from repro.obs import Recorder, engine_stage_split
+from repro.obs import trace as obs_trace
 
 
 def _frontier_configs(d, extra=()):
@@ -199,13 +201,16 @@ def test_device_bank_opt_out_kwarg():
 
 
 def test_prefetch_stage_timings():
-    """The engine's opt-in profiler reports the pipeline path and the
-    three stage slices (benchmarks/frontier_scoring.py depends on it)."""
+    """An active trace recorder captures the pipeline path and the three
+    stage slices; `repro.obs.engine_stage_split` folds them back into
+    the per-stage keys benchmarks/frontier_scoring.py depends on."""
     rng = np.random.default_rng(2)
     data = rng.standard_normal((180, 3))
     s = CVLRScorer(data, config=ScoreConfig(seed=0))
-    t: dict = {}
-    s.prefetch(_frontier_configs(3), timings=t)
+    rec = Recorder(mode="trace")
+    with obs_trace.use(rec):
+        s.prefetch(_frontier_configs(3))
+    t = engine_stage_split(rec)
     assert t["path"] == "device"
     for k in ("gram_s", "zcores_s", "fold_s"):
         assert t[k] >= 0.0

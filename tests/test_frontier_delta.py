@@ -37,6 +37,8 @@ from repro.core.score_common import ScoreConfig, config_key
 from repro.core.score_lowrank import CVLRScorer
 from repro.core.spec import DataSpec, EngineOptions
 from repro.data.synthetic import generate_scm_data
+from repro.obs import Recorder, engine_stage_split
+from repro.obs import trace as obs_trace
 
 _CFG = ScoreConfig(q_folds=5, m_max=40)
 
@@ -266,12 +268,16 @@ def test_small_batch_path_bitwise_equals_default():
     data = _chain_data(n=120)
     cfgs = _frontier_configs(4)
     small = CVLRScorer(data, config=_CFG)
-    t_small: dict = {}
-    assert small.prefetch(cfgs, timings=t_small, small_batch=True) == len(cfgs)
+    rec_small = Recorder(mode="trace")
+    with obs_trace.use(rec_small):
+        assert small.prefetch(cfgs, small_batch=True) == len(cfgs)
+    t_small = engine_stage_split(rec_small)
     assert t_small["path"] == "host" and t_small["small_batch"] is True
     full = CVLRScorer(data, config=_CFG)
-    t_full: dict = {}
-    assert full.prefetch(cfgs, timings=t_full) == len(cfgs)
+    rec_full = Recorder(mode="trace")
+    with obs_trace.use(rec_full):
+        assert full.prefetch(cfgs) == len(cfgs)
+    t_full = engine_stage_split(rec_full)
     assert "small_batch" not in t_full
     for i, ps in cfgs:
         key = config_key(i, ps)
@@ -285,13 +291,17 @@ def test_small_batch_is_optin_and_capped(monkeypatch):
     assert CVLRScorer.SMALL_BATCH_CONFIGS == 128
     data = _chain_data()
     s = CVLRScorer(data, config=_CFG)
-    t: dict = {}
-    s.prefetch([(0, ()), (0, (1,)), (1, ())], timings=t)
+    rec = Recorder(mode="trace")
+    with obs_trace.use(rec):
+        s.prefetch([(0, ()), (0, (1,)), (1, ())])
+    t = engine_stage_split(rec)
     assert "small_batch" not in t  # no hijack without the session's opt-in
     monkeypatch.setattr(CVLRScorer, "SMALL_BATCH_CONFIGS", 1)
     over = CVLRScorer(data, config=_CFG)
-    t2: dict = {}
-    over.prefetch([(0, ()), (0, (1,)), (1, ())], timings=t2, small_batch=True)
+    rec2 = Recorder(mode="trace")
+    with obs_trace.use(rec2):
+        over.prefetch([(0, ()), (0, (1,)), (1, ())], small_batch=True)
+    t2 = engine_stage_split(rec2)
     assert "small_batch" not in t2  # eligible but over the cap: full path
 
 
@@ -306,9 +316,9 @@ def test_session_warm_sweeps_use_small_batch():
     calls = []
     real = sess.scorer.prefetch
 
-    def spy(configs, timings=None, small_batch=False):
+    def spy(configs, small_batch=False):
         calls.append((len(list(configs)), small_batch))
-        return real(configs, timings=timings, small_batch=small_batch)
+        return real(configs, small_batch=small_batch)
 
     sess.scorer.prefetch = spy
     base = [(i, ()) for i in range(4)]

@@ -1,0 +1,560 @@
+"""Unified observability layer (PR 10): spans, metrics, exporters.
+
+Four contracts under test:
+
+1. **Zero overhead / zero interference when disabled** — with no active
+   recorder a span is a shared no-op object, and ``obs="off"`` discovery
+   output is bitwise-identical to ``obs="metrics"`` / ``obs="trace"``
+   (an active recorder adds stage-boundary syncs, never arithmetic).
+2. **Timeline fidelity** — a traced run emits schema-valid trace_event
+   dicts (session -> sweep -> stage nesting, kernel + compile cats), the
+   JSONL log survives torn tails, and the Chrome/Perfetto export loads.
+3. **Registry back-compat** — the scattered stats dicts re-register as
+   lazy sources; every pre-existing ``sweep_log`` / ``telemetry()`` key
+   is untouched, and multi-tenant sources never leak across tenants.
+4. **Hygiene at the seams** — ``end_sweep`` runs every sweep record
+   through `repro.obs.json_safe`, so jax/numpy leaves can never reach
+   ``RunState`` payloads.
+"""
+
+import json
+import threading
+import time
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core.api import DiscoverySession, causal_discover
+from repro.core.spec import OBS_MODES, EngineOptions
+from repro.obs import (
+    LATENCY_BUCKETS_S,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Recorder,
+    chrome_trace,
+    engine_stage_split,
+    json_safe,
+    prometheus_text,
+    read_jsonl,
+    start_metrics_server,
+    validate_events,
+)
+from repro.obs import trace as obs_trace
+
+
+def _chain_data(n=150, d=4, seed=0):
+    rng = np.random.default_rng(seed)
+    cols = [rng.standard_normal(n)]
+    for _ in range(d - 1):
+        cols.append(np.tanh(cols[-1]) + 0.4 * rng.standard_normal(n))
+    return np.stack(cols, axis=1)
+
+
+# -- metrics registry ------------------------------------------------------
+
+
+def test_counter_gauge_histogram():
+    reg = MetricsRegistry()
+    c = reg.counter("x.count")
+    c.inc()
+    c.inc(2)
+    assert c.value == 3
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    assert reg.counter("x.count") is c  # get-or-create
+
+    g = reg.gauge("x.depth")
+    g.set(7)
+    assert g.value == 7.0
+
+    h = reg.histogram("x.s")
+    assert h.buckets == LATENCY_BUCKETS_S
+    h.observe(0.003)
+    h.observe(0.003)
+    h.observe(200.0)  # lands in +Inf
+    d = h.to_dict()
+    assert d["count"] == 3
+    assert d["buckets"][0.005] == 2
+    assert d["buckets"][60.0] == 2  # +Inf overflow not in cumulative buckets
+    assert d["sum"] == pytest.approx(200.006)
+
+
+def test_histogram_rejects_unsorted_buckets():
+    with pytest.raises(ValueError):
+        Histogram("bad", buckets=(1.0, 0.5))
+
+
+def test_registry_snapshot_and_sources():
+    reg = MetricsRegistry()
+    reg.counter("a").inc()
+    reg.gauge("b").set(2)
+    reg.histogram("c").observe(0.01)
+    stats = {"hits": 1, "misses": 2}
+    reg.register_source("cache", lambda: stats)
+    snap = reg.snapshot()
+    assert snap["counters"] == {"a": 1.0}
+    assert snap["gauges"] == {"b": 2.0}
+    assert snap["histograms"]["c"]["count"] == 1
+    assert snap["sources"]["cache"] == {"hits": 1, "misses": 2}
+    # sources are lazy: mutations show up at the next snapshot
+    stats["hits"] = 5
+    assert reg.snapshot()["sources"]["cache"]["hits"] == 5
+    # a dead source reports instead of poisoning the snapshot
+    reg.register_source("dead", lambda: 1 / 0)
+    assert "ZeroDivisionError" in reg.snapshot()["sources"]["dead"]["error"]
+    reg.unregister_source("dead")
+    assert "dead" not in reg.snapshot()["sources"]
+    with pytest.raises(TypeError):
+        reg.register_source("notcallable", 42)
+
+
+def test_prometheus_text_render():
+    reg = MetricsRegistry()
+    reg.counter("span.fold.count").inc(3)
+    reg.histogram("span.fold.s").observe(0.02)
+    reg.register_source("serving.stats", lambda: {"shed": 4, "note": "x"})
+    text = prometheus_text(reg)
+    assert "# TYPE repro_span_fold_count counter" in text
+    assert "repro_span_fold_count 3" in text
+    assert 'repro_span_fold_s_bucket{le="+Inf"} 1' in text
+    assert "repro_serving_stats_shed 4" in text
+    assert "note" not in text  # non-numeric source fields are skipped
+
+
+def test_metrics_http_endpoint():
+    reg = MetricsRegistry()
+    reg.counter("hits").inc(9)
+    server = start_metrics_server(reg, port=0)
+    try:
+        port = server.server_address[1]
+        body = urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/metrics", timeout=5
+        ).read().decode()
+        assert "repro_hits 9" in body
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/nope", timeout=5
+            )
+    finally:
+        server.shutdown()
+
+
+# -- trace primitives ------------------------------------------------------
+
+
+def test_span_noop_without_recorder():
+    assert obs_trace.get_recorder() is None
+    s1 = obs_trace.span("a")
+    s2 = obs_trace.span("b", cat="kernel", attrs={"x": 1})
+    assert s1 is s2  # the shared no-op object: no allocation when off
+    with s1:
+        pass
+
+
+def test_span_records_and_nests():
+    rec = Recorder(mode="trace", labels={"session": "s1"})
+    with rec.activate():
+        with obs_trace.span("outer", cat="sweep"):
+            with obs_trace.span("inner", cat="stage", attrs={"k": 2}):
+                time.sleep(0.002)
+    evs = rec.events()
+    assert [e["name"] for e in evs] == ["inner", "outer"]  # close order
+    inner, outer = evs
+    assert inner["args"] == {"session": "s1", "k": 2}
+    assert outer["cat"] == "sweep" and outer["ph"] == "X"
+    # nesting is implied by ts/dur containment on one tid
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-3
+    assert inner["tid"] == outer["tid"] == threading.get_ident()
+    assert not validate_events(evs)
+    # instruments updated too
+    snap = rec.registry.snapshot()
+    assert snap["counters"]["span.inner.count"] == 1
+    assert snap["histograms"]["span.inner.s"]["count"] == 1
+
+
+def test_traced_decorator():
+    calls = []
+
+    @obs_trace.traced("fancy", cat="kernel")
+    def f(x):
+        calls.append(x)
+        return x + 1
+
+    assert f(1) == 2  # no recorder: plain call
+    rec = Recorder(mode="trace")
+    with rec.activate():
+        assert f(2) == 3
+    assert calls == [1, 2]
+    (ev,) = rec.events()
+    assert ev["name"] == "fancy" and ev["cat"] == "kernel"
+
+
+def test_metrics_mode_keeps_no_events():
+    rec = Recorder(mode="metrics")
+    with rec.activate():
+        with obs_trace.span("x"):
+            pass
+    assert rec.events() == []
+    assert rec.registry.snapshot()["counters"]["span.x.count"] == 1
+
+
+def test_use_is_thread_local():
+    """contextvars do not propagate into spawned threads: a worker sees
+    no recorder unless it re-enters with use(rec) explicitly — exactly
+    what the sharded engine does."""
+    rec = Recorder(mode="trace")
+    seen = []
+
+    def worker(expect):
+        seen.append((expect, obs_trace.get_recorder()))
+        if expect:
+            with obs_trace.span("w"):
+                pass
+
+    with rec.activate():
+        t = threading.Thread(target=worker, args=(False,))
+        t.start()
+        t.join()
+
+        def rewrapped():
+            with obs_trace.use(rec):
+                worker(True)
+
+        t2 = threading.Thread(target=rewrapped)
+        t2.start()
+        t2.join()
+    assert seen[0] == (False, None)
+    assert seen[1] == (True, rec)
+    (ev,) = rec.events()
+    assert ev["name"] == "w" and ev["tid"] != threading.get_ident()
+
+
+def test_compile_events_from_fresh_jit():
+    jax = pytest.importorskip("jax")
+    rec = Recorder(mode="trace")
+    with rec.activate():
+        # a never-before-seen shape + closure forces a real cache miss
+        shape = (17, 13)
+        x = jax.numpy.ones(shape)
+        jax.jit(lambda a: (a * 3.5).sum() + shape[0]).__call__(x)
+    kinds = {e["name"] for e in rec.events() if e["cat"] == "compile"}
+    assert "compile:backend_compile" in kinds
+    snap = rec.registry.snapshot()
+    assert snap["counters"]["compile.events"] >= 1
+    assert snap["histograms"]["compile.s"]["count"] >= 1
+
+
+def test_recorder_begin_end_and_labels():
+    rec = Recorder(mode="trace")
+    rec.set_label("sweep", 3)
+    h = rec.begin("sweep", cat="sweep", attrs={"phase": "forward"})
+    with rec.activate(), obs_trace.span("stage_x"):
+        pass
+    rec.end(h)
+    rec.pop_label("sweep")
+    names = {e["name"]: e for e in rec.events()}
+    assert names["stage_x"]["args"]["sweep"] == 3
+    assert names["sweep"]["args"]["phase"] == "forward"
+    assert rec.stage_seconds(cats=("stage",)).keys() == {"stage_x"}
+
+
+# -- exporters -------------------------------------------------------------
+
+
+def test_jsonl_roundtrip_and_torn_tail(tmp_path):
+    rec = Recorder(mode="trace", trace_dir=str(tmp_path), name="t")
+    with rec.activate():
+        with obs_trace.span("a"):
+            pass
+        rec.instant("mark1")
+    rec.close()
+    events = read_jsonl(rec.jsonl_path)
+    assert [e["name"] for e in events] == ["a", "mark1"]
+    assert not validate_events(events)
+    # a crash-torn final line drops silently, keeping the prefix
+    with open(rec.jsonl_path, "a") as fh:
+        fh.write('{"name": "torn", "cat"')
+    assert [e["name"] for e in read_jsonl(rec.jsonl_path)] == ["a", "mark1"]
+    # the Chrome/Perfetto document was written at close
+    doc = json.load(open(rec.chrome_path))
+    assert doc["displayTimeUnit"] == "ms"
+    assert [e["name"] for e in doc["traceEvents"]] == ["a", "mark1"]
+
+
+def test_validate_events_catches_bad_shapes():
+    good = {
+        "name": "x", "cat": "stage", "ph": "X",
+        "ts": 1.0, "dur": 2.0, "pid": 1, "tid": 2, "args": {},
+    }
+    assert not validate_events([good])
+    bad = [
+        {**good, "ph": "B"},
+        {**good, "dur": -1},
+        {**good, "name": ""},
+        {**good, "args": {"x": object()}},
+        "not-a-dict",
+    ]
+    errors = validate_events(bad)
+    assert len(errors) == 5
+
+
+def test_chrome_trace_metadata():
+    doc = chrome_trace([], metadata={"run": "r1"})
+    assert doc["metadata"] == {"run": "r1"}
+    json.dumps(doc)
+
+
+# -- json_safe -------------------------------------------------------------
+
+
+def test_json_safe_preserves_containers_and_unwraps_leaves():
+    jnp = pytest.importorskip("jax.numpy")
+    rec = {
+        "step": ("insert", 0, 1),  # tuple MUST stay a tuple
+        "n": np.int64(4),
+        "score": jnp.float32(1.5),
+        "arr": np.arange(3),
+        "nested": [{"f": np.float64(0.25)}],
+        "flag": True,
+        "none": None,
+    }
+    out = json_safe(rec)
+    assert out["step"] == ("insert", 0, 1) and isinstance(out["step"], tuple)
+    assert out["n"] == 4 and type(out["n"]) is int
+    assert out["score"] == 1.5 and type(out["score"]) is float
+    assert out["arr"] == [0, 1, 2]
+    assert type(out["nested"][0]["f"]) is float
+    json.dumps(out)  # every leaf is stdlib-serializable
+
+
+def test_json_safe_raises_with_key_path():
+    with pytest.raises(TypeError, match=r"record\.deep\[0\]\.bad"):
+        json_safe({"deep": [{"bad": object()}]})
+    with pytest.raises(TypeError, match="non-string key"):
+        json_safe({1: "x"})
+
+
+# -- options plumbing ------------------------------------------------------
+
+
+def test_engine_options_obs_validation():
+    assert OBS_MODES == ("off", "metrics", "trace")
+    assert EngineOptions().obs == "off"
+    EngineOptions(obs="trace", trace_dir="/tmp/x")
+    with pytest.raises(ValueError, match="obs"):
+        EngineOptions(obs="loud")
+    with pytest.raises(ValueError, match="trace_dir"):
+        EngineOptions(obs="metrics", trace_dir="/tmp/x")
+
+
+def test_serving_options_obs_validation():
+    from repro.serving import ServingOptions
+
+    ServingOptions(obs="trace", trace_dir="/tmp/x")
+    with pytest.raises(ValueError, match="obs"):
+        ServingOptions(obs="verbose")
+    with pytest.raises(ValueError, match="trace_dir"):
+        ServingOptions(trace_dir="/tmp/x")
+
+
+# -- discovery integration -------------------------------------------------
+
+_SMALL = dict(n=150, d=4)
+
+
+@pytest.fixture(scope="module")
+def small_runs(tmp_path_factory):
+    """One off-run + one traced run over the same cell, shared by the
+    integration tests below (discovery is the expensive part)."""
+    data = _chain_data(**_SMALL)
+    td = tmp_path_factory.mktemp("traces")
+    off = causal_discover(data, options=EngineOptions())
+    sess = DiscoverySession(
+        data, options=EngineOptions(obs="trace", trace_dir=str(td))
+    )
+    traced = sess.run()
+    return off, traced, sess, td
+
+
+def test_obs_off_and_trace_bitwise_identical(small_runs):
+    off, traced, _, _ = small_runs
+    np.testing.assert_array_equal(off.cpdag, traced.cpdag)
+    assert off.score == traced.score
+    assert off.trace == traced.trace
+
+
+def test_trace_run_span_hierarchy(small_runs):
+    _, _, sess, _ = small_runs
+    evs = sess.recorder.events()
+    assert not validate_events(evs)
+    cats = {e["cat"] for e in evs}
+    assert {"session", "sweep", "stage"} <= cats
+    names = {e["name"] for e in evs}
+    # the engine stages and the GES stages all showed up
+    assert {"enumerate", "select", "features", "gram", "zcores", "fold"} <= names
+    # exactly one session span, containing every sweep span
+    sessions = [e for e in evs if e["cat"] == "session"]
+    assert len(sessions) == 1
+    s0, s1 = sessions[0]["ts"], sessions[0]["ts"] + sessions[0]["dur"]
+    for sweep in (e for e in evs if e["cat"] == "sweep"):
+        assert s0 <= sweep["ts"] and sweep["ts"] + sweep["dur"] <= s1 + 1e-3
+        assert "sweep" in sweep["args"]
+    # every event carries the session label
+    assert all(e["args"].get("session") for e in evs)
+
+
+def test_trace_files_written_and_loadable(small_runs):
+    _, _, sess, _ = small_runs
+    rec = sess.recorder
+    jsonl = read_jsonl(rec.jsonl_path)
+    assert len(jsonl) == len(rec.events())
+    doc = json.load(open(rec.chrome_path))
+    assert len(doc["traceEvents"]) == len(jsonl)
+
+
+def test_session_metric_sources_and_stage_split(small_runs):
+    _, _, sess, _ = small_runs
+    snap = sess.recorder.registry.snapshot()
+    assert snap["sources"]["gram_cache"]["hits"] >= 0
+    assert snap["sources"]["feature_bank"]["builds"] > 0
+    assert "degradations" in snap["sources"]
+    assert snap["counters"]["span.fold.count"] >= 1
+    split = engine_stage_split(sess.recorder)
+    assert split["path"] in ("device", "host")
+    assert split["gram_s"] >= 0 and split["fold_s"] >= 0
+
+
+def test_sweep_log_is_json_safe(small_runs):
+    """The end_sweep seam converts every record: no numpy/jax scalars or
+    arrays survive into RunState payloads, and step tuples stay tuples."""
+    _, _, sess, _ = small_runs
+
+    def walk(o):
+        if isinstance(o, dict):
+            for v in o.values():
+                walk(v)
+        elif isinstance(o, (list, tuple)):
+            for v in o:
+                walk(v)
+        else:
+            assert o is None or type(o) in (bool, int, float, str), repr(o)
+
+    assert sess.sweep_log
+    for recd in sess.sweep_log:
+        walk(recd)
+    applied = [r for r in sess.sweep_log if r.get("step")]
+    assert applied and all(type(r["step"]) is tuple for r in applied)
+
+
+def test_sweep_log_keys_unchanged_by_obs(small_runs):
+    """Observability must not add/remove sweep_log keys (back-compat)."""
+    off, _, sess, _ = small_runs
+    data = _chain_data(**_SMALL)
+    plain = DiscoverySession(data, options=EngineOptions())
+    plain.run()
+    assert len(plain.sweep_log) == len(sess.sweep_log)
+    for a, b in zip(plain.sweep_log, sess.sweep_log):
+        assert set(a.keys()) == set(b.keys())
+
+
+def test_end_sweep_rejects_unsafe_record():
+    data = _chain_data(**_SMALL)
+    sess = DiscoverySession(data, options=EngineOptions())
+    sess.begin_sweep("t")
+    sess.score_frontier([(0, ())])
+    sess._active["poison"] = object()
+    with pytest.raises(TypeError, match="poison"):
+        sess.end_sweep(None)
+
+
+# -- multi-tenant aggregation ---------------------------------------------
+
+
+def test_session_manager_telemetry_and_tenant_isolation(tmp_path):
+    from repro.serving import (
+        DiscoveryRequest,
+        ServingOptions,
+        SessionManager,
+    )
+
+    data = _chain_data(**_SMALL)
+    mgr = SessionManager(
+        data,
+        serving=ServingOptions(
+            max_concurrent=3, obs="trace", trace_dir=str(tmp_path)
+        ),
+    )
+    with mgr:
+        tickets = [
+            mgr.submit(DiscoveryRequest(tenant=f"t{i}", seed=i))
+            for i in range(3)
+        ]
+        mid_sources = None
+        results = []
+        for t in tickets:
+            results.append(t.result())
+            if mid_sources is None:
+                mid_sources = set(mgr.metrics_snapshot()["sources"])
+        tel = mgr.telemetry()
+    # the full pre-existing schema, bitwise keys
+    assert set(tel.keys()) == {
+        "stats", "degradations", "constraint", "latency",
+        "feature_bank", "gram_caches", "shared_mb",
+    }
+    assert set(tel["stats"]) == {
+        "admitted", "shed", "completed", "deadline_exceeded",
+        "cancelled", "failed",
+    }
+    assert tel["stats"]["admitted"] == 3 and tel["stats"]["completed"] == 3
+    assert set(tel["degradations"]) == {
+        "shrink_device", "evict_to_host", "reroute_backend",
+    }
+    assert {"sessions", "ci_tests", "cached", "pruned_pairs", "skeleton_s"} \
+        <= set(tel["constraint"])
+    assert tel["latency"]["n"] == 3
+
+    # shared registry: serving sources always on; per-tenant sources are
+    # prefix-namespaced while live and detached after completion
+    snap = mgr.metrics_snapshot()
+    assert {"serving.stats", "serving.degradations", "serving.constraint",
+            "serving.feature_bank", "serving.latency"} <= set(snap["sources"])
+    assert snap["sources"]["serving.stats"]["completed"] == 3
+    tenant_sources = {
+        s for s in (mid_sources or ()) if s.startswith("tenant.")
+    }
+    for s in tenant_sources:  # any live-captured tenant source was namespaced
+        assert s.split(".")[1] in {"t0", "t1", "t2"}
+    assert not any(s.startswith("tenant.") for s in snap["sources"])
+    assert mgr.prometheus().startswith("# TYPE")
+
+    # per-tenant trace files: every event in a tenant's file carries that
+    # tenant's label and no other tenant's
+    jsonls = [f for f in tmp_path.iterdir() if f.suffix == ".jsonl"]
+    assert len(jsonls) == 3
+    seen_tenants = set()
+    for f in jsonls:
+        evs = read_jsonl(str(f))
+        assert evs and not validate_events(evs)
+        tenants = {e["args"]["tenant"] for e in evs}
+        assert len(tenants) == 1, f"cross-tenant leak in {f.name}"
+        seen_tenants |= tenants
+    assert seen_tenants == {"t0", "t1", "t2"}
+
+
+# -- overhead smoke --------------------------------------------------------
+
+
+def test_disabled_span_is_cheap():
+    """Loose smoke bound: a disabled span must cost well under 10us (the
+    real budget is ns — benchmarks/obs_overhead.py measures it)."""
+    iters = 20_000
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        with obs_trace.span("x"):
+            pass
+    per = (time.perf_counter() - t0) / iters
+    assert per < 10e-6, f"disabled span cost {per*1e9:.0f}ns"
